@@ -1,0 +1,35 @@
+"""Paper §4.4 / Appendix C analogue: the same concurrent workload on a
+second platform (their MacBook M1 Pro → our TPU v5p pod, 64 chips) —
+different compute/bandwidth balance shifts which apps suffer under
+contention, mirroring the paper's observation that scheduling behaviour is
+platform-dependent."""
+from __future__ import annotations
+
+from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
+from repro.core.apps import make_app
+from repro.core.orchestrator import Orchestrator
+from repro.roofline.hw import TPU_V5E, TPU_V5P
+
+
+def run() -> list[str]:
+    rows = []
+    apps = [make_app(t) for t in STANDARD_APPS]
+    nreq = {a.name: NUM_REQUESTS[a.name] for a in apps}
+    for chip, chips in ((TPU_V5E, 256), (TPU_V5P, 64)):
+        for strategy in ("greedy", "slo_aware"):
+            orch = Orchestrator(total_chips=chips, strategy=strategy,
+                                chip=chip)
+            res = orch.run_concurrent(apps, nreq)
+            for a in apps:
+                rep = res.reports[a.name]
+                rows.append(row(
+                    f"platform_{chip.name}_{strategy}_{a.name}",
+                    (rep.latency_stats().get("mean", 0.0)) * 1e6,
+                    f"slo={rep.attainment:.3f};"
+                    f"util={res.utilization():.3f};"
+                    f"energy_kj={res.energy_j() / 1e3:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

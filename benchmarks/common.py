@@ -1,0 +1,28 @@
+"""Shared helpers for the per-figure benchmarks. Every benchmark emits
+``name,us_per_call,derived`` CSV rows (harness contract)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (real execution)."""
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+STANDARD_APPS = ("chatbot", "imagegen", "live_captions")
+NUM_REQUESTS = {"chatbot": 10, "imagegen": 10, "live_captions": 50,
+                "deep_research": 1}

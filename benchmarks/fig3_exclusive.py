@@ -1,0 +1,31 @@
+"""Paper Fig. 3: per-app latency (normalized to SLO) and SLO attainment when
+running EXCLUSIVELY on the accelerator (upper bound) vs the host CPU (lower
+bound). Pod analogue: full 256-chip mesh vs host fallback."""
+from __future__ import annotations
+
+from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
+from repro.core.apps import make_app
+from repro.core.orchestrator import Orchestrator
+from repro.roofline.hw import HOST_CPU, TPU_V5E
+
+
+def run() -> list[str]:
+    rows = []
+    for device, chip in (("gpu", TPU_V5E), ("cpu", HOST_CPU)):
+        for app_type in STANDARD_APPS:
+            app = make_app(app_type)
+            orch = Orchestrator(total_chips=256, chip=chip)
+            n = NUM_REQUESTS[app_type] if device == "gpu" else max(
+                NUM_REQUESTS[app_type] // 2, 3)
+            res = orch.run_exclusive(app, n)
+            rep = res.reports[app.name]
+            st = rep.latency_stats()
+            rows.append(row(
+                f"fig3_exclusive_{device}_{app_type}",
+                st.get("mean", 0.0) * 1e6,
+                f"slo={rep.attainment:.3f};norm_lat={rep.normalized_latency():.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

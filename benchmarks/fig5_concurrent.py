@@ -1,0 +1,31 @@
+"""Paper Fig. 5: concurrent execution under greedy allocation vs static
+partitioning — plus this repo's SLO-aware scheduler (paper §5.2's ask)."""
+from __future__ import annotations
+
+from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
+from repro.core.apps import make_app
+from repro.core.orchestrator import Orchestrator
+
+
+def run() -> list[str]:
+    rows = []
+    apps = [make_app(t) for t in STANDARD_APPS]
+    nreq = {a.name: NUM_REQUESTS[a.name] for a in apps}
+    for strategy in ("greedy", "static", "slo_aware"):
+        orch = Orchestrator(total_chips=256, strategy=strategy)
+        res = orch.run_concurrent(apps, nreq)
+        for a in apps:
+            rep = res.reports[a.name]
+            st = rep.latency_stats()
+            rows.append(row(
+                f"fig5_{strategy}_{a.name}",
+                st.get("mean", 0.0) * 1e6,
+                f"slo={rep.attainment:.3f};"
+                f"norm_lat={rep.normalized_latency():.3f};"
+                f"util={res.utilization():.3f};"
+                f"makespan_s={res.makespan_s:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,30 @@
+"""Paper Fig. 6 / §4.2.1: static model sharing via one inference server —
+Chatbot vs Chatbot-KVCache-CPU while DeepResearch shares the model."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core.orchestrator import Orchestrator
+from repro.core.sharing import shared_chatbot_apps
+
+
+def run() -> list[str]:
+    rows = []
+    for kv in ("device", "host"):
+        apps = shared_chatbot_apps(kv)
+        nreq = {a.name: (10 if "Chatbot" in a.name else 1) for a in apps}
+        orch = Orchestrator(total_chips=256, strategy="greedy")
+        res = orch.run_concurrent(apps, nreq)
+        chat = next(a.name for a in apps if "Chatbot" in a.name)
+        rep = res.reports[chat]
+        st = rep.latency_stats()
+        rows.append(row(
+            f"fig6_sharing_kv_{kv}_{chat}",
+            st.get("mean", 0.0) * 1e6,
+            f"slo={rep.attainment:.3f};"
+            f"norm_lat={rep.normalized_latency():.3f};"
+            f"util={res.utilization():.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

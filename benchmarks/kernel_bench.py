@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks (paper §4.1's per-kernel analysis analogue):
+real wall time of the jnp lowering on CPU + analytic v5e roofline time for
+the Pallas kernel's tile schedule."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.kernels import ref
+from repro.models.attention import decode_attention_jnp, flash_attention_jnp
+from repro.roofline.hw import TPU_V5E
+
+
+def _flash_case(b, h, kv, s, d):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    return q, k, v
+
+
+def _v5e_attention_time(b, h, s, d, causal=True) -> float:
+    flops = 4.0 * b * h * s * s * d * (0.5 if causal else 1.0)
+    byts = 2.0 * b * s * (3 * h * d + h * d)
+    return max(flops / TPU_V5E.peak_flops_bf16, byts / TPU_V5E.hbm_bandwidth)
+
+
+def run() -> list[str]:
+    rows = []
+    for (b, h, kv, s, d) in [(1, 4, 2, 256, 64), (1, 8, 4, 512, 64)]:
+        q, k, v = _flash_case(b, h, kv, s, d)
+        fn = jax.jit(lambda q, k, v: flash_attention_jnp(
+            q, k, v, causal=True, q_block=128, kv_block=128))
+        us = time_call(lambda: jax.block_until_ready(fn(q, k, v)))
+        v5e = _v5e_attention_time(b, h, s, d) * 1e6
+        rows.append(row(f"kernel_flash_b{b}h{h}s{s}d{d}", us,
+                        f"v5e_roofline_us={v5e:.2f}"))
+    # decode
+    ks = jax.random.split(jax.random.key(1), 3)
+    b, h, kv, s, d = 4, 8, 4, 2048, 64
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, s, kv, d))
+    vc = jax.random.normal(ks[2], (b, s, kv, d))
+    lengths = jnp.full((b,), s)
+    fn = jax.jit(decode_attention_jnp)
+    us = time_call(lambda: jax.block_until_ready(fn(q, kc, vc, lengths)))
+    kv_bytes = 2.0 * b * s * kv * d * 2
+    rows.append(row(f"kernel_decode_b{b}s{s}", us,
+                    f"v5e_kv_read_us={kv_bytes / TPU_V5E.hbm_bandwidth * 1e6:.2f}"))
+    # ssd chunk
+    m, qq, hh, p, n = 4, 64, 16, 32, 64
+    kk = jax.random.split(jax.random.key(2), 4)
+    x = jax.random.normal(kk[0], (m, qq, hh, p))
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (m, qq, hh)))
+    cum = jnp.cumsum(-0.1 * dt, axis=1)
+    b_ = jax.random.normal(kk[2], (m, qq, n))
+    c_ = jax.random.normal(kk[3], (m, qq, n))
+    fn = jax.jit(jax.vmap(ref.ssd_chunk_ref))
+    us = time_call(lambda: jax.block_until_ready(fn(x, dt, cum, b_, c_)))
+    flops = 2.0 * m * qq * qq * (hh * p + n)
+    rows.append(row(f"kernel_ssd_m{m}q{qq}h{hh}", us,
+                    f"v5e_roofline_us={flops / TPU_V5E.peak_flops_bf16 * 1e6:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,69 @@
+"""The §Roofline table: per (arch × shape × mesh) terms from the dry-run
+results (results/dryrun_all.jsonl). Emits one CSV row per cell; also
+renders the markdown table EXPERIMENTS.md embeds."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "results", "dryrun_all.jsonl"))
+
+
+def load() -> list[dict]:
+    if not os.path.exists(RESULTS):
+        return []
+    out = []
+    with open(RESULTS) as f:
+        for line in f:
+            try:
+                out.append(json.loads(line))
+            except Exception:
+                pass
+    return out
+
+
+def run() -> list[str]:
+    rows = []
+    for d in load():
+        tag = f"roofline_{d['arch']}_{d['shape']}_{'multi' if 'pod' in d.get('mesh', '') else 'single'}"
+        if d.get("status") == "ok":
+            rows.append(row(tag, d["step_time_s"] * 1e6,
+                            f"dominant={d['dominant']};"
+                            f"compute_s={d['compute_s']:.4g};"
+                            f"memory_s={d['memory_s']:.4g};"
+                            f"collective_s={d['collective_s']:.4g};"
+                            f"mfu={d['roofline_fraction']:.4f};"
+                            f"useful={d['useful_flops_ratio']:.3f}"))
+        elif d.get("status") == "skipped":
+            rows.append(row(tag, 0.0, "skipped=" + d.get("reason", "")[:40]))
+    if not rows:
+        rows.append(row("roofline_table_missing", 0.0,
+                        f"run launch.dryrun --all first ({RESULTS})"))
+    return rows
+
+
+def markdown_table() -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | step s | MFU | useful |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in load():
+        mesh = "multi" if "pod" in d.get("mesh", "") else "single"
+        if d.get("status") == "ok":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | {mesh} "
+                f"| {d['compute_s']:.4f} | {d['memory_s']:.4f} "
+                f"| {d['collective_s']:.4f} | **{d['dominant']}** "
+                f"| {d['step_time_s']:.4f} | {d['roofline_fraction']:.3f} "
+                f"| {d['useful_flops_ratio']:.2f} |")
+        elif d.get("status") == "skipped":
+            lines.append(f"| {d['arch']} | {d['shape']} | {mesh} "
+                         f"| — | — | — | skipped | — | — | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,41 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
+                            fig4_utilization, fig5_concurrent, fig6_sharing,
+                            fig7_workflow, kernel_bench, roofline_table)
+    suites = [
+        ("fig3_exclusive", fig3_exclusive.run),
+        ("fig4_utilization", fig4_utilization.run),
+        ("fig5_concurrent", fig5_concurrent.run),
+        ("fig6_sharing", fig6_sharing.run),
+        ("fig7_workflow", fig7_workflow.run),
+        ("appendix_platforms", appendix_platforms.run),
+        ("engine_bench", engine_bench.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name}_FAILED,0.0,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""The paper's digital content-creation workflow (Fig. 7 / Fig. 23) on a
+simulated v5e pod: brainstorm -> (analysis background) -> outline ->
+cover art + captions. Compares greedy vs partitioning vs SLO-aware.
+
+    PYTHONPATH=src python examples/content_creation_workflow.py
+"""
+from repro.core.orchestrator import Orchestrator
+from repro.core.report import render_report
+from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+
+
+def main():
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    e2e = {}
+    for strategy in ("greedy", "static", "slo_aware"):
+        result = Orchestrator(total_chips=256,
+                              strategy=strategy).run_workflow(wf)
+        e2e[strategy] = result.e2e_s
+        print(render_report(result.sim,
+                            title=f"content-creation [{strategy}] "
+                                  f"e2e={result.e2e_s:.1f}s"))
+        print()
+    saving = (e2e["static"] - e2e["greedy"]) / e2e["static"]
+    print(f"greedy vs partitioned e2e saving: {saving * 100:.0f}% "
+          f"(paper reports 45%)")
+    print(f"slo_aware e2e: {e2e['slo_aware']:.1f}s — fairness without the "
+          f"workflow slowdown")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: define a two-app workload in the paper's YAML schema, run it
+under all three orchestration strategies on a simulated v5e pod, and print
+the ConsumerBench report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.orchestrator import Orchestrator
+from repro.core.report import render_report
+from repro.core.workflow import parse_workflow
+
+YAML = """
+Chat (chatbot):
+  num_requests: 10
+  device: gpu
+  type: chatbot
+  slo: [1s, 0.25s]
+
+Captions (live_captions):
+  num_requests: 40
+  device: gpu
+  type: live_captions
+  slo: 2s
+
+Art (imagegen):
+  num_requests: 8
+  device: gpu
+  type: imagegen
+  slo: 1s
+
+workflows:
+  chat:
+    uses: Chat (chatbot)
+  captions:
+    uses: Captions (live_captions)
+  art:
+    uses: Art (imagegen)
+"""
+
+
+def main():
+    wf = parse_workflow(YAML)
+    for strategy in ("greedy", "static", "slo_aware"):
+        orch = Orchestrator(total_chips=256, strategy=strategy)
+        result = orch.run_workflow(wf)
+        print(render_report(result.sim,
+                            title=f"quickstart [{strategy}] "
+                                  f"e2e={result.e2e_s:.1f}s"))
+        print()
+
+
+if __name__ == "__main__":
+    main()

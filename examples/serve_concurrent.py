@@ -1,0 +1,48 @@
+"""End-to-end serving driver (the paper's kind of system): REAL JAX
+execution of a small model behind the continuous-batching engine, with a
+short-prompt interactive stream and a long-prompt background stream sharing
+the engine — showing chunked prefill bounding the decode stall.
+
+    PYTHONPATH=src python examples/serve_concurrent.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.registry import CONFIGS
+from repro.models.factory import build_model
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request, chat_trace
+
+
+def main():
+    cfg = dataclasses.replace(CONFIGS["tinyllama-1.1b"].reduced(),
+                              num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    def cost(kind, tokens):  # virtual v5e-pod step costs
+        return {"prefill": 0.004 * tokens, "decode": 0.002}[kind]
+
+    for policy in ("fcfs", "chunked", "slo_aware"):
+        eng = InferenceEngine(model, max_slots=4, max_seq=192, policy=policy,
+                              prefill_chunk=8, step_cost_s=cost)
+        eng.load_params(params)
+        for r in chat_trace(4, cfg.vocab_size, mean_prompt=8, max_new=12):
+            eng.submit(r)
+        eng.submit(Request(99, rng.integers(0, cfg.vocab_size, 120)
+                           .astype(np.int32), 4, arrival_s=0.0))
+        done = eng.run()
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        print(f"[{policy:9s}] served={len(done)} "
+              f"decode_tokens={eng.stats.decode_tokens} "
+              f"mean_ttft={np.mean(ttfts):.3f}s "
+              f"max_decode_gap={eng.stats.max_decode_gap_s:.3f}s")
+    print("fcfs shows the long prompt stalling decodes; chunked/slo_aware "
+          "bound the gap (paper §4.2 -> §5.2).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fault-tolerant training driver: real training of a reduced model with
+checkpointing and injected node failures — the loss trajectory is identical
+to an uninterrupted run (restart-exact data + durable checkpoints).
+
+    PYTHONPATH=src python examples/train_resilient.py
+"""
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        result = train.main([
+            "--arch", "tinyllama-1.1b", "--reduced",
+            "--steps", "30", "--batch", "4", "--seq", "64",
+            "--ckpt-dir", d, "--ckpt-every", "8",
+            "--fail-at", "12", "--fail-at", "21",
+        ])
+        print(f"survived {result.restarts} injected failures; "
+              f"final loss {result.losses[-1]:.4f} "
+              f"(from {result.losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

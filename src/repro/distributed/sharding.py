@@ -1,0 +1,270 @@
+"""Partition-spec rules for every architecture family.
+
+Conventions (see DESIGN.md §5):
+  - mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi.
+  - TP on "model": attention heads where divisible, else hidden dim; MLP d_ff;
+    expert axis for MoE; padded vocab for embedding/lm-head.
+  - DP on ("pod","data"): batch dims of activations.
+  - ZeRO-1: optimizer state / master params get the largest remaining dim
+    sharded over the dp axes.
+  - FSDP (kimi-k2 class): parameters themselves additionally sharded over dp.
+
+All per-layer parameters carry a leading stacked-layer axis which is never
+sharded. Rules are name+shape driven so the same engine covers every family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# archs whose parameters must be fully sharded (params don't fit TP-only)
+FSDP_ARCHS = {"kimi-k2-1t-a32b"}
+# archs that train with Adafactor instead of AdamW (optimizer-state budget)
+ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b"}
+
+
+def mesh_axes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    ax = mesh_axes(mesh)
+    return tuple(a for a in ("pod", "data") if a in ax)
+
+
+def dp_size(mesh: Mesh) -> int:
+    ax = mesh_axes(mesh)
+    return int(np.prod([ax[a] for a in dp_axes(mesh)]))
+
+
+def _maybe(dim: int, axis: str | tuple, axes: dict[str, int]):
+    """Return axis if dim is divisible by its mesh extent, else None."""
+    if isinstance(axis, tuple):
+        size = int(np.prod([axes[a] for a in axis]))
+    else:
+        size = axes.get(axis, 1)
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def _spec_for_leaf(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+                   axes: dict[str, int], fsdp: bool, dp: tuple[str, ...]):
+    """Primary TP spec for one parameter leaf (layer-stack dims excluded)."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    mp = "model"
+
+    def spec(*entries):
+        # pad with leading Nones for any stacked-layer dims we stripped
+        return P(*entries)
+
+    if name == "embedding":
+        return spec(_maybe(shape[0], mp, axes), None)
+    if name == "lm_head":
+        return spec(None, _maybe(shape[1], mp, axes))
+    if name == "frontend":
+        return spec(None, _maybe(shape[1], mp, axes))
+    if name in ("wq", "wk", "wv"):           # (D, H|KV, hd)
+        h_ax = _maybe(shape[1], mp, axes)
+        if h_ax is not None:
+            return spec(None, h_ax, None)
+        return spec(_maybe(shape[0], mp, axes), None, None)
+    if name == "wo":                          # (H, hd, D)
+        h_ax = _maybe(shape[0], mp, axes)
+        if h_ax is not None:
+            return spec(h_ax, None, None)
+        return spec(None, None, _maybe(shape[2], mp, axes))
+    if name in ("w_gate", "w_up"):
+        if nd == 3 and shape[0] == cfg.num_experts:   # (E, D, F)
+            return spec(_maybe(shape[0], mp, axes), None, None)
+        return spec(None, _maybe(shape[-1], mp, axes))  # (D, F)
+    if name == "w_down":
+        if nd == 3 and shape[0] == cfg.num_experts:   # (E, F, D)
+            return spec(_maybe(shape[0], mp, axes), None, None)
+        return spec(_maybe(shape[0], mp, axes), None)   # (F, D)
+    if name == "router":                      # (D, E)
+        return spec(None, _maybe(shape[1], mp, axes))
+    if name in ("w_z", "w_x", "w_dt"):        # (D, d_in|H)
+        return spec(None, _maybe(shape[1], mp, axes))
+    if name in ("w_B", "w_C"):                # (D, N) — replicated (ngroups=1)
+        return spec(None, None)
+    if name == "conv_x":                      # (W, d_in)
+        return spec(None, _maybe(shape[1], mp, axes))
+    if name in ("conv_B", "conv_C"):
+        return spec(None, None)
+    if name == "w_out":                       # (d_in, D)
+        return spec(_maybe(shape[0], mp, axes), None)
+    if name in ("A_log", "dt_bias", "D_skip"):
+        return spec(_maybe(shape[0], mp, axes))
+    if name == "gate_norm":
+        return spec(_maybe(shape[0], mp, axes))
+    # norms / scalars: replicate
+    return P(*([None] * nd))
+
+
+def _add_dp_shard(spec: P, shape: tuple[int, ...], dp: tuple[str, ...],
+                  axes: dict[str, int]):
+    """Shard the largest still-unsharded dim over the dp axes (ZeRO/FSDP)."""
+    if not dp:
+        return spec
+    dpsize = int(np.prod([axes[a] for a in dp]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = None, 0
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % dpsize == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        # try just "data"
+        dsize = axes.get("data", 1)
+        for i, (e, d) in enumerate(zip(entries, shape)):
+            if e is None and d % dsize == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is None:
+            return P(*entries)
+        entries[best] = "data"
+        return P(*entries)
+    entries[best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def _walk(tree, prefix=""):
+    """(path, leaf) pairs with dict-key paths."""
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(_walk(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+_STACK_KEYS = ("layers", "blocks", "encoder", "decoder")
+
+
+def _stack_depth(path: str, cfg: ModelConfig) -> int:
+    """Leading stacked dims to skip: 1 inside layer stacks, +1 for hybrid
+    intra-block ssm-state stacks (handled in cache specs, not params)."""
+    head = path.split("/")[0]
+    return 1 if head in _STACK_KEYS else 0
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, abstract_params,
+                 *, fsdp: bool | None = None):
+    """PartitionSpec pytree matching the parameter pytree."""
+    axes = mesh_axes(mesh)
+    dp = dp_axes(mesh)
+    if fsdp is None:
+        fsdp = cfg.name in FSDP_ARCHS
+
+    def one(path_entries, leaf):
+        path = "/".join(str(getattr(p, "key", p)) for p in path_entries)
+        skip = _stack_depth(path, cfg)
+        shape = tuple(leaf.shape)[skip:]
+        spec = _spec_for_leaf(path, shape, cfg, axes, fsdp, dp)
+        if fsdp:
+            spec = _add_dp_shard(spec, shape, dp, axes)
+        return P(*([None] * skip + list(spec)))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def optstate_extra_pspecs(cfg: ModelConfig, mesh: Mesh, abstract_params):
+    """ZeRO-1 specs: param spec + largest free dim over dp (for m/v/master)."""
+    axes = mesh_axes(mesh)
+    dp = dp_axes(mesh)
+    base = param_pspecs(cfg, mesh, abstract_params)
+
+    def one(spec, leaf):
+        shape = tuple(leaf.shape)
+        return _add_dp_shard(spec, shape, dp, axes)
+
+    return jax.tree.map(one, base, abstract_params)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+    axes = mesh_axes(mesh)
+    dpn = int(np.prod([axes[a] for a in dp])) if dp else 1
+    bspec = (dp if len(dp) > 1 else dp[0]) if dp and shape.global_batch % dpn == 0 else None
+    specs = {"tokens": P(bspec, None)}
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        specs["frames"] = P(bspec, None, None)
+    if shape.is_decode:
+        specs = {"tokens": P(bspec, None), "lengths": P(bspec)}
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 abstract_cache):
+    """KV/SSM cache specs. Batch on dp; long-context (B==1): sequence over
+    (data, model) — flash-decode sequence parallelism."""
+    axes = mesh_axes(mesh)
+    dp = dp_axes(mesh)
+    dpn = int(np.prod([axes[a] for a in dp])) if dp else 1
+    b = shape.global_batch
+    batch_ok = dp and b % dpn == 0
+    bspec = (dp if len(dp) > 1 else dp[0]) if batch_ok else None
+    long_ctx = not batch_ok  # B=1 long_500k: shard sequence instead
+
+    def one(path_entries, leaf):
+        path = "/".join(str(getattr(p, "key", p)) for p in path_entries)
+        name = path.split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, KV, hd)
+            if long_ctx:
+                seq_ax = ("data", "model")
+                if leaf.shape[2] % (axes.get("data", 1) * axes.get("model", 1)):
+                    seq_ax = "model" if leaf.shape[2] % axes.get("model", 1) == 0 else None
+                return P(None, None, seq_ax, None, None)
+            kv_ax = _maybe(leaf.shape[3], "model", axes)
+            if kv_ax is None:
+                # KV heads don't divide the model axis: flash-decode style
+                # sequence sharding over "model" instead.
+                seq_ax = _maybe(leaf.shape[2], "model", axes)
+                return P(None, bspec, seq_ax, None, None)
+            return P(None, bspec, None, kv_ax, None)
+        if name in ("k_scale", "v_scale"):
+            # (L, B, S, KV) — mirror the k/v rules without the head dim
+            if long_ctx:
+                seq_ax = ("data", "model")
+                if leaf.shape[2] % (axes.get("data", 1) * axes.get("model", 1)):
+                    seq_ax = "model" if leaf.shape[2] % axes.get("model", 1) == 0 else None
+                return P(None, None, seq_ax, None)
+            kv_ax = _maybe(leaf.shape[3], "model", axes)
+            if kv_ax is None:
+                seq_ax = _maybe(leaf.shape[2], "model", axes)
+                return P(None, bspec, seq_ax, None)
+            return P(None, bspec, None, kv_ax)
+        if name == "ssm":
+            # (L[, sub], B, H, P, N)
+            lead = nd - 4
+            h_ax = _maybe(leaf.shape[lead + 1], "model", axes)
+            return P(*([None] * lead), bspec, h_ax, None, None)
+        if name in ("conv_x",):
+            lead = nd - 3
+            c_ax = _maybe(leaf.shape[lead + 2], "model", axes)
+            return P(*([None] * lead), bspec, None, c_ax)
+        if name in ("conv_B", "conv_C"):
+            lead = nd - 3
+            return P(*([None] * lead), bspec, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def logits_pspec(cfg: ModelConfig, mesh: Mesh, decode: bool,
+                 global_batch: int | None = None):
+    axes = mesh_axes(mesh)
+    dp = dp_axes(mesh)
+    v_ax = _maybe(cfg.padded_vocab, "model", axes)
+    dpn = int(np.prod([axes[a] for a in dp])) if dp else 1
+    batch_ok = dp and (global_batch is None or global_batch % dpn == 0)
+    bspec = (dp if len(dp) > 1 else dp[0]) if batch_ok else None
+    if decode:
+        return P(bspec, v_ax)
+    return P(bspec, None, v_ax)

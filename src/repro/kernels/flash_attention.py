@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (prefill): causal, GQA, online softmax.
+
+TPU adaptation of the FlashAttention blocking: grid (B, H, nQ, nKV) with the
+KV index innermost; VMEM scratch carries (m, l, acc) across KV steps for one
+Q tile. Tiles are MXU-aligned (block sizes multiples of 128 where the shape
+allows). Causal skipping: KV tiles strictly above the diagonal are predicated
+off with ``pl.when`` — the TPU analogue of not launching those CTAs.
+
+Layout: q (B, H, S, d); k/v (B, KV, S, d) head-major (ops.py adapts from the
+model's (B, S, H, d)).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, q_block: int, kv_block: int,
+            num_kv_steps: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (kj * kv_block <= qi * q_block + q_block - 1) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (qb, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (kb, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (qb, kb)
+        if causal:
+            qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = kj * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)            # (qb, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # (qb, kb)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (kb, d)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == num_kv_steps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d) -> (B, H, Sq, d)."""
+    b, h, sq, d = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    g = h // kv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    nq, nk = sq // q_block, skv // kv_block
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, q_block=q_block,
+        kv_block=kv_block, num_kv_steps=nk)
+
+    grid = (b, h, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,83 @@
+"""Backend dispatch for the Pallas kernels.
+
+``REPRO_KERNEL_BACKEND`` ∈ {auto, jnp, pallas, interpret}:
+  auto       — pallas on TPU, jnp elsewhere (this container: jnp)
+  jnp        — pure-jnp lowering (the pjit/dry-run path)
+  pallas     — pl.pallas_call compiled for the device
+  interpret  — pl.pallas_call(interpret=True): kernel body executed in python
+               on CPU; used by the correctness test suite.
+
+Model-facing layouts are (B, S, H, d); kernels are head-major — wrappers
+transpose at the boundary (a no-op inside a jit once XLA picks layouts).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _pallas_decode
+from repro.kernels.flash_attention import flash_attention as _pallas_flash
+from repro.kernels.rmsnorm import rmsnorm as _pallas_rmsnorm
+from repro.kernels.ssd_scan import ssd_chunk_scan as _pallas_ssd
+
+_BACKEND = [None]  # lazily resolved; settable for tests
+
+
+def set_backend(name: str | None):
+    _BACKEND[0] = name
+
+
+def backend() -> str:
+    b = _BACKEND[0] or os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return b
+
+
+def attention_prefill(q, k, v, *, causal: bool = True):
+    """q: (B, S, H, d); k/v: (B, S, KV, d) -> (B, S, H, d)."""
+    be = backend()
+    if be == "jnp":
+        from repro.models.attention import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, causal=causal)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    o = _pallas_flash(qT, kT, vT, causal=causal, interpret=(be == "interpret"))
+    return o.transpose(0, 2, 1, 3)
+
+
+def attention_decode(q, k_cache, v_cache, lengths):
+    """q: (B, 1, H, d); caches: (B, S, KV, d); lengths (B,) -> (B, 1, H, d)."""
+    be = backend()
+    if be == "jnp":
+        from repro.models.attention import decode_attention_jnp
+        return decode_attention_jnp(q, k_cache, v_cache, lengths)
+    kT = k_cache.transpose(0, 2, 1, 3)
+    vT = v_cache.transpose(0, 2, 1, 3)
+    o = _pallas_decode(q[:, 0], kT, vT, jnp.asarray(lengths, jnp.int32),
+                       interpret=(be == "interpret"))
+    return o[:, None]
+
+
+def ssd_intra_chunk(x, dt, cum, b_, c_):
+    """x: (M, Q, H, P); dt/cum: (M, Q, H); b_/c_: (M, Q, N)."""
+    be = backend()
+    if be == "jnp":
+        y, st = jax.vmap(ref.ssd_chunk_ref)(x, dt, cum, b_, c_)
+        return y, st
+    return _pallas_ssd(x, dt, cum, b_, c_, interpret=(be == "interpret"))
+
+
+def fused_rmsnorm(x, w, eps: float = 1e-5):
+    """x: (..., D); w: (D,)."""
+    be = backend()
+    if be == "jnp":
+        return ref.rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    o = _pallas_rmsnorm(x2, w, eps=eps, interpret=(be == "interpret"))
+    return o.reshape(shape)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Layouts here match the KERNEL-facing layouts (head-major), not the model's
+(B, S, H, d) — ops.py adapts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d). GQA H = G*KV. -> (B, H, Sq, d)."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[2]), bool))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, lengths: Array) -> Array:
+    """q: (B, H, d); k/v: (B, KV, S, d); lengths: (B,). -> (B, H, d)."""
+    b, h, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_chunk_ref(x: Array, dt: Array, cum: Array, b_: Array, c_: Array) -> tuple[Array, Array]:
+    """Intra-chunk SSD + end-of-chunk state, one chunk.
+
+    x: (Q, H, P); dt: (Q, H); cum: (Q, H) cumulative dt*A within chunk;
+    b_/c_: (Q, N) (ngroups=1). Returns (y_intra (Q,H,P), state (H,P,N)).
+    """
+    q, h, p = x.shape
+    xf = x.astype(jnp.float32)
+    seg = cum[:, None, :] - cum[None, :, :]                  # (Q, Q, H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("qn,kn->qk", c_.astype(jnp.float32), b_.astype(jnp.float32))
+    scores = cb[:, :, None] * decay * dt[None, :, :]          # (Q, Q, H)
+    y = jnp.einsum("qkh,khp->qhp", scores, xf)
+    wgt = jnp.exp(cum[-1][None] - cum) * dt                   # (Q, H)
+    state = jnp.einsum("qn,qh,qhp->hpn", b_.astype(jnp.float32), wgt, xf)
+    return y.astype(x.dtype), state
+
+
+def rmsnorm_ref(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,35 @@
+"""Pallas TPU fused RMSNorm (row tiles in VMEM, f32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_block", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, row_block: int = 256,
+            interpret: bool = False):
+    """x: (R, D) rows; w: (D,)."""
+    r, d = x.shape
+    rb = min(row_block, r)
+    assert r % rb == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(r // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, w)

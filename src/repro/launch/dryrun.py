@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any jax import (jax locks device count on first init).
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+# ShapeDtypeStruct inputs — no allocation — and extract the roofline terms.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+#       --shape train_4k [--multi-pod] [--out results.json]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+# (no ``from __future__``: the os.environ lines above must stay first.)
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import CONFIGS, get_config
+from repro.configs.shapes import SHAPES, cell_is_applicable, get_shape
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh, mesh_name
+from repro.models.factory import build_model
+from repro.roofline import analysis
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import (make_prefill_step, make_serve_step,
+                                       make_train_step)
+
+
+def _opt_cfg(cfg: ModelConfig) -> OptimizerConfig:
+    name = "adafactor" if cfg.name in sharding.ADAFACTOR_ARCHS else "adamw"
+    return OptimizerConfig(name=name)
+
+
+def lower_cell(cfg, shape, mesh, *, remat: str = "full", donate: bool = True):
+    """Lower + compile one cell. Returns (lowered, compiled, model_flops)."""
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    if isinstance(shape, str):
+        shape = get_shape(shape)
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    model = build_model(cfg)
+    specs = model.input_specs(shape)
+    batch_ps = sharding.batch_pspecs(cfg, shape, mesh)
+    aparams = model.abstract_params(jnp.bfloat16)
+    params_ps = sharding.param_pspecs(cfg, mesh, aparams)
+    model_flops = analysis.model_flops_for(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            init_state, train_step = make_train_step(
+                model, _opt_cfg(cfg), remat=remat)
+            aopt = jax.eval_shape(lambda p: _abstract_opt(cfg, p), aparams)
+            opt_ps = jax.tree.map(
+                lambda _: None, aopt)  # placeholder, replaced below
+            opt_ps = _opt_pspecs(cfg, mesh, aparams, aopt)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(params_ps, opt_ps, batch_ps),
+                out_shardings=(params_ps, opt_ps, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(aparams, aopt, specs)
+        elif shape.kind == "prefill":
+            prefill_step = make_prefill_step(model, max_seq=shape.seq_len)
+            # the int8-KV hint applies to decode caches only; prefill emits
+            # the bf16 cache the (separate) decode engine re-quantizes
+            from repro.distributed import hints as _h
+            with _h.hints(kv_cache_dtype="bfloat16"):
+                acache = model.abstract_cache(shape)
+            cache_ps = sharding.cache_pspecs(cfg, shape, mesh, acache)
+            logits_ps = sharding.logits_pspec(cfg, mesh, decode=False, global_batch=shape.global_batch)
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(params_ps, batch_ps),
+                             out_shardings=(logits_ps, cache_ps))
+            lowered = jitted.lower(aparams, specs)
+        else:  # decode / long_decode
+            serve_step = make_serve_step(model)
+            acache = model.abstract_cache(shape)
+            cache_ps = sharding.cache_pspecs(cfg, shape, mesh, acache)
+            logits_ps = sharding.logits_pspec(cfg, mesh, decode=True, global_batch=shape.global_batch)
+            jitted = jax.jit(serve_step,
+                             in_shardings=(params_ps, cache_ps,
+                                           batch_ps["tokens"], batch_ps["lengths"]),
+                             out_shardings=(logits_ps, cache_ps),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(aparams, acache, specs["tokens"],
+                                   specs["lengths"])
+        compiled = lowered.compile()
+    return lowered, compiled, model_flops
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _abstract_opt(cfg: ModelConfig, params):
+    from repro.training.optimizer import (adafactor_init, adamw_init)
+    if cfg.name in sharding.ADAFACTOR_ARCHS:
+        return adafactor_init(params)
+    return adamw_init(params)
+
+
+def _opt_pspecs(cfg: ModelConfig, mesh, aparams, aopt):
+    """Mirror param specs onto optimizer state with ZeRO-1 extra sharding."""
+    from jax.sharding import PartitionSpec as P
+    extra = sharding.optstate_extra_pspecs(cfg, mesh, aparams)
+    pspec_by_path = {}
+
+    def assign(subtree_name, subtree):
+        if subtree_name in ("m", "v", "master"):
+            return extra
+        if subtree_name in ("v_row", "v_col"):
+            # factored stats: drop the last (or keep compatible) dims
+            def shrink(spec, pleaf, sleaf):
+                entries = list(spec)[:len(sleaf.shape)]
+                # validate divisibility on the stat shape
+                axes = sharding.mesh_axes(mesh)
+                out = []
+                for e, d in zip(entries, sleaf.shape):
+                    size = 1
+                    if e is not None:
+                        names = e if isinstance(e, tuple) else (e,)
+                        import numpy as np
+                        size = int(np.prod([axes[a] for a in names]))
+                    out.append(e if (e is not None and d % size == 0) else None)
+                return P(*out)
+            return jax.tree.map(shrink, extra, aparams, subtree)
+        return jax.tree.map(lambda _: P(), subtree)
+
+    return {k: assign(k, v) for k, v in aopt.items()}
+
+
+def _cell_costs(compiled) -> tuple[float, float, float, dict]:
+    """(flops, bytes, collective_bytes, collective_detail) per device."""
+    flops, byts = analysis.cost_analysis_terms(compiled)
+    coll = analysis.collective_stats(compiled.as_text())
+    return flops, byts, coll["total_bytes"], coll
+
+
+def _depth_variants(cfg: ModelConfig):
+    """Shallow variants for per-layer cost extrapolation.
+
+    Returns [(variant_cfg, coefficient), ...] such that
+    total_cost = sum(coefficient_i * cost(variant_i)). XLA cost_analysis
+    counts a while-loop body once, so the full scanned module undercounts by
+    ~L×; these variants are lowered with unrolled scans instead.
+    """
+    import dataclasses as dc
+    if cfg.family == "encdec":
+        e, d = cfg.num_encoder_layers, cfg.num_decoder_layers
+        v = lambda ne, nd: dc.replace(cfg, num_encoder_layers=ne,
+                                      num_decoder_layers=nd, num_layers=ne)
+        # cost = base + E*enc + D*dec; c11 = base+enc+dec
+        return [(v(1, 1), 1.0 - (e - 1) - (d - 1)), (v(2, 1), float(e - 1)),
+                (v(1, 2), float(d - 1))]
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+        n = cfg.num_layers // p
+        v = lambda k: dc.replace(cfg, num_layers=k * p)
+    else:
+        n = cfg.num_layers
+        v = lambda k: dc.replace(cfg, num_layers=k)
+    # cost = base + n*layer; c1 = base+layer, c2 = base+2*layer
+    return [(v(1), 1.0 - (n - 1)), (v(2), float(n - 1))]
+
+
+def extrapolated_costs(cfg: ModelConfig, shape, mesh, remat: str):
+    """Per-device (flops, bytes, collective_bytes, detail), depth-corrected."""
+    from repro.models import layers as mlayers
+    tot_f = tot_b = tot_c = 0.0
+    detail: dict = {}
+    with mlayers.unrolled_scans():
+        for vcfg, coef in _depth_variants(cfg):
+            _, compiled, _ = lower_cell(vcfg, shape, mesh, remat=remat,
+                                        donate=False)
+            f, b, c, det = _cell_costs(compiled)
+            tot_f += coef * f
+            tot_b += coef * b
+            tot_c += coef * c
+            for k, v in det.items():
+                if isinstance(v, dict):
+                    e = detail.setdefault(k, {"count": 0.0, "bytes": 0.0})
+                    e["count"] += coef * v["count"]
+                    e["bytes"] += coef * v["bytes"]
+            del compiled
+    detail["total_bytes"] = tot_c
+    return max(tot_f, 0.0), max(tot_b, 0.0), max(tot_c, 0.0), detail
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             remat: str = "full", full_artifact: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model_flops = analysis.model_flops_for(cfg, shape)
+
+    t0 = time.time()
+    mem_info: dict | str = {}
+    if full_artifact:
+        # 1) the deployable scanned artifact — proves sharding + memory fit
+        _, compiled, _ = lower_cell(cfg, shape, mesh, remat=remat)
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_info = repr(e)
+        del compiled
+    full_compile_s = time.time() - t0
+
+    # 2) cost extrapolation from unrolled shallow variants
+    t1 = time.time()
+    flops, byts, coll_bytes, detail = extrapolated_costs(cfg, shape, mesh,
+                                                         remat)
+    cost_compile_s = time.time() - t1
+
+    chip = analysis.DEFAULT_CHIP
+    res = analysis.RooflineResult(
+        arch=arch, shape=shape_name, mesh=mesh_name(mesh), chips=chips,
+        hlo_flops=flops * chips, hlo_bytes=byts * chips,
+        collective_bytes=coll_bytes * chips, model_flops=model_flops,
+        compute_s=flops / chip.peak_flops_bf16,
+        memory_s=byts / chip.hbm_bandwidth,
+        collective_s=coll_bytes / chip.ici_link_bandwidth,
+        collective_detail=detail,
+        notes=f"remat={remat} depth-extrapolated")
+    d = res.to_dict()
+    d["memory_analysis"] = mem_info
+    d["compile_s"] = full_compile_s
+    d["cost_compile_s"] = cost_compile_s
+    return d
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hint", action="append", default=[],
+                    help="hillclimb knob, e.g. --hint moe_impl=shardmap")
+    ap.add_argument("--autotune", action="store_true",
+                    help="apply the per-(arch×kind) best-known hints "
+                         "(distributed/autotune.py) instead of global flags")
+    args = ap.parse_args(argv)
+
+    from repro.distributed import hints as _hints
+    hint_tag = ""
+    for h in args.hint:
+        k, _, v = h.partition("=")
+        _hints.set_hint(k, v)
+        hint_tag += f";{k}={v}"
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in CONFIGS:
+            for shape in SHAPES:
+                for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+            cells.append((args.arch, args.shape, mp))
+
+    # resume: skip cells already recorded in the JSONL output
+    done: set[tuple[str, str, str]] = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    d = json.loads(line)
+                    done.add((d["arch"], d["shape"], d["mesh"]))
+                except Exception:
+                    pass
+
+    failures, n = [], 0
+    outf = open(args.out, "a") if args.out else None
+    for arch, shape, mp in cells:
+        mesh_key = ("2x16x16(pod,data,model)" if mp else "16x16(data,model)")
+        if (arch, shape, mesh_key) in done:
+            continue
+        tag = f"{arch} x {shape} x {'multi-pod' if mp else 'single-pod'}"
+        try:
+            if args.autotune:
+                from repro.distributed import autotune
+                from repro.distributed import hints as _h2
+                at_hints, at_remat = autotune.best_hints(
+                    get_config(arch), get_shape(shape).kind)
+                with _h2.hints(**at_hints):
+                    d = run_cell(arch, shape, multi_pod=mp, remat=at_remat)
+                d["hints"] = "autotune:" + ";".join(
+                    f"{k}={v}" for k, v in at_hints.items()) + f";remat={at_remat}"
+            else:
+                d = run_cell(arch, shape, multi_pod=mp, remat=args.remat)
+                if hint_tag:
+                    d["hints"] = hint_tag.strip(";")
+            d["status"] = "ok"
+            print(f"[dryrun] OK   {tag}: dominant={d['dominant']} "
+                  f"step={d['step_time_s']:.4f}s "
+                  f"MFU={d['roofline_fraction']:.3f} "
+                  f"compile={d['compile_s']:.0f}+{d['cost_compile_s']:.0f}s",
+                  flush=True)
+        except SkipCell as e:
+            d = {"arch": arch, "shape": shape, "mesh": mesh_key,
+                 "status": "skipped", "reason": str(e)}
+            print(f"[dryrun] SKIP {tag}: {e}", flush=True)
+        except Exception as e:
+            failures.append(tag)
+            d = {"arch": arch, "shape": shape, "mesh": mesh_key,
+                 "status": "error", "error": repr(e)}
+            print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+            traceback.print_exc()
+        n += 1
+        if outf:
+            outf.write(json.dumps(d) + "\n")
+            outf.flush()
+    if outf:
+        outf.close()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}", flush=True)
+        sys.exit(1)
+    print(f"[dryrun] all {n} cells done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

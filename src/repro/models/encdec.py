@@ -1,0 +1,188 @@
+"""Encoder-decoder backbone (seamless-m4t class).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed fbank-frame embeddings (B, Tf, d_model); a learned linear
+projection stands in for the real feature extractor. Encoder is
+bidirectional; decoder is causal with self- and cross-attention, and serves
+with a growing self-KV cache plus a static cross-KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+from repro.models.attention import (decode_attention_jnp, flash_attention_jnp,
+                                    naive_attention)
+
+Array = jax.Array
+
+FRAME_RATIO = 4  # target tokens per encoder frame (fbank subsampling stub)
+
+
+def frames_len(seq_len: int) -> int:
+    return max(8, seq_len // FRAME_RATIO)
+
+
+def init_enc_layer(key, cfg, dtype):
+    ks = layers.split_keys(key, ["attn", "ffn"])
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": transformer.init_attn(ks["attn"], cfg, dtype),
+        "ffn": layers.init_mlp(ks["ffn"], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_dec_layer(key, cfg, dtype):
+    ks = layers.split_keys(key, ["self", "cross", "ffn"])
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "lnx": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_attn": transformer.init_attn(ks["self"], cfg, dtype),
+        "cross_attn": transformer.init_attn(ks["cross"], cfg, dtype),
+        "ffn": layers.init_mlp(ks["ffn"], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = layers.split_keys(key, ["emb", "head", "enc", "dec", "front"])
+    ekeys = jax.random.split(ks["enc"], cfg.num_encoder_layers)
+    dkeys = jax.random.split(ks["dec"], cfg.num_decoder_layers)
+    return {
+        "frontend": layers.dense_init(ks["front"], (cfg.d_model, cfg.d_model),
+                                      dtype=dtype),
+        "embedding": layers.init_embedding(ks["emb"], cfg.padded_vocab,
+                                           cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(ekeys),
+        "decoder": jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(dkeys),
+        "ln_enc": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": layers.dense_init(ks["head"], (cfg.d_model, cfg.padded_vocab),
+                                     dtype=dtype),
+    }
+
+
+def encode(params: dict, frames: Array, cfg: ModelConfig, remat: str = "full"):
+    """frames: (B, Tf, D) precomputed embeddings (frontend stub)."""
+    x = jnp.einsum("btd,de->bte", frames, params["frontend"])
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        out, _ = transformer.attention_block(lp["attn"], h, cfg, positions,
+                                             causal=False)
+        x = x + out
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + layers.mlp(lp["ffn"], h2), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = layers.scan(body, x, params["encoder"])
+    return layers.rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _cross_kv(p: dict, enc_out: Array, cfg: ModelConfig):
+    k = jnp.einsum("btd,dke->btke", enc_out, p["wk"])
+    v = jnp.einsum("btd,dke->btke", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_attend(p: dict, x: Array, k: Array, v: Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if cfg.use_qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if x.shape[1] >= transformer.FLASH_MIN_SEQ and k.shape[1] >= 2048:
+        o = flash_attention_jnp(q, k, v, causal=False)
+    else:
+        o = naive_attention(q, k, v, causal=False)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def forward(params: dict, frames: Array, tokens: Array, cfg: ModelConfig, *,
+            remat: str = "full", return_cache: bool = False):
+    """Teacher-forced decode over ``tokens`` attending to encoded ``frames``."""
+    enc_out = encode(params, frames, cfg, remat)
+    x = layers.embed(params["embedding"], tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, lp):
+        x = carry
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        out, kv = transformer.attention_block(lp["self_attn"], h, cfg, positions)
+        x = x + out
+        hx = layers.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        ck, cv = _cross_kv(lp["cross_attn"], enc_out, cfg)
+        x = x + _cross_attend(lp["cross_attn"], hx, ck, cv, cfg)
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(lp["ffn"], h2)
+        return x, (kv, (ck, cv)) if return_cache else None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, ys = layers.scan(body, x, params["decoder"])
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    if return_cache:
+        (k, v), (ck, cv) = ys
+        return logits, jnp.zeros((), jnp.float32), \
+            {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ld = cfg.num_decoder_layers
+    tf = frames_len(max_seq)
+    return {
+        "k": jnp.zeros((ld, batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((ld, batch, max_seq, kv, hd), dtype),
+        "cross_k": jnp.zeros((ld, batch, tf, kv, hd), dtype),
+        "cross_v": jnp.zeros((ld, batch, tf, kv, hd), dtype),
+    }
+
+
+def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
+            max_seq: int):
+    logits, _, cache = forward(params, frames, tokens, cfg, remat="none",
+                               return_cache=True)
+    s = tokens.shape[1]
+    cache = {k: v.astype(jnp.bfloat16) for k, v in cache.items()}
+    if max_seq > s:
+        pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+        cache["k"] = jnp.pad(cache["k"], pad)
+        cache["v"] = jnp.pad(cache["v"], pad)
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
+                cfg: ModelConfig):
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, kc, vc, ck, cv = inp
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        out, (kc, vc) = transformer.attention_decode_block(
+            lp["self_attn"], h, cfg, kc, vc, lengths)
+        x = x + out
+        hx = layers.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", hx, lp["cross_attn"]["wq"])
+        if cfg.use_qk_norm:
+            q = layers.rmsnorm(q, lp["cross_attn"]["q_norm"], cfg.norm_eps)
+        tf = ck.shape[1]
+        o = decode_attention_jnp(q, ck, cv, jnp.full((x.shape[0],), tf))
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["cross_attn"]["wo"])
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(lp["ffn"], h2)
+        return x, (kc, vc)
+
+    x, (k, v) = layers.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits[:, 0], {"k": k, "v": v, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}

@@ -1,0 +1,142 @@
+"""Uniform model API over all families: build once, use everywhere
+(training loop, serving engine, dry-run, benchmarks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, layers, mamba_lm, transformer
+
+Array = jax.Array
+Params = Any
+Cache = Any
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, key, dtype=jnp.float32) -> Params:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.init_params(key, self.cfg, dtype)
+        if f == "ssm":
+            return mamba_lm.init_params(key, self.cfg, dtype)
+        if f == "hybrid":
+            return hybrid.init_params(key, self.cfg, dtype)
+        if f == "encdec":
+            return encdec.init_params(key, self.cfg, dtype)
+        raise ValueError(f"unknown family {f}")
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        """ShapeDtypeStructs for every parameter — no allocation."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0), dtype))
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Params, batch: dict, *, remat: str = "full"):
+        """batch -> (logits, aux). Train/eval full-sequence pass."""
+        f = self.cfg.family
+        if f == "encdec":
+            return encdec.forward(params, batch["frames"], batch["tokens"],
+                                  self.cfg, remat=remat)
+        if f == "ssm":
+            return mamba_lm.forward(params, batch["tokens"], self.cfg, remat=remat)
+        if f == "hybrid":
+            return hybrid.forward(params, batch["tokens"], self.cfg, remat=remat)
+        return transformer.forward(params, batch["tokens"], self.cfg,
+                                   remat=remat, embeds=batch.get("embeds"))
+
+    def loss_fn(self, params: Params, batch: dict, *, remat: str = "full"):
+        """Next-token xent (+0.01·aux for MoE balance)."""
+        logits, aux = self.forward(params, batch, remat=remat)
+        tokens = batch["tokens"]
+        loss = layers.cross_entropy(logits[:, :-1], tokens[:, 1:],
+                                    batch.get("mask"))
+        return loss + 0.01 * aux
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Cache:
+        f = self.cfg.family
+        if f == "ssm":
+            return mamba_lm.init_cache(self.cfg, batch, max_seq, dtype)
+        if f == "hybrid":
+            return hybrid.init_cache(self.cfg, batch, max_seq, dtype)
+        if f == "encdec":
+            return encdec.init_cache(self.cfg, batch, max_seq, dtype)
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def prefill(self, params: Params, batch: dict, max_seq: int):
+        f = self.cfg.family
+        if f == "encdec":
+            return encdec.prefill(params, batch["frames"], batch["tokens"],
+                                  self.cfg, max_seq)
+        if f == "ssm":
+            return mamba_lm.prefill(params, batch["tokens"], self.cfg, max_seq)
+        if f == "hybrid":
+            return hybrid.prefill(params, batch["tokens"], self.cfg, max_seq)
+        return transformer.prefill(params, batch["tokens"], self.cfg, max_seq,
+                                   embeds=batch.get("embeds"))
+
+    def decode_step(self, params: Params, cache: Cache, tokens: Array,
+                    lengths: Array):
+        f = self.cfg.family
+        if f == "ssm":
+            return mamba_lm.decode_step(params, cache, tokens, lengths, self.cfg)
+        if f == "hybrid":
+            return hybrid.decode_step(params, cache, tokens, lengths, self.cfg)
+        if f == "encdec":
+            return encdec.decode_step(params, cache, tokens, lengths, self.cfg)
+        return transformer.decode_step(params, cache, tokens, lengths, self.cfg)
+
+    # ---------------------------------------------------------- dry-run IO
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": tok}
+            if self.cfg.family == "encdec":
+                tf = encdec.frames_len(s)
+                specs["frames"] = jax.ShapeDtypeStruct((b, tf, self.cfg.d_model),
+                                                       jnp.bfloat16)
+            return specs
+        # decode kinds: one new token + per-row valid lengths
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+
+    def abstract_cache(self, shape: ShapeConfig, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+    # ------------------------------------------------- cache slot slicing
+    # (serving engine: per-slot isolation for prefill / state restore)
+    def _cache_batch_axis(self, path_entries) -> int:
+        top = str(getattr(path_entries[0], "key", path_entries[0]))
+        if self.cfg.family == "hybrid" and top == "ssm":
+            return 2  # (nb, n_ssm, B, ...)
+        return 1      # (L, B, ...)
+
+    def slice_cache(self, cache: Cache, slot: int) -> Cache:
+        def one(path, leaf):
+            ax = self._cache_batch_axis(path)
+            return jax.lax.slice_in_dim(leaf, slot, slot + 1, axis=ax)
+        return jax.tree_util.tree_map_with_path(one, cache)
+
+    def set_cache_slice(self, cache: Cache, slot: int, piece: Cache) -> Cache:
+        def one(path, leaf, pleaf):
+            ax = self._cache_batch_axis(path)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, pleaf.astype(leaf.dtype), slot, axis=ax)
+        return jax.tree_util.tree_map_with_path(one, cache, piece)
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    return ModelBundle(cfg)

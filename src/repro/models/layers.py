@@ -1,0 +1,123 @@
+"""Shared neural-net building blocks (pure functional JAX, no framework)."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ------------------------------------------------------------------- scan
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+# so the dry-run lowers shallow UNROLLED variants for FLOP/byte/collective
+# extrapolation (see launch/dryrun.py). All layer/block scans in the model
+# zoo go through this helper so the dry-run can flip them to unrolled.
+
+_SCAN_UNROLL = [False]
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    prev = _SCAN_UNROLL[0]
+    _SCAN_UNROLL[0] = True
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL[0] = prev
+
+
+def scan(body, init, xs, **kw):
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if _SCAN_UNROLL[0] else 1, **kw)
+
+# --------------------------------------------------------------------- init
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ------------------------------------------------------------------- norms
+
+def rmsnorm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+# -------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, d); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv       # (..., S, d/2)
+    sin = jnp.sin(ang)[..., None, :]                  # (..., S, 1, d/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ks = split_keys(key, ["gate", "up", "down"])
+    return {
+        "w_gate": dense_init(ks["gate"], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks["up"], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks["down"], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    """SwiGLU feed-forward."""
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# --------------------------------------------------------------- embedding
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Array:
+    return dense_init(key, (vocab, d_model), dtype=dtype)
+
+
+def embed(table: Array, tokens: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: Array, table_or_head: Array, transpose: bool) -> Array:
+    """Logits. ``transpose``: table is (V, D) tied-embedding form."""
+    if transpose:
+        return jnp.einsum("...d,vd->...v", x, table_or_head)
+    return jnp.einsum("...d,dv->...v", x, table_or_head)
+
+
+# ----------------------------------------------------------- cross entropy
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Mean token-level xent; numerically stable; vocab-sharding friendly
+    (all reductions over the vocab axis lower to all-reduce under pjit)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    label_logit = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,92 @@
+"""Mamba2 LM (family=ssm): attention-free stack of SSD blocks.
+
+Layer = x + SSD(rmsnorm(x)); no separate FFN (d_ff=0 per the assigned spec).
+Decode carries an O(1) state per layer, so long-context decode cost is
+independent of context length — the reason ``long_500k`` applies here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, ssm
+
+Array = jax.Array
+
+
+def init_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "ssm": ssm.init_ssm(key, cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = layers.split_keys(key, ["emb", "head", "layers"])
+    lkeys = jax.random.split(ks["layers"], cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(lkeys)
+    p = {
+        "embedding": layers.init_embedding(ks["emb"], cfg.padded_vocab,
+                                           cfg.d_model, dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks["head"],
+                                         (cfg.d_model, cfg.padded_vocab), dtype=dtype)
+    return p
+
+
+def _unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        return layers.unembed(x, params["embedding"], transpose=True)
+    return layers.unembed(x, params["lm_head"], transpose=False)
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, *,
+            remat: str = "full", return_state: bool = False):
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        out, state = ssm.ssd_forward(lp["ssm"], h, cfg)
+        return x + out, state if return_state else None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, states = layers.scan(body, x, params["layers"])
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    if return_state:
+        return logits, jnp.zeros((), jnp.float32), states
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0,
+               dtype=jnp.bfloat16) -> dict:
+    one = ssm.init_ssm_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int = 0):
+    logits, _, states = forward(params, tokens, cfg, remat="none",
+                                return_state=True)
+    return logits, states
+
+
+def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
+                cfg: ModelConfig):
+    """tokens: (B,1). lengths unused (state summarizes the whole prefix)."""
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, st = inp
+        h = layers.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        out, st = ssm.ssm_decode_step(lp["ssm"], h, st, cfg)
+        return x + out, st
+
+    x, new_states = layers.scan(body, x, (params["layers"], cache))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _unembed(params, x, cfg)[:, 0], new_states

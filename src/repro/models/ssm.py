@@ -1,0 +1,196 @@
+"""Mamba2 SSD (state-space duality) layer: chunked train/prefill form and the
+O(1) recurrent decode step.
+
+Chunked SSD (Dao & Gu 2024): within a chunk of length Q the output is a
+masked quadratic form (the "attention-like" dual); across chunks a linear
+recurrence carries the (H, P, N) state. Train/prefill FLOPs are
+O(T·Q·H·(N+P)); decode is a single state update — which is why the
+``long_500k`` cell is applicable to SSM/hybrid archs only.
+
+The intra-chunk quadratic piece has a Pallas kernel counterpart in
+``repro.kernels.ssd_scan`` with the identical blocking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_num_heads
+    w = cfg.ssm_conv_width
+    ks = layers.split_keys(key, ["z", "x", "B", "C", "dt", "conv_x", "conv_B",
+                                 "conv_C", "out", "A", "D"])
+    return {
+        "w_z": layers.dense_init(ks["z"], (d, d_in), dtype=dtype),
+        "w_x": layers.dense_init(ks["x"], (d, d_in), dtype=dtype),
+        "w_B": layers.dense_init(ks["B"], (d, n), dtype=dtype),
+        "w_C": layers.dense_init(ks["C"], (d, n), dtype=dtype),
+        "w_dt": layers.dense_init(ks["dt"], (d, h), dtype=dtype),
+        "conv_x": layers.dense_init(ks["conv_x"], (w, d_in), scale=0.5, dtype=dtype),
+        "conv_B": layers.dense_init(ks["conv_B"], (w, n), scale=0.5, dtype=dtype),
+        "conv_C": layers.dense_init(ks["conv_C"], (w, n), scale=0.5, dtype=dtype),
+        "w_out": layers.dense_init(ks["out"], (d_in, d), dtype=dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). Returns (y, new_state)
+    where state is the trailing (B, W-1, C) inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _project(params: dict, x: Array, cfg: ModelConfig):
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xc = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    b_ = jnp.einsum("bsd,dn->bsn", x, params["w_B"])
+    c_ = jnp.einsum("bsd,dn->bsn", x, params["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    return z, xc, b_, c_, dt
+
+
+def ssd_forward(params: dict, x: Array, cfg: ModelConfig,
+                init_state: dict | None = None):
+    """Full-sequence SSD. x: (B, S, D) -> (y, final_state).
+
+    ``init_state``: {"ssm": (B,H,P,N), "conv_x": (B,W-1,d_in), ...} or None.
+    """
+    b, s, d = x.shape
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    h = cfg.ssm_num_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+
+    z, xc, b_, c_, dt = _project(params, x, cfg)
+    st = init_state or {}
+    xc, conv_x = _causal_conv(xc, params["conv_x"], st.get("conv_x"))
+    b_, conv_b = _causal_conv(b_, params["conv_B"], st.get("conv_B"))
+    c_, conv_c = _causal_conv(c_, params["conv_C"], st.get("conv_C"))
+    xc = jax.nn.silu(xc)
+    b_ = jax.nn.silu(b_)
+    c_ = jax.nn.silu(c_)
+
+    a = -jnp.exp(params["A_log"])                                   # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    # chunk
+    xh = xc.reshape(b, nc, q, h, p).astype(jnp.float32)
+    bc = b_.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = c_.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    da = dtc * a[None, None, None]                                   # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                                     # (B,nc,Q,H)
+
+    # ---- intra-chunk quadratic (the part the Pallas ssd kernel computes)
+    from repro.kernels import ops as kops
+    if kops.backend() != "jnp":
+        y_flat, st_flat = kops.ssd_intra_chunk(
+            xh.reshape(b * nc, q, h, p), dtc.reshape(b * nc, q, h),
+            cum.reshape(b * nc, q, h), bc.reshape(b * nc, q, n),
+            cc.reshape(b * nc, q, n))
+        y_intra = y_flat.reshape(b, nc, q, h, p).astype(jnp.float32)
+        states = st_flat.reshape(b, nc, h, p, n).astype(jnp.float32)
+    else:
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)                   # (B,nc,Q,Q)
+        scores = cb[..., None] * decay * dtc[:, :, None, :, :]       # (B,nc,Q,Q,H)
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xh)
+        states = None
+
+    # ---- chunk states and inter-chunk recurrence
+    last = cum[:, :, -1:, :]                                         # (B,nc,1,H)
+    chunk_decay = jnp.exp(last[:, :, 0])                             # (B,nc,H)
+    if states is None:
+        wgt = jnp.exp(last - cum) * dtc                              # (B,nc,Q,H)
+        states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bc, wgt, xh)   # (B,nc,H,P,N)
+
+    s0 = st.get("ssm")
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def scan_body(carry, inp):
+        st_c, dec_c = inp                       # (B,H,P,N), (B,H)
+        prev = carry
+        new = dec_c[:, :, None, None] * prev + st_c
+        return new, prev
+
+    final_state, prev_states = layers.scan(
+        scan_body, s0,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                         # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + params["D_skip"][None, None, :, None] * xh.reshape(b, s, h, p)
+
+    # gated RMSNorm then output projection
+    y = y.reshape(b, s, h * p).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    state = {"ssm": final_state.astype(jnp.float32), "conv_x": conv_x,
+             "conv_B": conv_b, "conv_C": conv_c}
+    return out, state
+
+
+def ssm_decode_step(params: dict, x: Array, state: dict, cfg: ModelConfig):
+    """Single-token recurrent step. x: (B, 1, D) -> (y, new_state)."""
+    b = x.shape[0]
+    h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, xc, b_, c_, dt = _project(params, x, cfg)
+    xc, conv_x = _causal_conv(xc, params["conv_x"], state["conv_x"])
+    b_, conv_b = _causal_conv(b_, params["conv_B"], state["conv_B"])
+    c_, conv_c = _causal_conv(c_, params["conv_C"], state["conv_C"])
+    xc = jax.nn.silu(xc)[:, 0]                                       # (B,d_in)
+    b_ = jax.nn.silu(b_)[:, 0].astype(jnp.float32)                   # (B,N)
+    c_ = jax.nn.silu(c_)[:, 0].astype(jnp.float32)
+
+    a = -jnp.exp(params["A_log"])
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    dec = jnp.exp(dt1 * a[None])                                     # (B,H)
+    xh = xc.reshape(b, h, p).astype(jnp.float32)
+    s_prev = state["ssm"].astype(jnp.float32)                        # (B,H,P,N)
+    s_new = dec[:, :, None, None] * s_prev + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh, b_)
+    y = jnp.einsum("bhpn,bn->bhp", s_new, c_)
+    y = y + params["D_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, h * p).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssm": s_new, "conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.ssm_conv_width
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, cfg.ssm_d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, n), dtype),
+    }

@@ -1,0 +1,316 @@
+"""Decoder-only transformer LM (dense / moe / vlm families).
+
+Parameters are a nested dict with all per-layer leaves stacked on a leading
+layer axis; the forward pass is a single ``lax.scan`` over layers with a
+configurable remat policy, so the lowered HLO stays compact at any depth
+(61-layer kimi-k2 lowers to the same module size as 22-layer tinyllama).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe
+from repro.models.attention import (decode_attention_jnp, flash_attention_jnp,
+                                    naive_attention)
+
+Array = jax.Array
+FLASH_MIN_SEQ = 2048
+
+
+# ----------------------------------------------------------------- params
+
+def init_attn(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = layers.split_keys(key, ["q", "k", "v", "o"])
+    p = {
+        "wq": layers.dense_init(ks["q"], (d, h, hd), dtype=dtype),
+        "wk": layers.dense_init(ks["k"], (d, kv, hd), dtype=dtype),
+        "wv": layers.dense_init(ks["v"], (d, kv, hd), dtype=dtype),
+        "wo": layers.dense_init(ks["o"], (h, hd, d), dtype=dtype),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = layers.split_keys(key, ["attn", "ffn"])
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": init_attn(ks["attn"], cfg, dtype),
+    }
+    if cfg.is_moe:
+        p["ffn"] = moe.init_moe(ks["ffn"], cfg, dtype)
+    else:
+        p["ffn"] = layers.init_mlp(ks["ffn"], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = layers.split_keys(key, ["emb", "head", "layers"])
+    lkeys = jax.random.split(ks["layers"], cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg, dtype))(lkeys)
+    params = {
+        "embedding": layers.init_embedding(ks["emb"], cfg.padded_vocab,
+                                           cfg.d_model, dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            ks["head"], (cfg.d_model, cfg.padded_vocab), dtype=dtype)
+    return params
+
+
+# ----------------------------------------------------------------- pieces
+
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if cfg.use_qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p: dict, x: Array, cfg: ModelConfig, positions: Array,
+                    causal: bool = True):
+    """Full-sequence attention. Returns (out, (k, v)) for cache capture."""
+    from repro.kernels import ops
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    from repro.distributed import hints
+    if hints.get("attn_impl") == "repeat_kv" and cfg.num_kv_heads < cfg.num_heads:
+        g = cfg.num_heads // cfg.num_kv_heads
+        k_r = jnp.repeat(k, g, axis=2)
+        v_r = jnp.repeat(v, g, axis=2)
+        if x.shape[1] >= FLASH_MIN_SEQ:
+            o = flash_attention_jnp(q, k_r, v_r, causal=causal)
+        else:
+            o = naive_attention(q, k_r, v_r, causal=causal)
+        out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+        return out, (k, v)
+    if hints.get("attn_kv_replicated"):
+        # GQA blocking stays model-local: gather the (small) k/v heads ONCE
+        # per layer instead of per-q-block reshard gathers (hillclimb).
+        from jax.sharding import PartitionSpec as P
+        try:
+            dp = tuple(a for a in ("pod", "data")
+                       if a in jax.sharding.get_abstract_mesh().axis_names)
+            bspec = (dp if len(dp) > 1 else dp[0]) if dp else None
+            k = jax.lax.with_sharding_constraint(k, P(bspec, None, None, None))
+            v = jax.lax.with_sharding_constraint(v, P(bspec, None, None, None))
+            h_ax = "model" if cfg.num_heads % 16 == 0 else None
+            q = jax.lax.with_sharding_constraint(q, P(bspec, None, h_ax, None))
+        except Exception:
+            pass
+    if ops.backend() != "jnp":
+        o = ops.attention_prefill(q, k, v, causal=causal)
+    elif x.shape[1] >= FLASH_MIN_SEQ:
+        o = flash_attention_jnp(q, k, v, causal=causal)
+    else:
+        o = naive_attention(q, k, v, causal=causal)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def _quantize_kv(t: Array) -> tuple[Array, Array]:
+    """t: (B, KV, hd) -> (int8 values, per-(B,KV) scale)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_decode_block(p: dict, x: Array, cfg: ModelConfig,
+                           k_cache: Array, v_cache: Array, lengths: Array,
+                           k_scale: Array | None = None,
+                           v_scale: Array | None = None):
+    """One-token attention against a cache.
+
+    x: (B,1,D); caches: (B,S,KV,hd) bf16 — or int8 with per-(B,S,KV) scales
+    (hillclimb hint ``kv_cache_dtype=int8``: halves decode cache traffic).
+    Writes the new k/v at position ``lengths``, attends over ``lengths+1``.
+    """
+    positions = lengths[:, None]  # (B,1) absolute position of the new token
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    b = x.shape[0]
+    bidx = jnp.arange(b)
+    int8_kv = k_scale is not None
+    if int8_kv:
+        kq, ks = _quantize_kv(k[:, 0])
+        vq, vs = _quantize_kv(v[:, 0])
+        k_cache = k_cache.at[bidx, lengths].set(kq, mode="drop")
+        v_cache = v_cache.at[bidx, lengths].set(vq, mode="drop")
+        k_scale = k_scale.at[bidx, lengths].set(ks, mode="drop")
+        v_scale = v_scale.at[bidx, lengths].set(vs, mode="drop")
+        k_full = (k_cache.astype(jnp.bfloat16) *
+                  k_scale[..., None].astype(jnp.bfloat16))
+        v_full = (v_cache.astype(jnp.bfloat16) *
+                  v_scale[..., None].astype(jnp.bfloat16))
+    else:
+        k_cache = k_cache.at[bidx, lengths].set(
+            k[:, 0].astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[bidx, lengths].set(
+            v[:, 0].astype(v_cache.dtype), mode="drop")
+        k_full, v_full = k_cache, v_cache
+    from repro.kernels import ops
+    if ops.backend() != "jnp":
+        o = ops.attention_decode(q, k_full, v_full, lengths + 1)
+    else:
+        o = decode_attention_jnp(q, k_full, v_full, lengths + 1)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    if int8_kv:
+        return out, (k_cache, v_cache, k_scale, v_scale)
+    return out, (k_cache, v_cache)
+
+
+def _ffn(p: dict, x: Array, cfg: ModelConfig):
+    if cfg.is_moe:
+        return moe.moe_dispatch(p, x, cfg)
+    return layers.mlp(p, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- forward
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full": save only layer inputs
+
+
+def _residual_constraint(x: Array) -> Array:
+    from repro.distributed import hints
+    if not hints.get("residual_replicated"):
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        bspec = (dp if len(dp) > 1 else dp[0]) if dp else None
+        return jax.lax.with_sharding_constraint(x, P(bspec, None, None))
+    except Exception:
+        return x
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, *,
+            remat: str = "full", embeds: Array | None = None,
+            causal: bool = True, return_cache: bool = False):
+    """tokens: (B, S) int32 (or ``embeds``: (B,S,D) for frontend stubs).
+
+    Returns (logits, aux_loss) or (logits, aux_loss, cache) with
+    cache = {"k": (L,B,S,KV,hd), "v": ...} when ``return_cache``.
+    """
+    x = embeds if embeds is not None else layers.embed(params["embedding"], tokens)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, kv = attention_block(lp["attn"], h, cfg, positions, causal)
+        x = _residual_constraint(x + attn_out)
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        ffn_out, a = _ffn(lp["ffn"], h2, cfg)
+        x = _residual_constraint(x + ffn_out)
+        return (x, aux + a), kv if return_cache else None
+
+    body = _remat(body, remat)
+    (x, aux), kv = layers.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                params["layers"])
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embedding"], transpose=True)
+    else:
+        logits = layers.unembed(x, params["lm_head"], transpose=False)
+    if return_cache:
+        cache = {"k": kv[0], "v": kv[1]}
+        return logits, aux, cache
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    from repro.distributed import hints
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    l = cfg.num_layers
+    if hints.get("kv_cache_dtype") == "int8":
+        return {
+            "k": jnp.zeros((l, batch, max_seq, kv, hd), jnp.int8),
+            "v": jnp.zeros((l, batch, max_seq, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((l, batch, max_seq, kv), jnp.bfloat16),
+            "v_scale": jnp.zeros((l, batch, max_seq, kv), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((l, batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((l, batch, max_seq, kv, hd), dtype),
+    }
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int,
+            embeds: Array | None = None):
+    """Run the full prompt; return (logits, cache padded to max_seq)."""
+    logits, _, cache = forward(params, tokens, cfg, remat="none",
+                               embeds=embeds, return_cache=True)
+    s = tokens.shape[1] if tokens is not None else embeds.shape[1]
+    if max_seq > s:
+        pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+        cache = {k: jnp.pad(v.astype(jnp.bfloat16), pad) for k, v in cache.items()}
+    else:
+        cache = {k: v.astype(jnp.bfloat16) for k, v in cache.items()}
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
+                cfg: ModelConfig):
+    """One decode step. tokens: (B,1); lengths: (B,).
+
+    Returns (logits (B, V), new_cache).
+    """
+    x = layers.embed(params["embedding"], tokens)
+    int8_kv = "k_scale" in cache
+
+    def body(x, inp):
+        if int8_kv:
+            lp, kc, vc, ks, vs = inp
+        else:
+            lp, kc, vc = inp
+            ks = vs = None
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, caches = attention_decode_block(lp["attn"], h, cfg,
+                                                  kc, vc, lengths, ks, vs)
+        x = x + attn_out
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        ffn_out, _ = _ffn(lp["ffn"], h2, cfg)
+        x = x + ffn_out
+        return x, caches
+
+    if int8_kv:
+        x, (k_new, v_new, ks_new, vs_new) = layers.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": k_new, "v": v_new, "k_scale": ks_new,
+                     "v_scale": vs_new}
+    else:
+        x, (k_new, v_new) = layers.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embedding"], transpose=True)
+    else:
+        logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits[:, 0], new_cache

@@ -1,0 +1,59 @@
+"""Target-hardware constants (TPU v5e) for the analytic roofline.
+
+The container runs on CPU; these constants describe the TARGET the dry-run
+artifacts are analysed against, per the assignment:
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s
+    hbm_bandwidth: float        # B/s
+    hbm_bytes: float            # capacity
+    ici_link_bandwidth: float   # B/s per link (injection per chip for roofline)
+    idle_power_w: float         # analytic power model
+    peak_power_w: float
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    idle_power_w=60.0,
+    peak_power_w=220.0,
+)
+
+# TPU v5p — the "other platform" for the paper's §4.4 cross-hardware
+# comparison (their Apple Silicon appendix): faster chip, different
+# compute/bandwidth balance.
+TPU_V5P = ChipSpec(
+    name="tpu-v5p",
+    peak_flops_bf16=459e12,
+    hbm_bandwidth=2765e9,
+    hbm_bytes=95 * 1024**3,
+    ici_link_bandwidth=100e9,
+    idle_power_w=120.0,
+    peak_power_w=470.0,
+)
+
+# Host (CPU fallback) — used by the ConsumerBench "run on CPU" lower bound,
+# mirroring the paper's GPU-vs-CPU experiment. Order-of-magnitude numbers for
+# a server-class host (as in the paper's Xeon Gold 6126 setup).
+HOST_CPU = ChipSpec(
+    name="host-cpu",
+    peak_flops_bf16=3e12,       # AMX/AVX-class aggregate
+    hbm_bandwidth=120e9,        # DDR
+    hbm_bytes=256 * 1024**3,
+    ici_link_bandwidth=0.0,
+    idle_power_w=80.0,
+    peak_power_w=165.0,
+)
+
+DEFAULT_CHIP = TPU_V5E

@@ -1,0 +1,211 @@
+"""Continuous-batching inference engine (real JAX execution).
+
+Slot-based KV cache: a fixed decode batch of ``max_slots`` rows; requests
+claim a slot, prefill fills the slot's cache rows, decode advances every
+active slot one token per step. Three scheduling policies mirror the
+orchestrator strategies:
+
+  fcfs       — whole-prompt prefill when a slot frees (greedy: a long prompt
+               stalls every active decode — the engine-level analogue of the
+               paper's LiveCaptions starvation, §4.2).
+  chunked    — chunked prefill: prompts advance ``prefill_chunk`` tokens per
+               engine step, interleaved with decode → bounded decode stall
+               (the fix the paper's §5.2 calls for; BEYOND-PAPER here).
+  slo_aware  — chunked + earliest-deadline-first admission.
+
+Slot isolation: prefill and state-restore operate on batch-1 cache slices
+(ModelBundle.slice_cache/set_cache_slice) so recurrent families (SSM/hybrid)
+never leak state across slots. Works on every ModelBundle family.
+
+Time can be virtual: pass ``step_cost_s(kind, tokens)`` and the engine
+advances its own clock — deterministic tests + pod-scale what-ifs on CPU.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.factory import ModelBundle
+from repro.serving.request import Request
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    max_decode_gap_s: float = 0.0
+
+
+class InferenceEngine:
+    def __init__(self, model: ModelBundle, *, max_slots: int = 4,
+                 max_seq: int = 256, policy: str = "fcfs",
+                 prefill_chunk: int = 16,
+                 step_cost_s: Optional[Callable[[str, int], float]] = None):
+        assert policy in ("fcfs", "chunked", "slo_aware")
+        self.model = model
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.policy = policy
+        self.prefill_chunk = prefill_chunk
+        self._step_cost = step_cost_s
+        self._use_vclock = step_cost_s is not None
+        self._vclock = 0.0
+        self._t0 = _time.monotonic()
+        self.stats = EngineStats()
+        self._last_decode_t: Optional[float] = None
+
+        self.params = None
+        self.cache = self.model.init_cache(max_slots, max_seq)
+        self._fresh_slot = self.model.init_cache(1, max_seq)
+        self.lengths = jnp.zeros((max_slots,), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * max_slots
+        self.waiting: list[Request] = []
+        self._partial: dict[int, int] = {}   # slot -> prompt tokens prefilled
+        self.done: list[Request] = []
+        # jitted fast paths (eager dispatch would compile thousands of tiny
+        # executables over a serving session and exhaust the CPU ORC JIT)
+        self._jit_decode = jax.jit(self.model.decode_step)
+        self._jit_slice = jax.jit(self.model.slice_cache,
+                                  static_argnums=(1,))
+        self._jit_set_slice = jax.jit(self.model.set_cache_slice,
+                                      static_argnums=(1,))
+
+    # ------------------------------------------------------------- setup
+    def load_params(self, params):
+        self.params = params
+
+    def now(self) -> float:
+        return self._vclock if self._use_vclock else _time.monotonic() - self._t0
+
+    def _advance(self, kind: str, tokens: int):
+        if self._use_vclock:
+            self._vclock += self._step_cost(kind, tokens)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit_order(self) -> list[Request]:
+        ready = [r for r in self.waiting if r.arrival_s <= self.now()]
+        if self.policy == "slo_aware":
+            ready.sort(key=lambda r: (r.deadline_s if r.deadline_s is not None
+                                      else float("inf"), r.arrival_s))
+        else:
+            ready.sort(key=lambda r: r.arrival_s)
+        return ready
+
+    # ----------------------------------------------------------- prefill
+    def _prefill_slot(self, slot: int, req: Request,
+                      chunk: Optional[int]) -> bool:
+        """Advance the slot's prefill by ``chunk`` tokens (None = all).
+        Token-stepping on a batch-1 cache slice: slot-isolated and exact for
+        every family (production prefill on TPU uses model.prefill)."""
+        done_tok = self._partial.get(slot, 0)
+        prompt = req.prompt
+        upto = len(prompt) if chunk is None else min(len(prompt),
+                                                     done_tok + chunk)
+        piece = prompt[done_tok:upto]
+        if len(piece) == 0:
+            return True
+        sl_cache = self._jit_slice(self.cache, slot)
+        sl_len = self.lengths[slot:slot + 1]
+        for t in range(len(piece)):
+            tok = jnp.asarray([[int(piece[t])]], jnp.int32)
+            _, sl_cache = self._jit_decode(self.params, sl_cache, tok,
+                                           sl_len)
+            sl_len = sl_len + 1
+        self.cache = self._jit_set_slice(self.cache, slot, sl_cache)
+        self.lengths = self.lengths.at[slot].set(sl_len[0])
+        self.stats.prefill_tokens += len(piece)
+        self._advance("prefill", len(piece))
+        self._partial[slot] = upto
+        return upto >= len(prompt)
+
+    # ------------------------------------------------------------- steps
+    def step(self) -> list[tuple[int, int]]:
+        """One engine step. Returns [(request_id, token)] emitted."""
+        self.stats.steps += 1
+        emitted: list[tuple[int, int]] = []
+
+        # 1) admit waiting requests into free slots (zeroed state)
+        for req in self._admit_order():
+            free = [i for i, a in enumerate(self.active) if a is None]
+            if not free:
+                break
+            slot = free[0]
+            self.active[slot] = req
+            self.waiting.remove(req)
+            self._partial[slot] = 0
+            self.cache = self._jit_set_slice(self.cache, slot,
+                                             self._fresh_slot)
+            self.lengths = self.lengths.at[slot].set(0)
+
+        # 2) prefill work
+        prefilling = [i for i, r in enumerate(self.active)
+                      if r is not None and self._partial.get(i, 0) < len(r.prompt)]
+        if prefilling:
+            slot = prefilling[0]
+            chunk = None if self.policy == "fcfs" else self.prefill_chunk
+            self._prefill_slot(slot, self.active[slot], chunk)
+            if self.policy == "fcfs":
+                return emitted  # greedy: prefill consumed the whole step
+
+        # 3) decode step for all fully-prefilled slots (isolated restore for
+        #    rows that are mid-prefill or idle)
+        decoding = [i for i, r in enumerate(self.active)
+                    if r is not None and self._partial.get(i, 0) >= len(r.prompt)]
+        if decoding:
+            protect = [i for i in range(self.max_slots) if i not in decoding]
+            saved = {i: self._jit_slice(self.cache, i) for i in protect}
+            tokens = jnp.zeros((self.max_slots, 1), jnp.int32)
+            for i in decoding:
+                req = self.active[i]
+                last = (req.tokens_out[-1] if req.tokens_out
+                        else int(req.prompt[-1]))
+                tokens = tokens.at[i, 0].set(last)
+            logits, self.cache = self._jit_decode(
+                self.params, self.cache, tokens, self.lengths)
+            for i, piece in saved.items():
+                self.cache = self._jit_set_slice(self.cache, i, piece)
+            self._advance("decode", len(decoding))
+            t = self.now()
+            if self._last_decode_t is not None:
+                self.stats.max_decode_gap_s = max(
+                    self.stats.max_decode_gap_s, t - self._last_decode_t)
+            self._last_decode_t = t
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in decoding:
+                self.lengths = self.lengths.at[i].add(1)
+                req = self.active[i]
+                tok = int(nxt[i]) % self.cfg.vocab_size
+                req.tokens_out.append(tok)
+                req.t_tokens.append(t)
+                if req.t_first_token is None:
+                    req.t_first_token = t
+                emitted.append((req.request_id, tok))
+                full = int(self.lengths[i]) >= self.max_seq - 1
+                if len(req.tokens_out) >= req.max_new_tokens or full:
+                    req.t_done = t
+                    self.done.append(req)
+                    self.active[i] = None
+                    self._partial.pop(i, None)
+            self.stats.decode_tokens += len(decoding)
+        return emitted
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.waiting and all(a is None for a in self.active):
+                break
+            if (self._use_vclock and
+                    not any(r.arrival_s <= self.now() for r in self.waiting)
+                    and all(a is None for a in self.active)):
+                self._vclock = min(r.arrival_s for r in self.waiting)
+            self.step()
+        return self.done

@@ -1,0 +1,148 @@
+"""Checkpointing: atomic, async-capable, step-journaled, restart-exact.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json, plus <dir>/JOURNAL with the
+last durably-committed step (written via tmpfile+rename → crash-atomic).
+Saves gather to host numpy (on a real pod each host writes its addressable
+shards; the format keeps a flat {path: array} mapping so resharding on
+restore is a pure sharding-constraint application).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (tuple, list)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            key = f"__{tag}{i}"
+            out.update(_flatten(v, f"{prefix}/{key}" if prefix else key))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Pytree:
+    root: dict = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.startswith("__T") or k.startswith("__L") for k in keys):
+            seq = [rebuild(node[k]) for k in
+                   sorted(keys, key=lambda s: int(s[3:]))]
+            return tuple(seq) if keys[0].startswith("__T") else seq
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def _atomic_write(path: str, data: bytes):
+    d = os.path.dirname(path)
+    os.makedirs(d, exist_ok=True)
+    with tempfile.NamedTemporaryFile(dir=d, delete=False) as f:
+        f.write(data)
+        tmp = f.name
+    os.replace(tmp, path)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # --------------------------------------------------------------- save
+    def save(self, step: int, state: Pytree, extra: Optional[dict] = None):
+        """Durable save; returns when committed (or backgrounded if async)."""
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            sdir = os.path.join(self.dir, f"step_{step:08d}")
+            tmpdir = sdir + ".tmp"
+            if os.path.exists(tmpdir):
+                shutil.rmtree(tmpdir)
+            os.makedirs(tmpdir, exist_ok=True)
+            flat = _flatten(host_state)
+            np.savez(os.path.join(tmpdir, "arrays.npz"), **flat)
+            meta = {"step": step, "extra": extra or {},
+                    "paths": sorted(flat)}
+            with open(os.path.join(tmpdir, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(sdir):
+                shutil.rmtree(sdir)
+            os.replace(tmpdir, sdir)
+            # journal commit LAST -> restart never sees a torn checkpoint
+            _atomic_write(os.path.join(self.dir, "JOURNAL"),
+                          json.dumps({"last_step": step}).encode())
+            self._gc()
+
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        j = os.path.join(self.dir, "JOURNAL")
+        if not os.path.exists(j):
+            return None
+        with open(j) as f:
+            step = json.load(f)["last_step"]
+        return step if step in self.all_steps() else (
+            self.all_steps()[-1] if self.all_steps() else None)
+
+    def restore(self, step: Optional[int] = None) -> tuple[int, Pytree, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        sdir = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(sdir, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(sdir, "meta.json")) as f:
+            meta = json.load(f)
+        return step, _unflatten(flat), meta.get("extra", {})

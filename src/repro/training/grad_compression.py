@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback (beyond-paper DP-comm
+optimization, DESIGN.md §5).
+
+Per-leaf symmetric int8 quantization of gradients before the data-parallel
+reduction, with an error-feedback accumulator so the quantization error is
+re-injected next step (EF-SGD style) — keeps convergence while cutting DP
+all-reduce bytes 4× vs f32 (2× vs bf16). Pure-jnp; under pjit the quantized
+tensors are what cross the dp axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g -> (int8 values, f32 scale). Symmetric, per-tensor."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _split_pairs(grads: Pytree, pairs: Pytree) -> tuple[Pytree, Pytree]:
+    outer = jax.tree.structure(grads)
+    inner = jax.tree.structure((0, 0))
+    return jax.tree.transpose(outer, inner, pairs)
+
+
+def compress(grads: Pytree, error: Pytree | None = None
+             ) -> tuple[tuple[Pytree, Pytree], Pytree]:
+    """Returns ((q_tree, scale_tree), new error-feedback tree)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error)
+    pairs = jax.tree.map(quantize_leaf, corrected)
+    q_tree, s_tree = _split_pairs(grads, pairs)
+    deq = jax.tree.map(dequantize_leaf, q_tree, s_tree)
+    new_error = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return (q_tree, s_tree), new_error
+
+
+def decompress(comp: tuple[Pytree, Pytree]) -> Pytree:
+    q_tree, s_tree = comp
+    return jax.tree.map(dequantize_leaf, q_tree, s_tree)
+
+
+def compression_ratio(grads: Pytree) -> float:
+    """Bytes(f32 grads) / bytes(int8 + per-tensor scale)."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    leaves = len(jax.tree.leaves(grads))
+    return (4.0 * n) / (1.0 * n + 4.0 * leaves)

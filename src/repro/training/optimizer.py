@@ -1,0 +1,151 @@
+"""Optimizers: AdamW with f32 master weights (bf16 compute params) and
+Adafactor (factored second moment) for the parameter-count outliers
+(kimi-k2: AdamW state alone exceeds pod HBM — see DESIGN.md).
+
+Pure-pytree implementation so optimizer state shards with the same
+PartitionSpec machinery as parameters (ZeRO-1 via
+``sharding.optstate_extra_pspecs``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ------------------------------------------------------------------ AdamW
+
+def adamw_init(params: Params) -> dict:
+    # copy=True: master must never alias params (donation would double-free)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, opt_state: dict, params: Params):
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                       opt_state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    new_state = {"step": step, "master": master, "m": m, "v": v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# -------------------------------------------------------------- Adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adafactor_init(params: Params) -> dict:
+    def vrow(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vcol(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "v_row": jax.tree.map(vrow, params),
+        "v_col": jax.tree.map(vcol, params),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, opt_state: dict,
+                     params: Params):
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(g, vr, vc, p):
+        g2 = g * g + 1e-30
+        if _factored(g.shape):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g / jnp.sqrt(vr)
+            vc = vc
+        # update clipping (RMS<=1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        newp = p.astype(jnp.float32) - lr * u - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return newp, vr, vc
+
+    out = jax.tree.map(upd, grads, opt_state["v_row"], opt_state["v_col"], params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    newp, vr, vc = pick(0), pick(1), pick(2)
+    new_params = jax.tree.map(lambda np_, p: np_.astype(p.dtype), newp, params)
+    return new_params, {"step": step, "v_row": vr, "v_col": vc}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ------------------------------------------------------------- dispatcher
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.name == "adafactor":
+        return adafactor_init, lambda g, s, p: adafactor_update(cfg, g, s, p)
+    raise ValueError(cfg.name)

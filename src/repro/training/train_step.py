@@ -1,0 +1,50 @@
+"""The jit-able training and serving step functions every launcher lowers."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ModelBundle
+from repro.training.optimizer import OptimizerConfig, make_optimizer
+
+
+def make_train_step(model: ModelBundle, opt_cfg: OptimizerConfig,
+                    *, remat: str = "full"):
+    """Returns (init_state, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    Gradients average over the global batch, so data parallelism needs no
+    explicit pmean under pjit — the mean over the dp-sharded batch lowers to
+    the reduce-scatter/all-reduce the roofline table measures.
+    """
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def init_state(key, dtype=jnp.bfloat16):
+        params = model.init(key, dtype)
+        return params, opt_init(params)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, remat=remat))(params)
+        new_params, new_opt, om = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return init_state, train_step
+
+
+def make_prefill_step(model: ModelBundle, max_seq: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_seq)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(model: ModelBundle):
+    """One decode token for every active row against the KV/SSM cache."""
+    def serve_step(params, cache, tokens, lengths):
+        logits, new_cache = model.decode_step(params, cache, tokens, lengths)
+        return logits, new_cache
+    return serve_step

@@ -1,0 +1,86 @@
+"""Attention lowering equivalences (flash-jnp vs naive) + SSD properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import CONFIGS
+from repro.models.attention import (decode_attention_jnp, flash_attention_jnp,
+                                    naive_attention)
+from repro.models import ssm
+
+
+@given(st.sampled_from([(1, 4, 2, 128, 32), (2, 8, 4, 256, 64),
+                        (1, 8, 8, 128, 16)]),
+       st.booleans(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_flash_jnp_equals_naive(dims, causal, seed):
+    b, h, kv, s, d = dims
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out = flash_attention_jnp(q, k, v, causal=causal, q_block=64, kv_block=64)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_equals_last_row_of_prefill(rng_key):
+    b, s, h, kv, d = 2, 64, 8, 4, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    full = naive_attention(q, k, v, causal=True)
+    dec = decode_attention_jnp(q[:, -1:], k, v, jnp.full((b,), s))
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1:]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_ignores_padding(rng_key):
+    b, s, h, kv, d = 1, 64, 4, 2, 16
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    out1 = decode_attention_jnp(q, k, v, jnp.array([20]))
+    k2 = k.at[:, 20:].set(1e3)
+    v2 = v.at[:, 20:].set(-1e3)
+    out2 = decode_attention_jnp(q, k2, v2, jnp.array([20]))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# --------------------------------------------------------------- SSD
+def test_ssd_chunked_equals_stepwise(rng_key):
+    """Chunked SSD forward == running the recurrence token by token."""
+    cfg = CONFIGS["mamba2-1.3b"].reduced()
+    params = ssm.init_ssm(rng_key, cfg)
+    b, s = 2, 64
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model)) * 0.5
+    y_chunk, state_chunk = ssm.ssd_forward(params, x, cfg)
+
+    st_ = ssm.init_ssm_state(cfg, b, jnp.float32)
+    ys = []
+    for t in range(s):
+        y_t, st_ = ssm.ssm_decode_step(params, x[:, t:t + 1], st_, cfg)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               atol=2e-3, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(state_chunk["ssm"]),
+                               np.asarray(st_["ssm"]), atol=2e-3, rtol=2e-2)
+
+
+def test_ssd_streaming_state_continuation(rng_key):
+    """ssd_forward(first half) state feeds second half == full pass."""
+    cfg = CONFIGS["mamba2-1.3b"].reduced()
+    params = ssm.init_ssm(rng_key, cfg)
+    b, s = 1, 64
+    x = jax.random.normal(jax.random.key(2), (b, s, cfg.d_model)) * 0.5
+    y_full, _ = ssm.ssd_forward(params, x, cfg)
+    y1, st_ = ssm.ssd_forward(params, x[:, :32], cfg)
+    y2, _ = ssm.ssd_forward(params, x[:, 32:], cfg, init_state=st_)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-3, rtol=2e-2)

@@ -1,0 +1,49 @@
+"""Per-cell best-config selection (distributed/autotune.py)."""
+from repro.configs.registry import CONFIGS
+from repro.distributed.autotune import best_hints
+
+
+def test_moe_train_uses_shardmap():
+    h, remat = best_hints(CONFIGS["kimi-k2-1t-a32b"], "train")
+    assert h["moe_impl"] == "shardmap"
+    assert remat == "dots"
+
+
+def test_moe_decode_stays_scatter_with_int8():
+    h, _ = best_hints(CONFIGS["kimi-k2-1t-a32b"], "decode")
+    assert "moe_impl" not in h           # shardmap regressed 70x on decode
+    assert h["kv_cache_dtype"] == "int8"
+
+
+def test_qwen3_never_repeat_kv():
+    # 40 heads % 16 != 0: repeat_kv only multiplies KV bytes (measured -13%)
+    for kind in ("train", "prefill"):
+        h, _ = best_hints(CONFIGS["qwen3-14b"], kind)
+        assert h.get("attn_impl") != "repeat_kv"
+
+
+def test_chameleon_train_gets_dots_and_repeat_kv():
+    h, remat = best_hints(CONFIGS["chameleon-34b"], "train")
+    assert remat == "dots"
+    assert h.get("attn_impl") == "repeat_kv"   # 64 heads divisible by 16
+
+
+def test_encdec_keeps_baseline():
+    h, remat = best_hints(CONFIGS["seamless-m4t-large-v2"], "train")
+    assert remat == "full" and "attn_logits_bf16" not in h
+
+
+def test_ssm_decode_no_kv_quant():
+    h, _ = best_hints(CONFIGS["mamba2-1.3b"], "long_decode")
+    assert "kv_cache_dtype" not in h     # no KV cache to quantize
+
+
+def test_hints_are_known_keys():
+    from repro.distributed import hints as H
+    for arch in CONFIGS.values():
+        for kind in ("train", "prefill", "decode", "long_decode"):
+            h, remat = best_hints(arch, kind)
+            for k, v in h.items():
+                H.set_hint(k, v)  # raises on unknown keys
+            H.reset()
+            assert remat in ("full", "dots", "none")

@@ -1,0 +1,110 @@
+"""DAG construction, validation, and scheduling invariants (hypothesis)."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import Phase, WorkflowDag, build_dag
+from repro.core.scheduler import DagScheduler
+from repro.core.workflow import (CONTENT_CREATION_YAML, NodeSpec, TaskSpec,
+                                 WorkflowSpec, parse_workflow)
+
+
+def _spec(edges: dict[str, list[str]]) -> WorkflowSpec:
+    tasks = {n: TaskSpec(name=n, app_type="chatbot") for n in edges}
+    nodes = {n: NodeSpec(name=n, uses=n, depend_on=tuple(deps))
+             for n, deps in edges.items()}
+    return WorkflowSpec(tasks=tasks, nodes=nodes)
+
+
+def test_parse_content_creation_yaml():
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    assert len(wf.tasks) == 5
+    assert len(wf.nodes) == 5
+    assert wf.nodes["outline"].depend_on == ("brainstorm", "analysis")
+    assert wf.tasks["Brainstorm (chatbot)"].slo.ttft == 1.0
+    assert wf.tasks["Brainstorm (chatbot)"].slo.tpot == 0.25
+    assert wf.nodes["analysis"].background
+
+
+def test_dag_structure():
+    dag = build_dag(_spec({"a": [], "b": ["a"]}))
+    assert len(dag.nodes) == 6  # 2 apps x (setup, exec, cleanup)
+    assert "a:exec" in dag.nodes["b:exec"].deps
+    assert "b:setup" in dag.nodes["b:exec"].deps
+    order = dag.topo_order()
+    assert order.index("a:exec") < order.index("b:exec")
+    assert order.index("b:setup") < order.index("b:exec")
+    assert order.index("b:exec") < order.index("b:cleanup")
+
+
+def test_cycle_detection():
+    with pytest.raises(ValueError, match="cycle"):
+        build_dag(_spec({"a": ["b"], "b": ["a"]})).topo_order()
+
+
+def test_unknown_dep_rejected():
+    tasks = {"a": TaskSpec(name="a", app_type="chatbot")}
+    nodes = {"a": NodeSpec(name="a", uses="a", depend_on=("ghost",))}
+    with pytest.raises(ValueError, match="unknown"):
+        WorkflowSpec(tasks=tasks, nodes=nodes).validate()
+
+
+@st.composite
+def random_dag_edges(draw):
+    n = draw(st.integers(2, 8))
+    names = [f"n{i}" for i in range(n)]
+    edges = {}
+    for i, name in enumerate(names):
+        # only edges to earlier nodes => acyclic by construction
+        deps = draw(st.lists(st.sampled_from(names[:i]) if i else st.nothing(),
+                             max_size=min(i, 3), unique=True))
+        edges[name] = deps
+    return edges
+
+
+@given(random_dag_edges())
+@settings(max_examples=30, deadline=None)
+def test_topo_order_respects_deps(edges):
+    dag = build_dag(_spec(edges))
+    order = dag.topo_order()
+    pos = {nid: i for i, nid in enumerate(order)}
+    for node in dag.nodes.values():
+        for dep in node.deps:
+            assert pos[dep] < pos[node.id]
+
+
+@given(random_dag_edges())
+@settings(max_examples=15, deadline=None)
+def test_scheduler_executes_in_dependency_order(edges):
+    dag = build_dag(_spec(edges))
+    seen = []
+    lock = threading.Lock()
+
+    def runner(node):
+        with lock:
+            # every dependency must have fully finished
+            done = set(seen)
+            assert node.deps <= done, (node.id, node.deps - done)
+        time.sleep(0.001)
+        with lock:
+            seen.append(node.id)
+
+    outcomes = DagScheduler(dag, runner, max_workers=4).run()
+    assert len(outcomes) == len(dag.nodes)
+    assert all(o.ok for o in outcomes.values())
+    assert len(seen) == len(dag.nodes)
+
+
+def test_scheduler_propagates_failure():
+    dag = build_dag(_spec({"a": [], "b": ["a"]}))
+
+    def runner(node):
+        if node.id == "a:exec":
+            raise RuntimeError("boom")
+
+    outcomes = DagScheduler(dag, runner).run()
+    assert not outcomes["a:exec"].ok
+    assert not outcomes["b:exec"].ok          # dependency failed
+    assert outcomes["a:setup"].ok

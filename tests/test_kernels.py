@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_chunk_scan
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 4, 256, 64),     # GQA 2:1
+    (1, 8, 2, 128, 128),    # GQA 4:1, wide head
+    (2, 4, 1, 256, 32),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, kv, s, d, dtype, causal, rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (2, 8, 4, 256, 64),
+    (1, 4, 4, 512, 32),
+    (3, 8, 2, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, s, d, dtype, rng_key):
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    out = decode_attention(q, k, v, lengths, s_block=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_respects_length(rng_key):
+    """Tokens beyond `lengths` must not affect the output."""
+    b, h, kv, s, d = 1, 4, 2, 128, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    lengths = jnp.array([40], jnp.int32)
+    out1 = decode_attention(q, k, v, lengths, s_block=32, interpret=True)
+    k2 = k.at[:, :, 40:].set(999.0)
+    v2 = v.at[:, :, 40:].set(-999.0)
+    out2 = decode_attention(q, k2, v2, lengths, s_block=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("m,q,h,p,n,hb", [
+    (2, 64, 16, 32, 64, 8),
+    (1, 32, 8, 64, 32, 4),
+    (4, 128, 4, 16, 128, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_scan(m, q, h, p, n, hb, dtype, rng_key):
+    ks = jax.random.split(rng_key, 4)
+    x = jax.random.normal(ks[0], (m, q, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (m, q, h))).astype(jnp.float32)
+    cum = jnp.cumsum(-0.1 * dt, axis=1)
+    b_ = jax.random.normal(ks[2], (m, q, n), dtype)
+    c_ = jax.random.normal(ks[3], (m, q, n), dtype)
+    y, st = ssd_chunk_scan(x, dt, cum, b_, c_, head_block=hb, interpret=True)
+    y_ref, st_ref = jax.vmap(ref.ssd_chunk_ref)(x, dt, cum, b_, c_)
+    tol = 20 * _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("r,d", [(256, 128), (64, 512), (512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(r, d, dtype, rng_key):
+    ks = jax.random.split(rng_key, 2)
+    x = jax.random.normal(ks[0], (r, d), dtype)
+    w = jax.random.normal(ks[1], (d,), jnp.float32)
+    out = rmsnorm(x, w, row_block=64, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_ops_interpret_backend_end_to_end(rng_key):
+    """Whole model under the interpret backend == jnp backend."""
+    from repro.configs.registry import CONFIGS
+    from repro.kernels import ops
+    from repro.models.factory import build_model
+    cfg = CONFIGS["tinyllama-1.1b"].reduced()
+    m = build_model(cfg)
+    params = m.init(rng_key)
+    toks = jax.random.randint(rng_key, (2, 64), 0, cfg.vocab_size)
+    try:
+        ops.set_backend("jnp")
+        l1, _ = m.forward(params, {"tokens": toks})
+        ops.set_backend("interpret")
+        l2, _ = m.forward(params, {"tokens": toks})
+    finally:
+        ops.set_backend(None)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=5e-5)

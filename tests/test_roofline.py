@@ -1,0 +1,75 @@
+"""Roofline machinery: HLO collective parsing, term math, model flops."""
+import pytest
+
+from repro.configs.registry import CONFIGS
+from repro.configs.shapes import SHAPES
+from repro.roofline import analysis
+from repro.roofline.hw import TPU_V5E
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+ENTRY main {
+  %p0 = bf16[128,2048]{1,0} parameter(0)
+  %ag = bf16[2048,2048]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[64,2048]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-to-all(%z, %w)
+  %cp = u8[16]{0} collective-permute(%q), source_target_pairs={{0,1}}
+  %dot = bf16[128,128]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}
+}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    st = analysis.collective_stats(HLO_SAMPLE)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 2048 * 2048 * 2
+    assert st["all-reduce"]["bytes"] == 1024 * 4
+    assert st["reduce-scatter"]["bytes"] == 64 * 2048 * 2
+    assert st["all-to-all"]["count"] == 1
+    assert st["all-to-all"]["bytes"] == 2 * 4 * 8 * 4
+    assert st["collective-permute"]["bytes"] == 16
+    assert st["total_count"] == 5
+    # the dot must not be counted
+    total = sum(v["bytes"] for k, v in st.items() if isinstance(v, dict))
+    assert st["total_bytes"] == total
+
+
+def test_shape_bytes_tuple_and_scalar():
+    assert analysis._shape_bytes("f32[2,3]") == 24
+    assert analysis._shape_bytes("(bf16[4], s8[8])") == 16
+    assert analysis._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_and_dominance():
+    r = analysis.RooflineResult(
+        arch="x", shape="train_4k", mesh="m", chips=256,
+        hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e12,
+        model_flops=6e14,
+        compute_s=1e15 / 256 / TPU_V5E.peak_flops_bf16,
+        memory_s=1e12 / 256 / TPU_V5E.hbm_bandwidth,
+        collective_s=1e12 / 256 / TPU_V5E.ici_link_bandwidth)
+    assert r.dominant == "collective"
+    assert r.step_time_s == r.collective_s
+    assert 0 < r.roofline_fraction < 1
+    assert r.useful_flops_ratio == pytest.approx(0.6)
+
+
+def test_model_flops_kinds():
+    cfg = CONFIGS["tinyllama-1.1b"]
+    total, active = cfg.param_counts()
+    t = analysis.model_flops_for(cfg, SHAPES["train_4k"])
+    p = analysis.model_flops_for(cfg, SHAPES["prefill_32k"])
+    d = analysis.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert t == pytest.approx(6 * active * 4096 * 256)
+    assert p == pytest.approx(2 * active * 32768 * 32)
+    assert d == pytest.approx(2 * active * 128)
+
+
+def test_moe_uses_active_params():
+    moe = CONFIGS["kimi-k2-1t-a32b"]
+    total, active = moe.param_counts()
+    f = analysis.model_flops_for(moe, SHAPES["train_4k"])
+    assert f == pytest.approx(6 * active * 4096 * 256)
+    assert f < 6 * total * 4096 * 256 * 0.05

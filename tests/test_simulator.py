@@ -1,0 +1,137 @@
+"""Pod-simulator invariants (hypothesis) + paper-finding reproduction."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apps import make_app
+from repro.core.costs import WorkItem
+from repro.core.orchestrator import Orchestrator
+from repro.core.simulator import AppTrace, PodSimulator, SimRequest
+from repro.core.slo import SLO
+from repro.roofline.hw import HOST_CPU
+
+
+def _trace(name, items_per_req, n_req, spacing, flops=1e12, background=False):
+    reqs = []
+    for i in range(n_req):
+        items = [WorkItem(name, i, "decode", flops, flops / 100, 0, tokens=1)
+                 for _ in range(items_per_req)]
+        reqs.append(SimRequest(name, i, i * spacing, items))
+    return AppTrace(name, SLO(e2e=10.0), reqs, background=background)
+
+
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 5),
+       st.sampled_from(["greedy", "static", "slo_aware"]))
+@settings(max_examples=25, deadline=None)
+def test_all_requests_complete(n_apps, n_req, items, strategy):
+    traces = [_trace(f"app{i}", items, n_req, 0.5) for i in range(n_apps)]
+    res = PodSimulator(64, strategy=strategy).run(traces)
+    for t in traces:
+        assert len(res.reports[t.name].records) == n_req
+        for r in res.reports[t.name].records:
+            assert r.e2e_s is not None and r.e2e_s >= 0
+
+
+@given(st.integers(1, 3), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_work_conservation_greedy(n_apps, n_req):
+    """Greedy busy time == sum of item durations (single shared queue)."""
+    traces = [_trace(f"app{i}", 3, n_req, 0.0) for i in range(n_apps)]
+    sim = PodSimulator(64, strategy="greedy")
+    res = sim.run(traces)
+    busy = sum(u.t1 - u.t0 for u in res.util)
+    expect = sum(it.duration_s(64) for t in traces
+                 for r in t.requests for it in r.items)
+    assert busy == pytest.approx(expect, rel=1e-6)
+
+
+@given(st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_no_overlap_within_partition(n_apps):
+    traces = [_trace(f"app{i}", 4, 3, 0.1) for i in range(n_apps)]
+    res = PodSimulator(60, strategy="greedy").run(traces)
+    samples = sorted(res.util, key=lambda u: u.t0)
+    for a, b in zip(samples, samples[1:]):
+        assert b.t0 >= a.t1 - 1e-9  # single device: no concurrent items
+
+
+def test_static_partition_chips_sum():
+    traces = [_trace(f"app{i}", 2, 2, 0.0) for i in range(3)]
+    res = PodSimulator(60, strategy="static").run(traces)
+    assert all(u.busy_chips == 20 for u in res.util)
+
+
+# ------------------------------------------------------- paper findings
+@pytest.fixture(scope="module")
+def three_apps():
+    return ([make_app("chatbot"), make_app("imagegen"),
+             make_app("live_captions")],
+            {"chatbot": 8, "imagegen": 8, "live_captions": 40})
+
+
+def test_exclusive_gpu_meets_slos(three_apps):
+    """Paper Fig. 3: exclusive accelerator => ~100% attainment."""
+    apps, nreq = three_apps
+    for a in apps:
+        res = Orchestrator(total_chips=256).run_exclusive(a, nreq[a.name])
+        assert res.reports[a.name].attainment == 1.0, a.name
+
+
+def test_exclusive_cpu_violates_slos(three_apps):
+    """Paper Fig. 3: CPU lower bound => heavy violations for imagegen."""
+    apps, nreq = three_apps
+    img = next(a for a in apps if a.name == "imagegen")
+    orch = Orchestrator(total_chips=256, chip=HOST_CPU)
+    res = orch.run_exclusive(img, 4)
+    assert res.reports["imagegen"].attainment < 0.5
+
+
+def test_greedy_starves_live_captions(three_apps):
+    """Paper §4.2: greedy => captions starve, imagegen unaffected."""
+    apps, nreq = three_apps
+    res = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        apps, nreq)
+    assert res.reports["imagegen"].attainment >= 0.9
+    assert res.reports["live_captions"].attainment <= 0.7
+    assert res.reports["live_captions"].normalized_latency() > 1.0
+
+
+def test_static_partitioning_tradeoff(three_apps):
+    """Paper §4.2: partitioning rescues captions, hurts imagegen + util."""
+    apps, nreq = three_apps
+    g = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        apps, nreq)
+    s = Orchestrator(total_chips=256, strategy="static").run_concurrent(
+        apps, nreq)
+    assert s.reports["live_captions"].attainment > \
+        g.reports["live_captions"].attainment
+    assert s.reports["imagegen"].attainment < g.reports["imagegen"].attainment
+    assert s.utilization() < g.utilization()
+    assert s.makespan_s > g.makespan_s
+
+
+def test_slo_aware_fixes_both(three_apps):
+    """Beyond-paper: slack-EDF + chunking => fairness AND utilization."""
+    apps, nreq = three_apps
+    g = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        apps, nreq)
+    sa = Orchestrator(total_chips=256, strategy="slo_aware").run_concurrent(
+        apps, nreq)
+    for name in ("chatbot", "imagegen", "live_captions"):
+        assert sa.reports[name].attainment >= g.reports[name].attainment
+    assert sa.reports["live_captions"].attainment >= 0.95
+    assert sa.makespan_s <= g.makespan_s * 1.05
+
+
+def test_kv_cache_on_host_hurts_chatbot():
+    """Paper §4.2.1 / Fig. 6: host-resident KV => ~40% SLO misses."""
+    from repro.core.sharing import shared_chatbot_apps
+    dev = shared_chatbot_apps("device")
+    host = shared_chatbot_apps("host")
+    n = {"Chatbot": 10, "Chatbot-KVCache-CPU": 10, "DeepResearch": 1}
+    r_dev = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        dev, n)
+    r_host = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        host, n)
+    a_dev = r_dev.reports["Chatbot"].attainment
+    a_host = r_host.reports["Chatbot-KVCache-CPU"].attainment
+    assert a_host < a_dev

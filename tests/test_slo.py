@@ -1,0 +1,57 @@
+"""SLO parsing + attainment accounting (hypothesis property tests)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.slo import SLO, RequestRecord, SLOReport, _seconds
+
+
+def test_parse_forms():
+    assert SLO.parse("1s").e2e == 1.0
+    assert SLO.parse("250ms").e2e == 0.25
+    assert SLO.parse(["1s", "0.25s"]) == SLO(ttft=1.0, tpot=0.25)
+    assert SLO.parse({"step": 1}).step == 1.0
+    assert SLO.parse(None).is_null()
+    assert SLO.parse(2.0).e2e == 2.0
+
+
+def test_violations():
+    slo = SLO(ttft=1.0, tpot=0.25)
+    ok = RequestRecord("a", 0, 0.0, ttft_s=0.5, tpot_s=0.1, e2e_s=3.0)
+    bad = RequestRecord("a", 1, 0.0, ttft_s=2.0, tpot_s=0.1, e2e_s=3.0)
+    assert ok.meets_slo(slo)
+    assert not bad.meets_slo(slo)
+    assert bad.violations(slo) == {"ttft": True, "tpot": False}
+
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=1, max_size=50),
+       st.floats(0.05, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_attainment_matches_manual_count(latencies, bound):
+    slo = SLO(e2e=bound)
+    recs = [RequestRecord("a", i, 0.0, e2e_s=l)
+            for i, l in enumerate(latencies)]
+    rep = SLOReport("a", slo, recs)
+    manual = sum(1 for l in latencies if l <= bound) / len(latencies)
+    assert rep.attainment == pytest.approx(manual)
+    st_ = rep.latency_stats()
+    assert st_["p50"] <= st_["p95"] <= st_["max"]
+    assert min(latencies) <= st_["mean"] <= max(latencies)
+
+
+@given(st.floats(0.01, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_normalized_latency(bound):
+    slo = SLO(e2e=bound)
+    recs = [RequestRecord("a", 0, 0.0, e2e_s=bound * 2)]
+    rep = SLOReport("a", slo, recs)
+    assert rep.normalized_latency() == pytest.approx(2.0)
+
+
+def test_empty_report_is_perfect():
+    assert SLOReport("a", SLO(e2e=1.0), []).attainment == 1.0
+
+
+def test_seconds_parsing_units():
+    assert _seconds("1500ms") == 1.5
+    assert _seconds("2s") == 2.0
+    assert _seconds(3) == 3.0

@@ -1,0 +1,64 @@
+"""End-to-end behaviour tests: the paper's full pipeline (config → DAG →
+orchestrated execution → report) plus the content-creation workflow (Fig. 7)."""
+import pytest
+
+from repro.core.orchestrator import Orchestrator
+from repro.core.report import render_report
+from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+
+
+@pytest.fixture(scope="module")
+def wf():
+    return parse_workflow(CONTENT_CREATION_YAML)
+
+
+def test_workflow_runs_all_strategies(wf):
+    results = {}
+    for strategy in ("greedy", "static", "slo_aware"):
+        orch = Orchestrator(total_chips=256, strategy=strategy)
+        results[strategy] = orch.run_workflow(wf)
+        r = results[strategy]
+        assert r.e2e_s > 0
+        # every node produced records
+        for name, rep in r.sim.reports.items():
+            assert len(rep.records) == wf.tasks[wf.nodes[name].uses].num_requests
+    # paper §4.3: greedy finishes the whole workflow faster than partitioning
+    assert results["greedy"].e2e_s < results["static"].e2e_s
+
+
+def test_workflow_dependencies_ordered(wf):
+    res = Orchestrator(total_chips=256, strategy="greedy").run_workflow(wf)
+    f = res.node_finish_s
+    sim = res.sim
+    # cover_art must start after outline finished
+    outline_end = f["outline"]
+    cover_first = min(r.arrival_s for r in sim.reports["cover_art"].records)
+    assert cover_first >= outline_end - 1e-6
+
+
+def test_workflow_partitioning_protects_captions(wf):
+    g = Orchestrator(total_chips=256, strategy="greedy").run_workflow(wf)
+    s = Orchestrator(total_chips=256, strategy="static").run_workflow(wf)
+    cap = "generate_captions"
+    assert s.sim.reports[cap].attainment >= g.sim.reports[cap].attainment
+
+
+def test_report_renders(wf):
+    res = Orchestrator(total_chips=256, strategy="greedy").run_workflow(wf)
+    text = render_report(res.sim, title="content-creation")
+    assert "content-creation" in text
+    assert "generate_captions" in text
+    assert "SLO%" in text
+
+
+def test_utilization_timeline():
+    from repro.core.apps import make_app
+    from repro.monitor.metrics import UtilizationTimeline
+    apps = [make_app("imagegen")]
+    res = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
+        apps, {"imagegen": 3})
+    tl = UtilizationTimeline.from_sim(res, bins=50)
+    assert len(tl.t) == 50
+    assert max(tl.smact) <= 1.0 + 1e-9
+    assert max(tl.power_w) <= res.chip.peak_power_w + 1e-9
+    assert min(tl.power_w) >= res.chip.idle_power_w - 1e-9

@@ -1,0 +1,205 @@
+"""Training substrate: convergence, checkpoint exactness, fault tolerance,
+gradient compression, optimizers, data determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import CONFIGS
+from repro.models.factory import build_model
+from repro.training import grad_compression as gc
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, SyntheticTokens
+from repro.training.fault_tolerance import (ElasticPlan, FailureInjector,
+                                            InjectedFault, ResilientTrainer,
+                                            StragglerMitigator)
+from repro.training.optimizer import (OptimizerConfig, adafactor_init,
+                                      adafactor_update, adamw_init,
+                                      adamw_update, make_optimizer)
+from repro.training.train_step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = CONFIGS["tinyllama-1.1b"].reduced()
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(lr=2e-3, warmup_steps=5)
+    init_state, train_step = make_train_step(model, opt_cfg, remat="none")
+    params, opt = init_state(jax.random.key(0), jnp.float32)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=7))
+    jstep = jax.jit(train_step)
+    return cfg, model, jstep, (params, opt), data
+
+
+def _run(jstep, state, data, steps, start=0):
+    params, opt = state
+    losses = []
+    for s in range(start, start + steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, m = jstep(params, opt, b)
+        losses.append(float(m["loss"]))
+    return (params, opt), losses
+
+
+def test_loss_decreases(setup):
+    cfg, model, jstep, state, data = setup
+    _, losses = _run(jstep, state, data, 30)
+    assert losses[-1] < losses[0] - 0.02
+
+
+def test_adafactor_converges(setup):
+    cfg, model, *_ = setup
+    init_state, train_step = make_train_step(
+        model, OptimizerConfig(name="adafactor", lr=2e-3, warmup_steps=5),
+        remat="none")
+    state = init_state(jax.random.key(0), jnp.float32)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=7))
+    _, losses = _run(jax.jit(train_step), state, data, 30)
+    assert losses[-1] < losses[0] - 0.02
+
+
+def test_adafactor_memory_is_factored():
+    # use the FULL kimi config abstractly (eval_shape: no allocation) — the
+    # reduced configs' tiny head dims defeat factoring by design
+    from repro.models.factory import build_model
+    model = build_model(CONFIGS["kimi-k2-1t-a32b"])
+    aparams = model.abstract_params()
+    ad = jax.eval_shape(adafactor_init, aparams)
+    adam = jax.eval_shape(adamw_init, aparams)
+    n_ad = sum(x.size for x in jax.tree.leaves((ad["v_row"], ad["v_col"])))
+    n_adam = sum(x.size for x in jax.tree.leaves(adam["v"]))
+    assert n_ad < 0.02 * n_adam
+
+
+def test_remat_matches_no_remat(setup):
+    cfg, model, _, (params, _), data = setup
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    g1 = jax.grad(lambda p: model.loss_fn(p, batch, remat="none"))(params)
+    g2 = jax.grad(lambda p: model.loss_fn(p, batch, remat="full"))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- data
+def test_data_deterministic():
+    d1 = SyntheticTokens(DataConfig(256, 32, 2, seed=1))
+    d2 = SyntheticTokens(DataConfig(256, 32, 2, seed=1))
+    np.testing.assert_array_equal(d1.batch(5)["tokens"], d2.batch(5)["tokens"])
+    assert not np.array_equal(d1.batch(5)["tokens"], d1.batch(6)["tokens"])
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path, setup):
+    _, _, jstep, state, data = setup
+    state, _ = _run(jstep, state, data, 3)
+    ck = CheckpointManager(str(tmp_path))
+    ck.save(3, state, extra={"losses": [1.0, 2.0]})
+    step, restored, extra = ck.restore()
+    assert step == 3 and extra["losses"] == [1.0, 2.0]
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_journal(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"w": np.full((2,), s)})
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_checkpoint(tmp_path):
+    ck = CheckpointManager(str(tmp_path), async_save=True)
+    ck.save(1, {"w": np.arange(4)})
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+# ------------------------------------------------------- fault tolerance
+def test_restart_reproduces_uninterrupted_run(tmp_path, setup):
+    """Failure + restore must give EXACTLY the uninterrupted trajectory."""
+    cfg, model, jstep, state0, data = setup
+
+    def step_fn(state, batch):
+        p, o = state
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = jstep(p, o, b)
+        return (p, o), m
+
+    ck1 = CheckpointManager(str(tmp_path / "a"), keep=5)
+    t1 = ResilientTrainer(step_fn, data.batch, ck1, ckpt_every=4)
+    sA, rA = t1.run(state0, 12)
+
+    ck2 = CheckpointManager(str(tmp_path / "b"), keep=5)
+    inj = FailureInjector(fail_at_steps=(6, 9))
+    t2 = ResilientTrainer(step_fn, data.batch, ck2, ckpt_every=4,
+                          injector=inj)
+    sB, rB = t2.run(state0, 12)
+
+    assert rB.restarts == 2 and rA.restarts == 0
+    assert rA.losses == rB.losses[:len(rA.losses)] or rA.losses == rB.losses
+    for a, b in zip(jax.tree.leaves(sA), jax.tree.leaves(sB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_injector_exceeds_max_restarts(tmp_path, setup):
+    _, _, jstep, state0, data = setup
+
+    def step_fn(state, batch):
+        raise InjectedFault("always")
+
+    ck = CheckpointManager(str(tmp_path))
+    t = ResilientTrainer(step_fn, data.batch, ck, max_restarts=2)
+    with pytest.raises(InjectedFault):
+        t.run(state0, 5)
+
+
+def test_elastic_shrink_plan():
+    p = ElasticPlan.shrink(global_batch=256, data_shards=16, lost_shards=4)
+    assert p.data_shards == 12
+    assert p.per_shard_batch * p.data_shards <= 256
+    with pytest.raises(ValueError):
+        ElasticPlan.shrink(256, 4, 4)
+
+
+def test_straggler_detection():
+    s = StragglerMitigator(window=16, threshold=2.0)
+    flagged = [s.observe(i, 1.0) for i in range(20)]
+    assert not any(flagged)
+    assert s.observe(20, 5.0) is True
+    assert 20 in s.flagged
+
+
+# ----------------------------------------------------- grad compression
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    g = jax.random.normal(jax.random.key(seed), (64, 32))
+    q, s = gc.quantize_leaf(g)
+    err = jnp.abs(gc.dequantize_leaf(q, s) - g)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the sum of compressed grads tracks the true sum."""
+    key = jax.random.key(0)
+    true_sum = jnp.zeros((32,))
+    ef_sum = jnp.zeros((32,))
+    err = None
+    for i in range(50):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (32,)) * 0.01}
+        comp, err = gc.compress(g, err)
+        deq = gc.decompress(comp)
+        true_sum = true_sum + g["w"]
+        ef_sum = ef_sum + deq["w"]
+    # residual bounded by one quantization step, not accumulating
+    assert float(jnp.max(jnp.abs(true_sum - ef_sum))) < 5e-4
+
+
+def test_compression_ratio():
+    g = {"a": jnp.zeros((1024, 1024)), "b": jnp.zeros((512,))}
+    assert gc.compression_ratio(g) > 3.9
