@@ -6,28 +6,27 @@ platform-dependent."""
 from __future__ import annotations
 
 from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
-from repro.core.apps import make_app
-from repro.core.orchestrator import Orchestrator
-from repro.roofline.hw import TPU_V5E, TPU_V5P
+from repro.bench import Scenario, ScenarioApp
 
 
 def run() -> list[str]:
     rows = []
-    apps = [make_app(t) for t in STANDARD_APPS]
-    nreq = {a.name: NUM_REQUESTS[a.name] for a in apps}
-    for chip, chips in ((TPU_V5E, 256), (TPU_V5P, 64)):
-        for strategy in ("greedy", "slo_aware"):
-            orch = Orchestrator(total_chips=chips, strategy=strategy,
-                                chip=chip)
-            res = orch.run_concurrent(apps, nreq)
-            for a in apps:
-                rep = res.reports[a.name]
+    for chip, chips in (("tpu-v5e", 256), ("tpu-v5p", 64)):
+        for policy in ("greedy", "slo_aware"):
+            sc = Scenario(
+                name=f"platform-{chip}-{policy}", mode="concurrent",
+                policy=policy, total_chips=chips, chip=chip,
+                apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
+                      for t in STANDARD_APPS])
+            sim = sc.run().sim
+            for name in STANDARD_APPS:
+                rep = sim.reports[name]
                 rows.append(row(
-                    f"platform_{chip.name}_{strategy}_{a.name}",
+                    f"platform_{chip}_{policy}_{name}",
                     (rep.latency_stats().get("mean", 0.0)) * 1e6,
                     f"slo={rep.attainment:.3f};"
-                    f"util={res.utilization():.3f};"
-                    f"energy_kj={res.energy_j() / 1e3:.1f}"))
+                    f"util={sim.utilization():.3f};"
+                    f"energy_kj={sim.energy_j() / 1e3:.1f}"))
     return rows
 
 

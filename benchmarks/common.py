@@ -1,9 +1,18 @@
 """Shared helpers for the per-figure benchmarks. Every benchmark emits
-``name,us_per_call,derived`` CSV rows (harness contract)."""
+``name,us_per_call,derived`` CSV rows (harness contract).
+
+Figure benchmarks are declared as :class:`repro.bench.Scenario` specs; this
+module centralizes the standard app set, request counts, and the ``--smoke``
+fast path (tiny request counts so CI import-checks every figure quickly —
+enable via ``enable_smoke()`` or the CONSUMERBENCH_SMOKE=1 env var).
+"""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
+
+from repro.bench import Scenario, ScenarioApp
 
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
@@ -26,3 +35,41 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 STANDARD_APPS = ("chatbot", "imagegen", "live_captions")
 NUM_REQUESTS = {"chatbot": 10, "imagegen": 10, "live_captions": 50,
                 "deep_research": 1}
+TOTAL_CHIPS = 256
+
+_SMOKE_NUM_REQUESTS = {"chatbot": 2, "imagegen": 2, "live_captions": 5,
+                       "deep_research": 1}
+_smoke = False
+
+
+def enable_smoke() -> None:
+    """Shrink every figure to a few requests: an import-and-run check, not a
+    measurement (CI fast path)."""
+    global _smoke
+    _smoke = True
+    NUM_REQUESTS.update(_SMOKE_NUM_REQUESTS)
+
+
+if os.environ.get("CONSUMERBENCH_SMOKE", "").lower() not in ("", "0", "false"):
+    enable_smoke()
+
+
+def smoke_enabled() -> bool:
+    return _smoke
+
+
+def smoke_requests(n: int) -> int:
+    """Clamp a figure-specific request count under smoke mode."""
+    return min(n, 3) if _smoke else n
+
+
+def standard_scenario(name: str, policy: str, *, mode: str = "concurrent",
+                      chip: str = "tpu-v5e",
+                      num_requests: dict[str, int] | None = None) -> Scenario:
+    """The paper's three-app concurrent workload as a Scenario declaration."""
+    counts = num_requests or NUM_REQUESTS
+    return Scenario(
+        name=name, mode=mode, policy=policy, total_chips=TOTAL_CHIPS,
+        chip=chip,
+        apps=[ScenarioApp(app_type=t, num_requests=counts[t])
+              for t in STANDARD_APPS])

@@ -1,24 +1,29 @@
 """Paper Fig. 3: per-app latency (normalized to SLO) and SLO attainment when
 running EXCLUSIVELY on the accelerator (upper bound) vs the host CPU (lower
-bound). Pod analogue: full 256-chip mesh vs host fallback."""
+bound). Pod analogue: full 256-chip mesh vs host fallback — declared as
+exclusive-mode Scenarios."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
-from repro.core.apps import make_app
-from repro.core.orchestrator import Orchestrator
-from repro.roofline.hw import HOST_CPU, TPU_V5E
+from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS, row
+from repro.bench import Scenario, ScenarioApp
+
+
+def scenario(device: str) -> Scenario:
+    chip = "tpu-v5e" if device == "gpu" else "host-cpu"
+    scale = (lambda n: n) if device == "gpu" else (lambda n: max(n // 2, 3))
+    return Scenario(
+        name=f"fig3-exclusive-{device}", mode="exclusive", policy="greedy",
+        total_chips=TOTAL_CHIPS, chip=chip,
+        apps=[ScenarioApp(app_type=t, num_requests=scale(NUM_REQUESTS[t]))
+              for t in STANDARD_APPS])
 
 
 def run() -> list[str]:
     rows = []
-    for device, chip in (("gpu", TPU_V5E), ("cpu", HOST_CPU)):
+    for device in ("gpu", "cpu"):
+        res = scenario(device).run()
         for app_type in STANDARD_APPS:
-            app = make_app(app_type)
-            orch = Orchestrator(total_chips=256, chip=chip)
-            n = NUM_REQUESTS[app_type] if device == "gpu" else max(
-                NUM_REQUESTS[app_type] // 2, 3)
-            res = orch.run_exclusive(app, n)
-            rep = res.reports[app.name]
+            rep = res.report(app_type)
             st = rep.latency_stats()
             rows.append(row(
                 f"fig3_exclusive_{device}_{app_type}",

@@ -3,27 +3,30 @@ TPU translation: SMACT ≙ reserved-chip fraction, SMOCC ≙ reserved ×
 roofline-achievement; plus the power model (paper Fig. 8)."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
-from repro.core.apps import make_app
-from repro.core.orchestrator import Orchestrator
+from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS, row
+from repro.bench import Scenario, ScenarioApp
 from repro.monitor.metrics import UtilizationTimeline
 
 
 def run() -> list[str]:
+    scenario = Scenario(
+        name="fig4-utilization", mode="exclusive", policy="greedy",
+        total_chips=TOTAL_CHIPS,
+        apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
+              for t in STANDARD_APPS])
+    res = scenario.run()
     rows = []
     for app_type in STANDARD_APPS:
-        app = make_app(app_type)
-        orch = Orchestrator(total_chips=256)
-        res = orch.run_exclusive(app, NUM_REQUESTS[app_type])
-        tl = UtilizationTimeline.from_sim(res, bins=100)
+        sim = res.sims[app_type]
+        tl = UtilizationTimeline.from_sim(sim, bins=100)
         smact = sum(tl.smact) / len(tl.smact)
         smocc = sum(tl.smocc) / len(tl.smocc)
         mean_pw = sum(tl.power_w) / len(tl.power_w)
         rows.append(row(
             f"fig4_utilization_{app_type}",
-            res.makespan_s * 1e6,
+            sim.makespan_s * 1e6,
             f"smact={smact:.3f};smocc={smocc:.3f};mean_power_w={mean_pw:.0f};"
-            f"energy_kj={res.energy_j() / 1e3:.1f}"))
+            f"energy_kj={sim.energy_j() / 1e3:.1f}"))
     return rows
 
 

@@ -1,29 +1,28 @@
 """Paper Fig. 5: concurrent execution under greedy allocation vs static
-partitioning — plus this repo's SLO-aware scheduler (paper §5.2's ask)."""
+partitioning — plus this repo's SLO-aware scheduler (paper §5.2's ask) and
+the beyond-paper weighted-fair policy, all through the policy registry."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
-from repro.core.apps import make_app
-from repro.core.orchestrator import Orchestrator
+from benchmarks.common import STANDARD_APPS, row, standard_scenario
+
+POLICIES = ("greedy", "static", "slo_aware", "weighted_fair")
 
 
 def run() -> list[str]:
     rows = []
-    apps = [make_app(t) for t in STANDARD_APPS]
-    nreq = {a.name: NUM_REQUESTS[a.name] for a in apps}
-    for strategy in ("greedy", "static", "slo_aware"):
-        orch = Orchestrator(total_chips=256, strategy=strategy)
-        res = orch.run_concurrent(apps, nreq)
-        for a in apps:
-            rep = res.reports[a.name]
+    for policy in POLICIES:
+        res = standard_scenario(f"fig5-{policy}", policy).run()
+        sim = res.sim
+        for name in STANDARD_APPS:
+            rep = sim.reports[name]
             st = rep.latency_stats()
             rows.append(row(
-                f"fig5_{strategy}_{a.name}",
+                f"fig5_{policy}_{name}",
                 st.get("mean", 0.0) * 1e6,
                 f"slo={rep.attainment:.3f};"
                 f"norm_lat={rep.normalized_latency():.3f};"
-                f"util={res.utilization():.3f};"
-                f"makespan_s={res.makespan_s:.2f}"))
+                f"util={sim.utilization():.3f};"
+                f"makespan_s={sim.makespan_s:.2f}"))
     return rows
 
 

@@ -1,28 +1,42 @@
 """Paper Fig. 6 / §4.2.1: static model sharing via one inference server —
-Chatbot vs Chatbot-KVCache-CPU while DeepResearch shares the model."""
+Chatbot vs Chatbot-KVCache-CPU while DeepResearch shares the model. The
+shared-server pair is declared as a Scenario: DeepResearch rides on the
+chatbot's architecture, and kv_cache=host moves attention to the host."""
 from __future__ import annotations
 
-from benchmarks.common import row
-from repro.core.orchestrator import Orchestrator
-from repro.core.sharing import shared_chatbot_apps
+from benchmarks.common import TOTAL_CHIPS, row, smoke_requests
+from repro.bench import Scenario, ScenarioApp
+from repro.core.apps import DEFAULT_ARCH
+
+
+def scenario(kv: str) -> Scenario:
+    host = kv == "host"
+    chat = "Chatbot-KVCache-CPU" if host else "Chatbot"
+    shared_arch = DEFAULT_ARCH["chatbot"]   # one server backs both apps
+    return Scenario(
+        name=f"fig6-sharing-kv-{kv}", mode="concurrent", policy="greedy",
+        total_chips=TOTAL_CHIPS,
+        apps=[ScenarioApp("chatbot", name=chat, kv_cache_on_host=host,
+                          num_requests=smoke_requests(10)),
+              ScenarioApp("deep_research", name="DeepResearch",
+                          arch=shared_arch, kv_cache_on_host=host,
+                          num_requests=1)])
 
 
 def run() -> list[str]:
     rows = []
     for kv in ("device", "host"):
-        apps = shared_chatbot_apps(kv)
-        nreq = {a.name: (10 if "Chatbot" in a.name else 1) for a in apps}
-        orch = Orchestrator(total_chips=256, strategy="greedy")
-        res = orch.run_concurrent(apps, nreq)
-        chat = next(a.name for a in apps if "Chatbot" in a.name)
-        rep = res.reports[chat]
+        sc = scenario(kv)
+        res = sc.run()
+        chat = next(a.name for a in sc.apps if "Chatbot" in a.name)
+        rep = res.report(chat)
         st = rep.latency_stats()
         rows.append(row(
             f"fig6_sharing_kv_{kv}_{chat}",
             st.get("mean", 0.0) * 1e6,
             f"slo={rep.attainment:.3f};"
             f"norm_lat={rep.normalized_latency():.3f};"
-            f"util={res.utilization():.3f}"))
+            f"util={res.sim.utilization():.3f}"))
     return rows
 
 

@@ -1,24 +1,39 @@
 """Paper Fig. 7 / §4.3: the digital content-creation workflow end to end,
-greedy vs partitioning (+ SLO-aware)."""
+greedy vs partitioning (+ SLO-aware), declared as workflow-mode Scenarios."""
 from __future__ import annotations
 
-from benchmarks.common import row
-from repro.core.orchestrator import Orchestrator
-from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+import dataclasses
+
+from benchmarks.common import TOTAL_CHIPS, row, smoke_enabled, smoke_requests
+from repro.bench import Scenario
+from repro.core.workflow import CONTENT_CREATION_YAML, WorkflowSpec, \
+    parse_workflow
+
+POLICIES = ("greedy", "static", "slo_aware")
+
+
+def content_creation_spec() -> WorkflowSpec:
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    if smoke_enabled():
+        wf.tasks = {name: dataclasses.replace(
+            t, num_requests=smoke_requests(t.num_requests))
+            for name, t in wf.tasks.items()}
+    return wf
 
 
 def run() -> list[str]:
     rows = []
-    wf = parse_workflow(CONTENT_CREATION_YAML)
+    wf = content_creation_spec()
     e2e = {}
-    for strategy in ("greedy", "static", "slo_aware"):
-        orch = Orchestrator(total_chips=256, strategy=strategy)
-        res = orch.run_workflow(wf)
-        e2e[strategy] = res.e2e_s
-        cap = res.sim.reports["generate_captions"]
-        img = res.sim.reports["cover_art"]
+    for policy in POLICIES:
+        res = Scenario(name=f"fig7-workflow-{policy}", mode="workflow",
+                       policy=policy, total_chips=TOTAL_CHIPS,
+                       workflow=wf).run()
+        e2e[policy] = res.e2e_s
+        cap = res.report("generate_captions")
+        img = res.report("cover_art")
         rows.append(row(
-            f"fig7_workflow_{strategy}",
+            f"fig7_workflow_{policy}",
             res.e2e_s * 1e6,
             f"captions_slo={cap.attainment:.3f};"
             f"imagegen_slo={img.attainment:.3f};"

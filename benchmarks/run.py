@@ -1,12 +1,29 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   python benchmarks/run.py            # full measurement run
+#   python benchmarks/run.py --smoke    # tiny request counts: CI import check
+#   python benchmarks/run.py --only fig5_concurrent,fig7_workflow
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every figure with tiny request counts "
+                         "(fast import-and-run check, not a measurement)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names to run")
+    args = ap.parse_args(argv)
+
+    from benchmarks import common
+    if args.smoke:
+        common.enable_smoke()
+
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
                             fig7_workflow, kernel_bench, roofline_table)
@@ -21,6 +38,15 @@ def main() -> None:
         ("kernel_bench", kernel_bench.run),
         ("roofline_table", roofline_table.run),
     ]
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",") if s.strip()}
+        known = {n for n, _ in suites}
+        unknown = sorted(keep - known)
+        if unknown:
+            ap.error(f"unknown suite(s) {', '.join(unknown)}; "
+                     f"available: {', '.join(sorted(known))}")
+        suites = [(n, fn) for n, fn in suites if n in keep]
+
     print("name,us_per_call,derived")
     failures = []
     for name, fn in suites:

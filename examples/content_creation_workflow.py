@@ -1,23 +1,28 @@
 """The paper's digital content-creation workflow (Fig. 7 / Fig. 23) on a
 simulated v5e pod: brainstorm -> (analysis background) -> outline ->
-cover art + captions. Compares greedy vs partitioning vs SLO-aware.
+cover art + captions. Declared as a workflow-mode Scenario; compares
+greedy vs partitioning vs SLO-aware through the policy registry.
 
     PYTHONPATH=src python examples/content_creation_workflow.py
 """
-from repro.core.orchestrator import Orchestrator
+import dataclasses
+
+from repro.bench import Scenario
 from repro.core.report import render_report
-from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+from repro.core.workflow import CONTENT_CREATION_YAML
+
+BASE = Scenario(name="content-creation", mode="workflow",
+                policy="greedy", total_chips=256,
+                workflow=CONTENT_CREATION_YAML)
 
 
 def main():
-    wf = parse_workflow(CONTENT_CREATION_YAML)
     e2e = {}
-    for strategy in ("greedy", "static", "slo_aware"):
-        result = Orchestrator(total_chips=256,
-                              strategy=strategy).run_workflow(wf)
-        e2e[strategy] = result.e2e_s
+    for policy in ("greedy", "static", "slo_aware"):
+        result = dataclasses.replace(BASE, policy=policy).run()
+        e2e[policy] = result.e2e_s
         print(render_report(result.sim,
-                            title=f"content-creation [{strategy}] "
+                            title=f"content-creation [{policy}] "
                                   f"e2e={result.e2e_s:.1f}s"))
         print()
     saving = (e2e["static"] - e2e["greedy"]) / e2e["static"]

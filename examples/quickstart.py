@@ -1,51 +1,49 @@
-"""Quickstart: define a two-app workload in the paper's YAML schema, run it
-under all three orchestration strategies on a simulated v5e pod, and print
-the ConsumerBench report.
+"""Quickstart: declare a three-app workload as a Scenario (YAML), run it
+under several scheduling policies on a simulated v5e pod, and print the
+ConsumerBench report.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.orchestrator import Orchestrator
+import dataclasses
+import json
+
+from repro.bench import Scenario
 from repro.core.report import render_report
-from repro.core.workflow import parse_workflow
 
-YAML = """
-Chat (chatbot):
-  num_requests: 10
-  device: gpu
-  type: chatbot
-  slo: [1s, 0.25s]
-
-Captions (live_captions):
-  num_requests: 40
-  device: gpu
-  type: live_captions
-  slo: 2s
-
-Art (imagegen):
-  num_requests: 8
-  device: gpu
-  type: imagegen
-  slo: 1s
-
-workflows:
-  chat:
-    uses: Chat (chatbot)
-  captions:
-    uses: Captions (live_captions)
-  art:
-    uses: Art (imagegen)
+SCENARIO_YAML = """
+name: quickstart
+mode: concurrent
+policy: greedy
+total_chips: 256
+chip: tpu-v5e
+apps:
+  - app: chatbot
+    name: Chat
+    num_requests: 10
+    slo: {ttft: 1.0, tpot: 0.25}
+  - app: live_captions
+    name: Captions
+    num_requests: 40
+    slo: {segment: 2.0}
+  - app: imagegen
+    name: Art
+    num_requests: 8
+    slo: {step: 1.0}
+    arrival: {kind: bursty, burst_size: 4, burst_gap_s: 10.0}
 """
 
 
 def main():
-    wf = parse_workflow(YAML)
-    for strategy in ("greedy", "static", "slo_aware"):
-        orch = Orchestrator(total_chips=256, strategy=strategy)
-        result = orch.run_workflow(wf)
+    base = Scenario.from_yaml(SCENARIO_YAML)
+    for policy in ("greedy", "static", "slo_aware", "weighted_fair"):
+        scenario = dataclasses.replace(base, policy=policy)
+        result = scenario.run()
         print(render_report(result.sim,
-                            title=f"quickstart [{strategy}] "
-                                  f"e2e={result.e2e_s:.1f}s"))
+                            title=f"quickstart [{policy}]"))
         print()
+    # every run serializes to a stable, versioned result schema
+    print("result schema:",
+          json.dumps(result.to_json(), default=str)[:160], "...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,252 @@
+"""Pluggable scheduling policies (paper §4.2 strategies + §5.2's SLO-aware
+scheduler, redesigned as one API).
+
+A :class:`SchedulingPolicy` is consumed by BOTH execution substrates:
+
+* the discrete-event :class:`~repro.core.simulator.PodSimulator` (pod-scale
+  roofline numbers) via the ``partition`` / ``priority`` / ``chunk_fraction``
+  / ``on_dispatch`` hooks, and
+* the real-JAX :class:`~repro.serving.engine.InferenceEngine` (continuous
+  batching) via ``admit_order`` / ``prefill_chunk_tokens`` /
+  ``exclusive_prefill``.
+
+Policies are looked up by name through a registry so new schedulers plug in
+without touching either substrate::
+
+    @register_policy("my_policy")
+    class MyPolicy(SchedulingPolicy):
+        def priority(self, trace, req, item, now):
+            ...
+
+    PodSimulator(256, policy="my_policy")
+    InferenceEngine(model, policy="my_policy")
+
+Shipped policies:
+
+  greedy (alias: fcfs) — one FIFO queue over all chips; whole-prompt prefill
+               engine-side. Small latency-critical items suffer head-of-line
+               blocking (paper Fig. 5b).
+  chunked    — FIFO admission + chunked prefill/denoise: long chunkable items
+               split at ``chunk_target_s`` boundaries so short work can
+               interleave (the engine's former 'chunked' policy, now also
+               available at pod scale).
+  static     — chips split equally among apps at start (≙ MPS 33%); idle
+               partitions stay idle → underutilization (paper Fig. 5a).
+  slo_aware  — work-conserving EDF by per-item SLO slack + chunking;
+               background apps yield. BEYOND-PAPER (§5.2's ask).
+  weighted_fair — BEYOND-PAPER: weighted fair queueing by cumulative
+               normalized service time per app; backgrounds get a small
+               weight instead of strict demotion, so no app starves even
+               without SLO hints.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable, Optional, Union
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from repro.core.costs import WorkItem
+    from repro.core.simulator import AppTrace, SimRequest
+    from repro.serving.request import Request
+
+_REGISTRY: dict[str, type["SchedulingPolicy"]] = {}
+
+BACKGROUND_DEMOTION_S = 1e6   # priority offset pushing background work last
+
+
+def register_policy(*names: str):
+    """Class decorator registering a policy under one or more names (the
+    first name is canonical and becomes ``cls.name``)."""
+    if not names:
+        raise ValueError("register_policy needs at least one name")
+
+    def deco(cls: type["SchedulingPolicy"]):
+        for n in names:
+            if n in _REGISTRY:
+                raise ValueError(f"scheduling policy {n!r} already "
+                                 f"registered ({_REGISTRY[n].__name__})")
+            _REGISTRY[n] = cls
+        cls.name = names[0]
+        return cls
+    return deco
+
+
+def get_policy(policy: Union[str, "SchedulingPolicy"]) -> "SchedulingPolicy":
+    """Resolve a registry name (fresh instance) or pass an instance through."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        cls = _REGISTRY[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {policy!r}; available: "
+            f"{', '.join(available_policies())}") from None
+    return cls()
+
+
+def available_policies() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class SchedulingPolicy:
+    """Base policy: shared pool, FIFO, no chunking, chunked engine prefill.
+
+    Subclasses override only the hooks they care about. Policies may hold
+    per-run state (see :class:`WeightedFairPolicy`); the simulator calls
+    :meth:`reset` once at the start of every run.
+    """
+
+    name = "base"
+    #: engine: prefill consumes the whole engine step (no decode interleave)
+    exclusive_prefill = False
+
+    # ------------------------------------------------------------ lifecycle
+    def reset(self) -> None:
+        """Clear per-run state. Called once per ``PodSimulator.run``."""
+
+    # ------------------------------------------------- simulator-side hooks
+    def partition(self, traces: Iterable["AppTrace"],
+                  total_chips: int) -> tuple[dict[str, str], dict[str, int]]:
+        """Map app name -> partition key, partition key -> chip count.
+        Default: every app shares one pool of all chips."""
+        traces = list(traces)
+        return ({t.name: "__shared__" for t in traces},
+                {"__shared__": total_chips})
+
+    def priority(self, trace: "AppTrace", req: "SimRequest",
+                 item: "WorkItem", now: float) -> float:
+        """Queue key for a ready work item — smaller runs first.
+        Default: FIFO by ready time."""
+        return now
+
+    def chunk_fraction(self, item: "WorkItem", full_dur: float,
+                       frac: float, chunk_target_s: float) -> float:
+        """Fraction of ``item`` to run now given ``frac`` remains.
+        Default: run everything that is left (no chunk splitting)."""
+        return frac
+
+    def on_dispatch(self, trace: "AppTrace", req: "SimRequest",
+                    item: "WorkItem", start: float, end: float,
+                    chips: int) -> None:
+        """Observe a dispatched (chunk of a) work item — state hook."""
+
+    # ---------------------------------------------------- engine-side hooks
+    def admit_order(self, ready: list["Request"],
+                    now: float) -> list["Request"]:
+        """Order in which ready requests claim free decode slots.
+        Default: FIFO by arrival."""
+        return sorted(ready, key=lambda r: r.arrival_s)
+
+    def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
+        """Tokens of prefill to advance per engine step; None = whole
+        prompt at once."""
+        return default_chunk
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+@register_policy("greedy", "fcfs")
+class GreedyPolicy(SchedulingPolicy):
+    """Step-level FCFS over one shared pool; engine-side whole-prompt
+    prefill that stalls every active decode (paper's LiveCaptions
+    starvation, §4.2)."""
+
+    exclusive_prefill = True
+
+    def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
+        return None
+
+
+@register_policy("chunked")
+class ChunkedPolicy(SchedulingPolicy):
+    """FIFO admission with chunked prefill: chunkable items are split at
+    ``chunk_target_s`` boundaries so urgent short work can jump in."""
+
+    def chunk_fraction(self, item: "WorkItem", full_dur: float,
+                       frac: float, chunk_target_s: float) -> float:
+        if item.chunkable and full_dur * frac > chunk_target_s:
+            return min(frac, chunk_target_s / full_dur)
+        return frac
+
+
+@register_policy("static")
+class StaticPartitionPolicy(SchedulingPolicy):
+    """Chips split equally among apps at start (≙ MPS 33%); per-partition
+    FIFO queues; idle partitions stay idle (paper Fig. 5a right)."""
+
+    def partition(self, traces: Iterable["AppTrace"],
+                  total_chips: int) -> tuple[dict[str, str], dict[str, int]]:
+        traces = list(traces)
+        per = max(total_chips // max(len(traces), 1), 1)
+        return ({t.name: t.name for t in traces},
+                {t.name: per for t in traces})
+
+
+@register_policy("slo_aware")
+class SloAwarePolicy(ChunkedPolicy):
+    """Work-conserving earliest-deadline-first by per-item SLO slack, with
+    chunked prefill; background apps are demoted behind everything else.
+    BEYOND-PAPER (the scheduler §5.2 calls for)."""
+
+    def priority(self, trace: "AppTrace", req: "SimRequest",
+                 item: "WorkItem", now: float) -> float:
+        if req.background or trace.background:
+            return BACKGROUND_DEMOTION_S + now
+        # EDF with per-item slack measured from readiness
+        return now + getattr(item, "slo_hint_s", req.deadline_hint_s)
+
+    def admit_order(self, ready: list["Request"],
+                    now: float) -> list["Request"]:
+        return sorted(ready, key=lambda r: (
+            r.deadline_s if r.deadline_s is not None else float("inf"),
+            r.arrival_s))
+
+
+@register_policy("weighted_fair")
+class WeightedFairPolicy(ChunkedPolicy):
+    """BEYOND-PAPER: weighted fair queueing. Each app accumulates virtual
+    service time (busy seconds / weight); the app with the least virtual
+    time runs next. So that a burst of simultaneous arrivals from one app
+    doesn't all enqueue at the same virtual time (which would degrade to
+    FIFO head-of-line blocking), each queued-but-unserved item additionally
+    charges its app one virtual quantum — bursts from different apps
+    interleave. Background apps default to a small weight — they make
+    progress whenever foreground apps are idle, but can never starve the
+    pod, and no SLO hints are required (contrast ``slo_aware``)."""
+
+    def __init__(self, weights: Optional[dict[str, float]] = None,
+                 default_weight: float = 1.0,
+                 background_weight: float = 0.1,
+                 backlog_quantum_s: float = 1.0):
+        self.weights = dict(weights or {})
+        self.default_weight = default_weight
+        self.background_weight = background_weight
+        self.backlog_quantum_s = backlog_quantum_s
+        self._vtime: dict[str, float] = {}
+        self._backlog: dict[str, int] = {}
+
+    def reset(self) -> None:
+        self._vtime = {}
+        self._backlog = {}
+
+    def _weight(self, trace: "AppTrace") -> float:
+        w = self.weights.get(trace.name)
+        if w is not None:
+            return max(w, 1e-9)
+        if trace.background:
+            return self.background_weight
+        return self.default_weight
+
+    def priority(self, trace: "AppTrace", req: "SimRequest",
+                 item: "WorkItem", now: float) -> float:
+        backlog = self._backlog.get(req.app, 0)
+        self._backlog[req.app] = backlog + 1
+        return (self._vtime.get(req.app, 0.0)
+                + backlog * self.backlog_quantum_s / self._weight(trace))
+
+    def on_dispatch(self, trace: "AppTrace", req: "SimRequest",
+                    item: "WorkItem", start: float, end: float,
+                    chips: int) -> None:
+        self._backlog[req.app] = max(self._backlog.get(req.app, 0) - 1, 0)
+        self._vtime[req.app] = (self._vtime.get(req.app, 0.0)
+                                + (end - start) / self._weight(trace))

@@ -1,0 +1,318 @@
+"""Declarative scenario API: one schema + one runner for every execution
+mode the paper exercises (exclusive §4.1, concurrent §4.2, workflow §4.3).
+
+A :class:`Scenario` names the apps (with arch/SLO/arrival overrides), the
+hardware (chip + pod size), the scheduling policy (registry name) and the
+mode; ``Scenario.run()`` returns a :class:`ScenarioResult` with a stable,
+versioned ``to_json()`` schema. Scenarios round-trip through YAML::
+
+    name: fig5-slo-aware
+    mode: concurrent
+    policy: slo_aware
+    total_chips: 256
+    chip: tpu-v5e
+    apps:
+      - app: chatbot
+        num_requests: 10
+        slo: {ttft: 1.0, tpot: 0.25}
+      - app: live_captions
+        num_requests: 50
+        arrival: {kind: poisson, rate_per_s: 0.5}
+
+Workflow mode embeds the existing workflow YAML (paper Fig. 23) under a
+``workflow:`` key and honours its DAG dependencies via the same fixed-point
+release-time iteration the Orchestrator used. ``Orchestrator`` remains as a
+thin deprecated shim over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Union
+
+import yaml
+
+from repro.bench.arrival import ArrivalProcess, make_arrival
+from repro.bench.policy import SchedulingPolicy, get_policy
+from repro.core.apps import AppDef, DEFAULT_ARCH, app_from_task, make_app
+from repro.core.dag import Phase, build_dag
+from repro.core.simulator import AppTrace, PodSimulator, SimResult
+from repro.core.slo import SLO
+from repro.core.workflow import WorkflowSpec, parse_workflow
+from repro.roofline.hw import ChipSpec, get_chip
+
+SCHEMA_VERSION = "1.0"
+SETUP_S = 2.0      # model load/launch time per app (engine warmup)
+
+MODES = ("exclusive", "concurrent", "workflow")
+
+
+# --------------------------------------------------------------------- spec
+@dataclass
+class ScenarioApp:
+    """One application instance inside a scenario."""
+    app_type: str
+    name: str = ""                     # defaults to app_type
+    arch: str = ""                     # defaults to DEFAULT_ARCH[app_type]
+    num_requests: int = 10
+    slo: Optional[SLO] = None          # None = the app type's default SLO
+    background: bool = False
+    kv_cache_on_host: bool = False
+    arrival: Optional[ArrivalProcess] = None   # None = app default cadence
+
+    def build(self) -> AppDef:
+        return make_app(self.app_type,
+                        name=self.name or None,
+                        arch=self.arch or None,
+                        slo=self.slo,
+                        background=self.background,
+                        kv_cache_on_host=self.kv_cache_on_host)
+
+    # ------------------------------------------------------- serialization
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioApp":
+        d = dict(d)
+        app_type = d.pop("app", None) or d.pop("app_type")
+        slo = d.pop("slo", None)
+        arrival = d.pop("arrival", None)
+        kv = d.pop("kv_cache", None)
+        if kv is not None:
+            d["kv_cache_on_host"] = str(kv) in ("host", "cpu", "True", "true")
+        return cls(app_type=app_type,
+                   slo=SLO.parse(slo) if slo is not None else None,
+                   arrival=make_arrival(arrival), **d)
+
+    def to_dict(self) -> dict:
+        d: dict = {"app": self.app_type}
+        if self.name:
+            d["name"] = self.name
+        if self.arch:
+            d["arch"] = self.arch
+        d["num_requests"] = self.num_requests
+        if self.slo is not None:
+            d["slo"] = {k: v for k, v in dataclasses.asdict(self.slo).items()
+                        if v is not None}
+        if self.background:
+            d["background"] = True
+        if self.kv_cache_on_host:
+            d["kv_cache"] = "host"
+        if self.arrival is not None:
+            d["arrival"] = self.arrival.to_dict()
+        return d
+
+
+@dataclass
+class Scenario:
+    """Declarative benchmark scenario; ``run()`` executes it on the pod
+    simulator under the named scheduling policy."""
+    name: str = "scenario"
+    mode: str = "concurrent"           # exclusive | concurrent | workflow
+    policy: Union[str, SchedulingPolicy] = "greedy"
+    total_chips: int = 256
+    chip: Union[str, ChipSpec] = "tpu-v5e"
+    chunk_target_s: float = 0.05
+    seed: int = 0
+    apps: list[ScenarioApp] = field(default_factory=list)
+    workflow: Union[None, str, dict, WorkflowSpec] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown scenario mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def chip_spec(self) -> ChipSpec:
+        return self.chip if isinstance(self.chip, ChipSpec) \
+            else get_chip(self.chip)
+
+    @property
+    def policy_name(self) -> str:
+        return self.policy if isinstance(self.policy, str) else self.policy.name
+
+    def workflow_spec(self) -> WorkflowSpec:
+        if self.workflow is None:
+            raise ValueError("mode='workflow' requires a workflow spec")
+        if isinstance(self.workflow, WorkflowSpec):
+            return self.workflow
+        return parse_workflow(self.workflow)
+
+    # ------------------------------------------------------- serialization
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        apps = [a if isinstance(a, ScenarioApp) else ScenarioApp.from_dict(a)
+                for a in d.pop("apps", [])]
+        return cls(apps=apps, **d)
+
+    @classmethod
+    def from_yaml(cls, src: Union[str, dict]) -> "Scenario":
+        if isinstance(src, str):
+            src = yaml.safe_load(src)
+        if not isinstance(src, dict):
+            raise ValueError("scenario spec must be a mapping")
+        return cls.from_dict(src)
+
+    def to_dict(self) -> dict:
+        d: dict = {
+            "name": self.name,
+            "mode": self.mode,
+            "policy": self.policy_name,
+            "total_chips": self.total_chips,
+            "chip": self.chip_spec.name,
+            "chunk_target_s": self.chunk_target_s,
+            "seed": self.seed,
+        }
+        if self.apps:
+            d["apps"] = [a.to_dict() for a in self.apps]
+        if self.workflow is not None:
+            wf = self.workflow
+            if isinstance(wf, str):
+                wf = yaml.safe_load(wf)
+            d["workflow"] = wf.to_dict() if isinstance(wf, WorkflowSpec) else wf
+        return d
+
+    def to_yaml(self) -> str:
+        return yaml.safe_dump(self.to_dict(), sort_keys=False)
+
+    # --------------------------------------------------------------- run
+    def _simulator(self, total_chips: Optional[int] = None,
+                   policy: Union[None, str, SchedulingPolicy] = None
+                   ) -> PodSimulator:
+        return PodSimulator(total_chips or self.total_chips,
+                            policy=policy if policy is not None else self.policy,
+                            chip=self.chip_spec,
+                            chunk_target_s=self.chunk_target_s)
+
+    def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
+               start_s: float = 0.0) -> AppTrace:
+        return app.sim_trace(sa.num_requests, start_s=start_s,
+                             seed=self.seed + idx, arrival=sa.arrival)
+
+    def run(self) -> "ScenarioResult":
+        if self.mode == "exclusive":
+            return self._run_exclusive()
+        if self.mode == "concurrent":
+            return self._run_concurrent()
+        return self._run_workflow()
+
+    def _run_exclusive(self) -> "ScenarioResult":
+        """Each app alone on the device (paper §4.1 upper bound; on
+        ``host-cpu`` the pod collapses to one host = lower bound)."""
+        chips = self.total_chips if self.chip_spec.name != "host-cpu" else 1
+        sims = {}
+        for i, sa in enumerate(self.apps):
+            app = sa.build()
+            sim = self._simulator(total_chips=chips)
+            sims[app.name] = sim.run([self._trace(i, sa, app)])
+        return ScenarioResult(scenario=self, sims=sims)
+
+    def _run_concurrent(self) -> "ScenarioResult":
+        """All apps start together on the shared pod (paper §4.2)."""
+        traces = [self._trace(i, sa, sa.build())
+                  for i, sa in enumerate(self.apps)]
+        sim = self._simulator().run(traces)
+        return ScenarioResult(scenario=self, sims={"concurrent": sim})
+
+    def _run_workflow(self, max_rounds: int = 12) -> "ScenarioResult":
+        sim, finish, e2e = run_workflow_spec(
+            self.workflow_spec(), total_chips=self.total_chips,
+            policy=self.policy, chip=self.chip_spec,
+            chunk_target_s=self.chunk_target_s, max_rounds=max_rounds)
+        return ScenarioResult(scenario=self, sims={"workflow": sim},
+                              node_finish_s=finish, e2e_s=e2e)
+
+
+# ------------------------------------------------------------------ result
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    sims: dict[str, SimResult]         # exclusive: per app; else one entry
+    node_finish_s: dict[str, float] = field(default_factory=dict)
+    e2e_s: Optional[float] = None
+
+    @property
+    def sim(self) -> SimResult:
+        """The single combined SimResult (concurrent/workflow modes)."""
+        if len(self.sims) != 1:
+            raise ValueError(f"scenario produced {len(self.sims)} sims; "
+                             "use .sims for exclusive mode")
+        return next(iter(self.sims.values()))
+
+    def report(self, app_name: str):
+        """SLOReport for ``app_name`` regardless of mode."""
+        for sim in self.sims.values():
+            if app_name in sim.reports:
+                return sim.reports[app_name]
+        raise KeyError(app_name)
+
+    def summary(self) -> dict:
+        out = {label: sim.summary() for label, sim in self.sims.items()}
+        if self.e2e_s is not None:
+            out["e2e_s"] = self.e2e_s
+            out["node_finish_s"] = dict(sorted(self.node_finish_s.items()))
+        return out
+
+    def to_json(self) -> dict:
+        """Stable, versioned result schema (consumed by dashboards/CI)."""
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "scenario": self.scenario.to_dict(),
+            "results": self.summary(),
+        }
+
+
+# --------------------------------------------------------- workflow runner
+def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
+                      policy: Union[str, SchedulingPolicy] = "greedy",
+                      chip: Optional[ChipSpec] = None,
+                      chunk_target_s: float = 0.05,
+                      max_rounds: int = 12
+                      ) -> tuple[SimResult, dict[str, float], float]:
+    """Execute a workflow DAG on the pod: the DAG scheduler releases each
+    node's trace when its dependencies complete; the simulator runs ONCE
+    over the merged stream so cross-app contention is faithful. Release
+    times depend on dependency finish times, which depend on contention —
+    fixed-point iterate until stable."""
+    from repro.roofline.hw import TPU_V5E
+    chip = chip or TPU_V5E
+    policy = get_policy(policy)
+    dag = build_dag(spec)
+    exec_nodes = {n.node: n for n in dag.nodes.values()
+                  if n.phase == Phase.EXEC}
+    release = {name: 0.0 for name in exec_nodes}
+    finish = {name: 0.0 for name in exec_nodes}
+    result: Optional[SimResult] = None
+
+    for _ in range(max_rounds):
+        traces = []
+        for name, node in exec_nodes.items():
+            app = dataclasses.replace(app_from_task(node.task), name=name)
+            trace = app.sim_trace(node.task.num_requests,
+                                  start_s=release[name] + SETUP_S)
+            trace = AppTrace(name=name, slo=trace.slo,
+                             requests=trace.requests,
+                             background=trace.background or node.background,
+                             closed_loop=trace.closed_loop)
+            traces.append(trace)
+        sim = PodSimulator(total_chips, policy=policy, chip=chip,
+                           chunk_target_s=chunk_target_s)
+        result = sim.run(traces)
+        new_finish = {}
+        for name in exec_nodes:
+            recs = result.reports[name].records
+            new_finish[name] = max((r.arrival_s + (r.e2e_s or 0.0)
+                                    for r in recs), default=release[name])
+        new_release = {}
+        for name, node in exec_nodes.items():
+            deps = [d.split(":")[0] for d in node.deps
+                    if d.endswith(":exec")]
+            new_release[name] = max([new_finish[d] for d in deps],
+                                    default=0.0)
+        if all(abs(new_release[n] - release[n]) < 1e-6 for n in release):
+            finish = new_finish
+            break
+        release, finish = new_release, new_finish
+
+    e2e = max(finish.values(), default=0.0)
+    return result, finish, e2e

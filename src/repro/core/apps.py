@@ -27,7 +27,7 @@ from repro.core import costs
 from repro.core.costs import WorkItem
 from repro.core.simulator import AppTrace, SimRequest
 from repro.core.slo import SLO
-from repro.core.workflow import TaskSpec
+from repro.core.workflow import APP_DEFAULT_ARCH, TaskSpec
 
 
 @dataclass
@@ -95,13 +95,24 @@ class AppDef:
                               deadline_hint_s=self.slo.segment or 2.0)
         raise ValueError(self.app_type)
 
+    #: default inter-request cadence per app type (LiveCaptions' 2 s audio
+    #: segments, Chatbot's 1 s think time, batch apps back to back)
+    DEFAULT_SPACING_S = {"chatbot": 1.0, "deep_research": 0.0,
+                         "imagegen": 0.0, "live_captions": 2.0}
+
     def sim_trace(self, num_requests: int, *, start_s: float = 0.0,
-                  seed: int = 0) -> AppTrace:
-        spacing = {"chatbot": 1.0, "deep_research": 0.0,
-                   "imagegen": 0.0, "live_captions": 2.0}[self.app_type]
+                  seed: int = 0, arrival=None) -> AppTrace:
+        """``arrival`` is any object with ``times(n, start_s=, seed=)`` (see
+        repro.bench.arrival); None keeps the app type's fixed cadence. For
+        closed-loop apps the generated times are arrival floors — request
+        i+1 still waits for request i to complete."""
         closed = self.app_type in ("chatbot", "imagegen", "deep_research")
-        reqs = [self.request_chain(i, start_s + i * spacing)
-                for i in range(num_requests)]
+        if arrival is None:
+            spacing = self.DEFAULT_SPACING_S[self.app_type]
+            times = [start_s + i * spacing for i in range(num_requests)]
+        else:
+            times = arrival.times(num_requests, start_s=start_s, seed=seed)
+        reqs = [self.request_chain(i, t) for i, t in enumerate(times)]
         return AppTrace(self.name, self.slo, reqs,
                         background=self.background, closed_loop=closed)
 
@@ -113,12 +124,9 @@ DEFAULT_SLOS = {
     "live_captions": SLO(segment=2.0),
 }
 
-DEFAULT_ARCH = {
-    "chatbot": "tinyllama-1.1b",
-    "deep_research": "stablelm-12b",
-    "imagegen": "chameleon-34b",
-    "live_captions": "seamless-m4t-large-v2",
-}
+# Single source of truth lives next to the YAML task schema so workflow
+# parsing and app construction can never disagree.
+DEFAULT_ARCH = APP_DEFAULT_ARCH
 
 
 def make_app(app_type: str, *, name: str | None = None, arch: str | None = None,

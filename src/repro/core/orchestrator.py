@@ -1,26 +1,29 @@
-"""Resource orchestrator: executes a workflow DAG on the pod under a
-resource-management strategy (paper §3.2 'resource orchestrator' +
-'DAG scheduler' + 'executor').
+"""DEPRECATED shim over :mod:`repro.bench.scenario` (paper §3.2 'resource
+orchestrator').
 
-Simulation mode (pod-scale numbers): the DAG scheduler releases each node's
-request trace into the shared PodSimulator when its dependencies complete;
-the simulator is run ONCE over the merged event stream so cross-app
-contention is faithfully modelled. Dependencies are honored by computing
-node release times iteratively (a node's trace starts when all its
-dependencies' last requests complete).
+The Orchestrator predates the declarative Scenario API; its three entry
+points map directly onto scenario modes and now delegate to the shared
+runner::
+
+    Orchestrator(strategy=...).run_exclusive(app, n)   -> Scenario(mode="exclusive")
+    Orchestrator(strategy=...).run_concurrent(apps, n) -> Scenario(mode="concurrent")
+    Orchestrator(strategy=...).run_workflow(spec)      -> Scenario(mode="workflow")
+
+New code should build a :class:`repro.bench.Scenario` (see
+docs/scenarios.md); this class is kept only so existing call sites keep
+working and will be removed once nothing imports it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
-from repro.core.apps import AppDef, app_from_task
-from repro.core.dag import Phase, WorkflowDag, build_dag
-from repro.core.simulator import AppTrace, PodSimulator, SimResult
+from repro.bench.scenario import SETUP_S, run_workflow_spec
+from repro.core.apps import AppDef
+from repro.core.simulator import PodSimulator, SimResult
 from repro.core.workflow import WorkflowSpec
-from repro.roofline.hw import ChipSpec, HOST_CPU, TPU_V5E
+from repro.roofline.hw import ChipSpec, TPU_V5E
 
-SETUP_S = 2.0      # model load/launch time per app (engine warmup)
+__all__ = ["Orchestrator", "WorkflowResult", "SETUP_S"]
 
 
 @dataclass
@@ -46,55 +49,17 @@ class Orchestrator:
     # ------------------------------------------------------ workflow mode
     def run_workflow(self, spec: WorkflowSpec,
                      max_rounds: int = 12) -> WorkflowResult:
-        """Fixed-point iteration: release times depend on dependency finish
-        times, which depend on contention — iterate until stable."""
-        dag = build_dag(spec)
-        exec_nodes = {n.node: n for n in dag.nodes.values()
-                      if n.phase == Phase.EXEC}
-        release = {name: 0.0 for name in exec_nodes}
-        finish = {name: 0.0 for name in exec_nodes}
-        result: Optional[SimResult] = None
-
-        for _ in range(max_rounds):
-            traces = []
-            for name, node in exec_nodes.items():
-                import dataclasses as _dc
-                app = _dc.replace(app_from_task(node.task), name=name)
-                trace = app.sim_trace(node.task.num_requests,
-                                      start_s=release[name] + SETUP_S)
-                trace = AppTrace(name=name, slo=trace.slo,
-                                 requests=trace.requests,
-                                 background=trace.background or node.background,
-                                 closed_loop=trace.closed_loop)
-                traces.append(trace)
-            sim = PodSimulator(self.total_chips, strategy=self.strategy,
-                               chip=self.chip)
-            result = sim.run(traces)
-            new_finish = {}
-            for name in exec_nodes:
-                recs = result.reports[name].records
-                new_finish[name] = max((r.arrival_s + (r.e2e_s or 0.0)
-                                        for r in recs), default=release[name])
-            new_release = {}
-            for name, node in exec_nodes.items():
-                deps = [d.split(":")[0] for d in node.deps
-                        if d.endswith(":exec")]
-                new_release[name] = max([new_finish[d] for d in deps],
-                                        default=0.0)
-            if all(abs(new_release[n] - release[n]) < 1e-6 for n in release):
-                finish = new_finish
-                break
-            release, finish = new_release, new_finish
-
-        e2e = max(finish.values(), default=0.0)
-        return WorkflowResult(sim=result, node_finish_s=finish, e2e_s=e2e)
+        sim, finish, e2e = run_workflow_spec(
+            spec, total_chips=self.total_chips, policy=self.strategy,
+            chip=self.chip, max_rounds=max_rounds)
+        return WorkflowResult(sim=sim, node_finish_s=finish, e2e_s=e2e)
 
     # ---------------------------------------------------- concurrent mode
     def run_concurrent(self, apps: list[AppDef],
                        num_requests: dict[str, int]) -> SimResult:
         """Paper §4.2: all apps start together, no DAG."""
         traces = [a.sim_trace(num_requests.get(a.name, 10)) for a in apps]
-        sim = PodSimulator(self.total_chips, strategy=self.strategy,
+        sim = PodSimulator(self.total_chips, policy=self.strategy,
                            chip=self.chip)
         return sim.run(traces)
 
@@ -102,5 +67,5 @@ class Orchestrator:
         """Paper §4.1: one app alone on the device (upper bound) — or on the
         host when chip=HOST_CPU (lower bound)."""
         chips = self.total_chips if self.chip.name != "host-cpu" else 1
-        sim = PodSimulator(chips, strategy="greedy", chip=self.chip)
+        sim = PodSimulator(chips, policy="greedy", chip=self.chip)
         return sim.run([app.sim_trace(num_requests)])

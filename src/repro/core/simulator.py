@@ -1,19 +1,16 @@
 """Discrete-event pod simulator: the TPU analogue of the paper's concurrent
 GPU execution, driven by the roofline cost model.
 
-Resource strategies (paper §4.2 + the SLO-aware scheduler the paper calls
-for in §5.2):
+Scheduling is fully delegated to a pluggable
+:class:`~repro.bench.policy.SchedulingPolicy` (paper §4.2 strategies + the
+SLO-aware scheduler §5.2 calls for — see ``repro/bench/policy.py`` for the
+shipped policies). The simulator owns only the event loop and metrics; the
+policy decides chip partitioning, queue priority, and chunk splitting:
 
-  greedy     — one FIFO device queue; every item runs on ALL chips when its
-               turn comes (step-level FCFS ≙ the paper's kernel-level greedy
-               occupancy). Small latency-critical items suffer head-of-line
-               blocking behind large ones → starvation (paper Fig. 5b).
-  static     — chips split equally among apps at workflow start (≙ MPS 33%);
-               per-partition FIFO queues; idle partitions stay idle →
-               underutilization + stairstep SMACT (paper Fig. 5a right).
-  slo_aware  — single work-conserving queue ordered by SLO slack; chunkable
-               items (prefill/denoise) are split so urgent decode steps can
-               jump in at chunk boundaries (chunked prefill). BEYOND-PAPER.
+  partition(traces, chips)        — app -> partition, partition -> chips
+  priority(trace, req, item, now) — queue order inside a partition
+  chunk_fraction(item, dur, frac, target) — preemption at chunk boundaries
+  on_dispatch(...)                — state hook (e.g. fair-queueing vtime)
 
 The simulator records per-request latency records (→ SLO attainment), a chip
 utilization timeline (SMACT/SMOCC analogue), and energy via the power model.
@@ -22,10 +19,11 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Callable, Iterable, Optional
+import warnings
+from dataclasses import dataclass
+from typing import Union
 
+from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.core.costs import WorkItem
 from repro.core.slo import SLO, RequestRecord, SLOReport
 from repro.roofline.hw import ChipSpec, TPU_V5E
@@ -60,26 +58,32 @@ class UtilSample:
 
 
 class PodSimulator:
-    def __init__(self, total_chips: int, *, strategy: str = "greedy",
-                 chip: ChipSpec = TPU_V5E, chunk_target_s: float = 0.05):
-        assert strategy in ("greedy", "static", "slo_aware")
+    def __init__(self, total_chips: int, *,
+                 policy: Union[str, SchedulingPolicy] = "greedy",
+                 chip: ChipSpec = TPU_V5E, chunk_target_s: float = 0.05,
+                 strategy: Union[str, None] = None):
+        if strategy is not None:
+            warnings.warn("PodSimulator(strategy=...) is deprecated; use "
+                          "policy=<name or SchedulingPolicy>",
+                          DeprecationWarning, stacklevel=2)
+            policy = strategy
         self.total_chips = total_chips
-        self.strategy = strategy
+        self.policy = get_policy(policy)
         self.chip = chip
         self.chunk_target_s = chunk_target_s
         self._seq = itertools.count()
 
+    @property
+    def strategy(self) -> str:
+        """Deprecated alias: the active policy's registry name."""
+        return self.policy.name
+
     # ---------------------------------------------------------------- run
     def run(self, traces: list[AppTrace]) -> "SimResult":
+        policy = self.policy
+        policy.reset()
         apps = {t.name: t for t in traces}
-        # partitions: greedy/slo_aware = one shared; static = per app
-        if self.strategy == "static":
-            per = max(self.total_chips // max(len(traces), 1), 1)
-            partition_of = {t.name: t.name for t in traces}
-            chips_of = {t.name: per for t in traces}
-        else:
-            partition_of = {t.name: "__shared__" for t in traces}
-            chips_of = {"__shared__": self.total_chips}
+        partition_of, chips_of = policy.partition(traces, self.total_chips)
 
         queues: dict[str, list] = {p: [] for p in chips_of}
         busy_until: dict[str, float] = {p: 0.0 for p in chips_of}
@@ -104,8 +108,8 @@ class PodSimulator:
 
         def enqueue(partition: str, ready_t: float, req: SimRequest,
                     item_idx: int, chunk_frac: float):
-            prio = self._priority(apps[req.app], req, req.items[item_idx],
-                                  ready_t)
+            prio = policy.priority(apps[req.app], req, req.items[item_idx],
+                                   ready_t)
             heapq.heappush(queues[partition],
                            (prio, ready_t, next(self._seq), req, item_idx,
                             chunk_frac))
@@ -117,14 +121,13 @@ class PodSimulator:
             item = req.items[idx]
             chips = chips_of[partition]
             full_dur = item.duration_s(chips, self.chip)
-            run_frac = frac
-            if (self.strategy == "slo_aware" and item.chunkable
-                    and full_dur * frac > self.chunk_target_s):
-                run_frac = min(frac, self.chunk_target_s / full_dur)
+            run_frac = min(frac, policy.chunk_fraction(
+                item, full_dur, frac, self.chunk_target_s))
             dur = full_dur * run_frac
             end = now + dur
             busy_until[partition] = end
             util.append(UtilSample(now, end, chips, self.total_chips))
+            policy.on_dispatch(apps[req.app], req, item, now, end, chips)
             rem = frac - run_frac
             heapq.heappush(events, (end, next(self._seq), "complete",
                                     (partition, req, idx, rem, now)))
@@ -170,8 +173,10 @@ class PodSimulator:
                             if i < len(trace.requests):
                                 next_idx[req.app] = i + 1
                                 nxt = trace.requests[i]
+                                # effective arrival = max(completion, nominal);
+                                # the trace itself is never mutated, so
+                                # re-running the same AppTrace is reproducible
                                 t_arr = max(now, nxt.arrival_s)
-                                nxt.arrival_s = t_arr
                                 heapq.heappush(events, (t_arr,
                                                         next(self._seq),
                                                         "arrival", nxt))
@@ -183,17 +188,7 @@ class PodSimulator:
                    for t in traces}
         return SimResult(reports=reports, util=util,
                          total_chips=self.total_chips, chip=self.chip,
-                         strategy=self.strategy)
-
-    # ----------------------------------------------------------- priority
-    def _priority(self, trace: AppTrace, req: SimRequest, item,
-                  now: float) -> float:
-        if self.strategy != "slo_aware":
-            return now  # FIFO by ready time
-        if req.background or trace.background:
-            return 1e6 + now
-        # earliest-deadline-first with per-item slack measured from readiness
-        return now + getattr(item, "slo_hint_s", req.deadline_hint_s)
+                         strategy=policy.name)
 
 
 @dataclass
@@ -202,7 +197,11 @@ class SimResult:
     util: list[UtilSample]
     total_chips: int
     chip: ChipSpec
-    strategy: str
+    strategy: str           # the scheduling policy's registry name
+
+    @property
+    def policy_name(self) -> str:
+        return self.strategy
 
     @property
     def makespan_s(self) -> float:

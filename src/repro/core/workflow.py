@@ -42,6 +42,29 @@ class WorkflowSpec:
     tasks: dict[str, TaskSpec]
     nodes: dict[str, NodeSpec]
 
+    def to_dict(self) -> dict:
+        """Inverse of ``parse_workflow``: a plain mapping that parses back
+        to an equivalent spec (used by Scenario.to_json round-tripping)."""
+        import dataclasses as _dc
+        out: dict = {}
+        for name, t in self.tasks.items():
+            body: dict = {"type": t.app_type, "num_requests": t.num_requests,
+                          "device": t.device, "mps": t.mps}
+            if t.arch:
+                body["arch"] = t.arch
+            if not t.slo.is_null():
+                body["slo"] = {k: v for k, v in _dc.asdict(t.slo).items()
+                               if v is not None}
+            if t.share_server:
+                body["server_model"] = t.share_server
+            body.update(t.params)
+            out[name] = body
+        out["workflows"] = {
+            name: {"uses": n.uses, "depend_on": list(n.depend_on),
+                   "background": n.background}
+            for name, n in self.nodes.items()}
+        return out
+
     def validate(self) -> None:
         for node in self.nodes.values():
             if node.uses not in self.tasks:
@@ -53,12 +76,15 @@ class WorkflowSpec:
                                      f"node {dep!r}")
 
 
-_APP_DEFAULT_ARCH = {
+# Single source of truth for app-type -> assigned architecture (the table in
+# repro/core/apps.py's docstring). apps.DEFAULT_ARCH aliases this mapping.
+APP_DEFAULT_ARCH = {
     "chatbot": "tinyllama-1.1b",
-    "deep_research": "tinyllama-1.1b",
+    "deep_research": "stablelm-12b",
     "imagegen": "chameleon-34b",
     "live_captions": "seamless-m4t-large-v2",
 }
+_APP_DEFAULT_ARCH = APP_DEFAULT_ARCH   # backward-compat alias
 
 
 def parse_workflow(src) -> WorkflowSpec:

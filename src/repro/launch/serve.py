@@ -10,6 +10,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro.bench.policy import available_policies
 from repro.configs.registry import get_config
 from repro.models.factory import build_model
 from repro.serving.engine import InferenceEngine
@@ -25,7 +26,7 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", default="chunked",
-                    choices=["fcfs", "chunked", "slo_aware"])
+                    choices=available_policies())
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

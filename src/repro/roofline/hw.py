@@ -57,3 +57,14 @@ HOST_CPU = ChipSpec(
 )
 
 DEFAULT_CHIP = TPU_V5E
+
+CHIPS = {c.name: c for c in (TPU_V5E, TPU_V5P, HOST_CPU)}
+
+
+def get_chip(name: str) -> ChipSpec:
+    """Look up a ChipSpec by name (scenario YAML uses names, not objects)."""
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise ValueError(f"unknown chip {name!r}; available: "
+                         f"{', '.join(sorted(CHIPS))}") from None

@@ -2,12 +2,15 @@
 
 Slot-based KV cache: a fixed decode batch of ``max_slots`` rows; requests
 claim a slot, prefill fills the slot's cache rows, decode advances every
-active slot one token per step. Three scheduling policies mirror the
-orchestrator strategies:
+active slot one token per step. Scheduling is delegated to the same
+pluggable :class:`~repro.bench.policy.SchedulingPolicy` objects the pod
+simulator consumes (``admit_order`` orders slot admission;
+``prefill_chunk_tokens`` / ``exclusive_prefill`` control prefill
+interleaving). With the shipped policies:
 
-  fcfs       — whole-prompt prefill when a slot frees (greedy: a long prompt
+  greedy (fcfs) — whole-prompt prefill when a slot frees: a long prompt
                stalls every active decode — the engine-level analogue of the
-               paper's LiveCaptions starvation, §4.2).
+               paper's LiveCaptions starvation, §4.2.
   chunked    — chunked prefill: prompts advance ``prefill_chunk`` tokens per
                engine step, interleaved with decode → bounded decode stall
                (the fix the paper's §5.2 calls for; BEYOND-PAPER here).
@@ -30,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.models.factory import ModelBundle
 from repro.serving.request import Request
 
@@ -44,15 +48,15 @@ class EngineStats:
 
 class InferenceEngine:
     def __init__(self, model: ModelBundle, *, max_slots: int = 4,
-                 max_seq: int = 256, policy: str = "fcfs",
+                 max_seq: int = 256,
+                 policy: "str | SchedulingPolicy" = "fcfs",
                  prefill_chunk: int = 16,
                  step_cost_s: Optional[Callable[[str, int], float]] = None):
-        assert policy in ("fcfs", "chunked", "slo_aware")
         self.model = model
         self.cfg = model.cfg
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.policy = policy
+        self.policy = get_policy(policy)
         self.prefill_chunk = prefill_chunk
         self._step_cost = step_cost_s
         self._use_vclock = step_cost_s is not None
@@ -93,13 +97,9 @@ class InferenceEngine:
         self.waiting.append(req)
 
     def _admit_order(self) -> list[Request]:
-        ready = [r for r in self.waiting if r.arrival_s <= self.now()]
-        if self.policy == "slo_aware":
-            ready.sort(key=lambda r: (r.deadline_s if r.deadline_s is not None
-                                      else float("inf"), r.arrival_s))
-        else:
-            ready.sort(key=lambda r: r.arrival_s)
-        return ready
+        now = self.now()
+        ready = [r for r in self.waiting if r.arrival_s <= now]
+        return self.policy.admit_order(ready, now)
 
     # ----------------------------------------------------------- prefill
     def _prefill_slot(self, slot: int, req: Request,
@@ -152,9 +152,9 @@ class InferenceEngine:
                       if r is not None and self._partial.get(i, 0) < len(r.prompt)]
         if prefilling:
             slot = prefilling[0]
-            chunk = None if self.policy == "fcfs" else self.prefill_chunk
+            chunk = self.policy.prefill_chunk_tokens(self.prefill_chunk)
             self._prefill_slot(slot, self.active[slot], chunk)
-            if self.policy == "fcfs":
+            if self.policy.exclusive_prefill:
                 return emitted  # greedy: prefill consumed the whole step
 
         # 3) decode step for all fully-prefilled slots (isolated restore for

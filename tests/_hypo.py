@@ -1,0 +1,107 @@
+"""Property-testing shim: real ``hypothesis`` when installed, otherwise a
+deterministic mini fallback so the tier-1 suite runs green without optional
+dev dependencies.
+
+The fallback implements exactly the subset these tests use — ``given``,
+``settings`` and the strategies ``integers / floats / booleans /
+sampled_from / lists / composite / nothing`` — by drawing a fixed number of
+examples from a per-test seeded PRNG. It does no shrinking and explores far
+fewer cases than hypothesis, but every draw is reproducible run to run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    class _Strategy:
+        """A value generator: ``draw(rng)`` yields one example."""
+
+        def __init__(self, draw_fn, empty: bool = False):
+            self._draw_fn = draw_fn
+            self.is_empty = empty
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            options = list(seq)
+            return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+        @staticmethod
+        def nothing() -> _Strategy:
+            def _fail(rng):
+                raise ValueError("nothing() strategy has no examples")
+            return _Strategy(_fail, empty=True)
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int | None = None,
+                  unique: bool = False) -> _Strategy:
+            def _draw(rng: random.Random):
+                if elements.is_empty:
+                    return []
+                hi = max_size if max_size is not None else min_size + 5
+                size = rng.randint(min_size, max(hi, min_size))
+                if not unique:
+                    return [elements.draw(rng) for _ in range(size)]
+                out, seen = [], set()
+                for _ in range(size * 8):
+                    if len(out) >= size:
+                        break
+                    v = elements.draw(rng)
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+            return _Strategy(_draw)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs) -> _Strategy:
+                def _draw(rng: random.Random):
+                    return fn(lambda s: s.draw(rng), *args, **kwargs)
+                return _Strategy(_draw)
+            return build
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._shim_max_examples = kwargs.get("max_examples", 10)
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_shim_max_examples", 10), 25)
+
+            def wrapper():
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(*[s.draw(rng) for s in strategies])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

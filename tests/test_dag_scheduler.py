@@ -3,7 +3,7 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.dag import Phase, WorkflowDag, build_dag
 from repro.core.scheduler import DagScheduler

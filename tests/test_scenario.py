@@ -1,0 +1,179 @@
+"""Scenario spec: YAML round-trip, all three modes, versioned result
+schema, arrival-process determinism, and equivalence with the deprecated
+Orchestrator shim."""
+import dataclasses
+
+import pytest
+
+from repro.bench import (BurstyArrivals, FixedSpacing, PoissonArrivals,
+                         SCHEMA_VERSION, Scenario, ScenarioApp, make_arrival)
+from repro.core.apps import make_app
+from repro.core.orchestrator import Orchestrator
+from repro.core.slo import SLO
+from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+
+SCENARIO_YAML = """
+name: roundtrip
+mode: concurrent
+policy: slo_aware
+total_chips: 128
+chip: tpu-v5p
+chunk_target_s: 0.02
+seed: 7
+apps:
+  - app: chatbot
+    name: Chat
+    num_requests: 4
+    slo: {ttft: 1.0, tpot: 0.25}
+  - app: live_captions
+    num_requests: 6
+    arrival: {kind: poisson, rate_per_s: 2.0}
+  - app: deep_research
+    num_requests: 1
+    background: true
+    kv_cache: host
+"""
+
+
+# ---------------------------------------------------------- round trip
+def test_yaml_round_trip():
+    sc = Scenario.from_yaml(SCENARIO_YAML)
+    assert sc.policy == "slo_aware"
+    assert sc.apps[0].slo == SLO(ttft=1.0, tpot=0.25)
+    assert sc.apps[1].arrival == PoissonArrivals(rate_per_s=2.0)
+    assert sc.apps[2].kv_cache_on_host and sc.apps[2].background
+    sc2 = Scenario.from_yaml(sc.to_yaml())
+    assert sc2 == sc
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown scenario mode"):
+        Scenario(mode="sideways")
+
+
+def test_unknown_policy_fails_at_run():
+    sc = Scenario(mode="concurrent", policy="nope",
+                  apps=[ScenarioApp("chatbot", num_requests=1)])
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        sc.run()
+
+
+# -------------------------------------------------------------- modes
+def _small(mode, policy="greedy", chips=32):
+    return Scenario(name="t", mode=mode, policy=policy, total_chips=chips,
+                    apps=[ScenarioApp("chatbot", num_requests=2),
+                          ScenarioApp("live_captions", num_requests=3)])
+
+
+def test_exclusive_mode_runs_each_app_alone():
+    res = _small("exclusive").run()
+    assert set(res.sims) == {"chatbot", "live_captions"}
+    assert res.report("chatbot").attainment == 1.0
+    with pytest.raises(ValueError):
+        res.sim  # ambiguous in exclusive mode
+
+
+def test_concurrent_mode_matches_orchestrator_shim():
+    res = _small("concurrent").run()
+    apps = [make_app("chatbot"), make_app("live_captions")]
+    legacy = Orchestrator(total_chips=32, strategy="greedy").run_concurrent(
+        apps, {"chatbot": 2, "live_captions": 3})
+    assert res.sim.summary() == legacy.summary()
+
+
+def test_workflow_mode_matches_orchestrator_shim():
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    res = Scenario(mode="workflow", policy="static", workflow=wf,
+                   total_chips=256).run()
+    legacy = Orchestrator(total_chips=256, strategy="static").run_workflow(wf)
+    assert res.e2e_s == pytest.approx(legacy.e2e_s, rel=1e-9)
+    assert res.node_finish_s == legacy.node_finish_s
+    assert res.report("generate_captions").attainment == \
+        legacy.sim.reports["generate_captions"].attainment
+
+
+def test_workflow_mode_requires_spec():
+    with pytest.raises(ValueError, match="workflow"):
+        Scenario(mode="workflow").run()
+
+
+def test_workflow_scenario_round_trips_through_yaml():
+    """Regression: a WorkflowSpec-valued workflow used to serialize as
+    None, so workflow to_json() documents could not reproduce the run."""
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    sc = Scenario(mode="workflow", policy="greedy", total_chips=256,
+                  workflow=wf)
+    sc2 = Scenario.from_yaml(sc.to_yaml())
+    assert sc2.workflow is not None
+    r1, r2 = sc.run(), sc2.run()
+    assert r2.e2e_s == pytest.approx(r1.e2e_s, rel=1e-9)
+    assert r2.node_finish_s == r1.node_finish_s
+
+
+# ------------------------------------------------------- result schema
+def test_to_json_versioned_schema():
+    res = _small("concurrent", policy="weighted_fair").run()
+    doc = res.to_json()
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert doc["scenario"]["policy"] == "weighted_fair"
+    assert doc["scenario"]["chip"] == "tpu-v5e"
+    summary = doc["results"]["concurrent"]
+    assert set(summary) >= {"strategy", "makespan_s", "utilization",
+                            "energy_kj", "apps"}
+    assert set(summary["apps"]) == {"chatbot", "live_captions"}
+    # reconstructable: the embedded scenario re-runs to the same numbers
+    again = Scenario.from_dict(doc["scenario"]).run().to_json()
+    assert again == doc
+
+
+# --------------------------------------------------- arrival processes
+def test_fixed_spacing_times():
+    assert FixedSpacing(2.0).times(3, start_s=1.0) == [1.0, 3.0, 5.0]
+
+
+def test_poisson_deterministic_under_seed():
+    p = PoissonArrivals(rate_per_s=4.0)
+    a = p.times(20, seed=3)
+    b = p.times(20, seed=3)
+    c = p.times(20, seed=4)
+    assert a == b
+    assert a != c
+    assert a[0] == 0.0
+    assert all(t1 <= t2 for t1, t2 in zip(a, a[1:]))
+
+
+def test_zero_requests_yield_empty_times():
+    assert PoissonArrivals(1.0).times(0) == []
+    assert FixedSpacing(1.0).times(0) == []
+    assert BurstyArrivals().times(0) == []
+
+
+def test_bursty_shape():
+    t = BurstyArrivals(burst_size=2, burst_gap_s=10.0, intra_gap_s=1.0)
+    assert t.times(5) == [0.0, 1.0, 10.0, 11.0, 20.0]
+
+
+def test_make_arrival_round_trip_and_errors():
+    p = PoissonArrivals(rate_per_s=2.0)
+    assert make_arrival(p.to_dict()) == p
+    assert make_arrival(None) is None
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        make_arrival({"kind": "fractal"})
+
+
+def test_scenario_seed_controls_poisson_arrivals():
+    def run_with(seed):
+        sc = Scenario(mode="concurrent", total_chips=32, seed=seed,
+                      apps=[ScenarioApp(
+                          "live_captions", num_requests=5,
+                          arrival=PoissonArrivals(rate_per_s=1.0))])
+        recs = sc.run().report("live_captions").records
+        return sorted(r.arrival_s for r in recs)
+    assert run_with(1) == run_with(1)
+    assert run_with(1) != run_with(2)
+
+
+def test_arrival_override_reaches_sim_trace():
+    app = make_app("live_captions")
+    trace = app.sim_trace(4, arrival=FixedSpacing(5.0))
+    assert [r.arrival_s for r in trace.requests] == [0.0, 5.0, 10.0, 15.0]

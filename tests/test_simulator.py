@@ -1,6 +1,6 @@
 """Pod-simulator invariants (hypothesis) + paper-finding reproduction."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.apps import make_app
 from repro.core.costs import WorkItem
@@ -24,7 +24,7 @@ def _trace(name, items_per_req, n_req, spacing, flops=1e12, background=False):
 @settings(max_examples=25, deadline=None)
 def test_all_requests_complete(n_apps, n_req, items, strategy):
     traces = [_trace(f"app{i}", items, n_req, 0.5) for i in range(n_apps)]
-    res = PodSimulator(64, strategy=strategy).run(traces)
+    res = PodSimulator(64, policy=strategy).run(traces)
     for t in traces:
         assert len(res.reports[t.name].records) == n_req
         for r in res.reports[t.name].records:
@@ -36,7 +36,7 @@ def test_all_requests_complete(n_apps, n_req, items, strategy):
 def test_work_conservation_greedy(n_apps, n_req):
     """Greedy busy time == sum of item durations (single shared queue)."""
     traces = [_trace(f"app{i}", 3, n_req, 0.0) for i in range(n_apps)]
-    sim = PodSimulator(64, strategy="greedy")
+    sim = PodSimulator(64, policy="greedy")
     res = sim.run(traces)
     busy = sum(u.t1 - u.t0 for u in res.util)
     expect = sum(it.duration_s(64) for t in traces
@@ -48,7 +48,7 @@ def test_work_conservation_greedy(n_apps, n_req):
 @settings(max_examples=10, deadline=None)
 def test_no_overlap_within_partition(n_apps):
     traces = [_trace(f"app{i}", 4, 3, 0.1) for i in range(n_apps)]
-    res = PodSimulator(60, strategy="greedy").run(traces)
+    res = PodSimulator(60, policy="greedy").run(traces)
     samples = sorted(res.util, key=lambda u: u.t0)
     for a, b in zip(samples, samples[1:]):
         assert b.t0 >= a.t1 - 1e-9  # single device: no concurrent items
@@ -56,7 +56,7 @@ def test_no_overlap_within_partition(n_apps):
 
 def test_static_partition_chips_sum():
     traces = [_trace(f"app{i}", 2, 2, 0.0) for i in range(3)]
-    res = PodSimulator(60, strategy="static").run(traces)
+    res = PodSimulator(60, policy="static").run(traces)
     assert all(u.busy_chips == 20 for u in res.util)
 
 

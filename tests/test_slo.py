@@ -1,6 +1,6 @@
 """SLO parsing + attainment accounting (hypothesis property tests)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.slo import SLO, RequestRecord, SLOReport, _seconds
 
