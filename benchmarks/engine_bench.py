@@ -1,9 +1,12 @@
 """Engine-level benchmark: chunked prefill vs fcfs decode-stall (real JAX
 execution on a reduced model with a virtual cost clock) — the engine-level
-view of the paper's starvation finding."""
+view of the paper's starvation finding — plus dispatch accounting for the
+batched-prefill hot path (one ``prefill_chunk`` dispatch per chunk vs the
+token-stepped baseline's one ``decode_step`` dispatch per prompt token)."""
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import numpy as np
@@ -15,6 +18,33 @@ from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
 
 
+def _dispatch_case(model, params, cfg, *, prompt_len: int = 64,
+                   chunk: int = 16) -> str:
+    """Jitted model dispatches per request for prompt_len/chunk.
+
+    The token-stepped seed issued ``prompt_len`` prefill dispatches (one
+    decode_step per token); batched chunked prefill issues
+    ``ceil(prompt_len/chunk)``."""
+    def cost(kind, tokens):
+        return {"prefill": 0.001 * tokens, "decode": 0.001}[kind]
+
+    eng = InferenceEngine(model, max_slots=2, max_seq=prompt_len + 16,
+                          policy="chunked", prefill_chunk=chunk,
+                          step_cost_s=cost)
+    eng.load_params(params)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size,
+                                       prompt_len).astype(np.int32),
+                       4, arrival_s=0.0))
+    eng.run()
+    got = eng.stats.prefill_dispatches
+    baseline = prompt_len  # seed: one jitted decode_step per prompt token
+    assert got <= math.ceil(prompt_len / chunk), (got, prompt_len, chunk)
+    return row(f"engine_dispatch_p{prompt_len}_c{chunk}", float(got),
+               f"prefill_dispatches={got};token_stepped_baseline={baseline};"
+               f"ratio={baseline / got:.1f};decode_syncs={eng.stats.decode_syncs}")
+
+
 def run() -> list[str]:
     cfg = dataclasses.replace(CONFIGS["tinyllama-1.1b"].reduced(),
                               num_layers=2)
@@ -24,7 +54,7 @@ def run() -> list[str]:
     def cost(kind, tokens):
         return {"prefill": 0.01 * tokens, "decode": 0.002}[kind]
 
-    rows = []
+    rows = [_dispatch_case(model, params, cfg)]
     for policy in ("fcfs", "chunked", "slo_aware"):
         eng = InferenceEngine(model, max_slots=2, max_seq=192, policy=policy,
                               prefill_chunk=8, step_cost_s=cost)

@@ -1,13 +1,15 @@
 """Kernel microbenchmarks (paper §4.1's per-kernel analysis analogue):
 real wall time of the jnp lowering on CPU + analytic v5e roofline time for
-the Pallas kernel's tile schedule."""
+the Pallas kernel's tile schedule, plus the roofline autotuner's chosen
+block configs (kernels/autotune.py) so BENCH_kernels.json records the
+tuned schedule alongside the timings."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_call
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.models.attention import decode_attention_jnp, flash_attention_jnp
 from repro.roofline.hw import TPU_V5E
 
@@ -61,6 +63,30 @@ def run() -> list[str]:
     flops = 2.0 * m * qq * qq * (hh * p + n)
     rows.append(row(f"kernel_ssd_m{m}q{qq}h{hh}", us,
                     f"v5e_roofline_us={flops / TPU_V5E.peak_flops_bf16 * 1e6:.3f}"))
+
+    # autotuner: chosen block configs + roofline estimates per shape bucket
+    for kernel, shape in [
+        ("decode_attention", {"b": 4, "kv": 4, "g": 2, "s": 2048, "d": 64}),
+        ("decode_attention", {"b": 1, "kv": 8, "g": 4, "s": 32768, "d": 128}),
+        ("flash_attention", {"b": 1, "h": 8, "kv": 4, "sq": 4096,
+                             "skv": 4096, "d": 64, "causal": True}),
+        ("ssd_chunk_scan", {"m": 8, "q": 256, "h": 64, "p": 64, "n": 128}),
+    ]:
+        blocks = autotune.best_config(kernel, shape)
+        est = autotune.roofline_estimate(kernel, shape, blocks) * 1e6
+        desc = "-".join(f"{k}{v}" for k, v in sorted(shape.items()))
+        cfgs = ";".join(f"{k}={v}" for k, v in sorted(blocks.items()))
+        rows.append(row(f"autotune_{kernel}_{desc}", est,
+                        f"{cfgs};v5e_roofline_us={est:.2f}"))
+
+    # roofline-verified decode batch per app model (ROADMAP item): the batch
+    # where the target chip crosses from HBM-bound to compute-bound
+    from repro.configs.registry import CONFIGS
+    from repro.distributed.autotune import best_batch_size
+    for arch in ("tinyllama-1.1b", "qwen3-14b", "mamba2-1.3b"):
+        b = best_batch_size(CONFIGS[arch])
+        rows.append(row(f"autotune_batch_{arch}", float(b),
+                        f"roofline_decode_batch={b}"))
     return rows
 
 

@@ -3,12 +3,39 @@
 #   python benchmarks/run.py            # full measurement run
 #   python benchmarks/run.py --smoke    # tiny request counts: CI import check
 #   python benchmarks/run.py --only fig5_concurrent,fig7_workflow
+#   python benchmarks/run.py --smoke --only kernel_bench,engine_bench \
+#       --json BENCH_kernels.json       # CI perf-trajectory artifact
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def _write_json(path: str, suites: list[tuple[str, list[str]]],
+                smoke: bool) -> None:
+    """Versioned bench document (the perf trajectory CI uploads per PR)."""
+    entries = []
+    for suite, lines in suites:
+        for line in lines:
+            name, us, derived = line.split(",", 2)
+            entries.append({"suite": suite, "name": name,
+                            "us_per_call": float(us), "derived": derived})
+    doc = {
+        "version": BENCH_SCHEMA_VERSION,
+        "smoke": smoke,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "entries": entries,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(entries)} entries to {path}", file=sys.stderr)
 
 
 def main(argv=None) -> None:
@@ -18,6 +45,9 @@ def main(argv=None) -> None:
                          "(fast import-and-run check, not a measurement)")
     ap.add_argument("--only", default="",
                     help="comma-separated suite names to run")
+    ap.add_argument("--json", default="",
+                    help="also write collected rows to this path as a "
+                         "versioned JSON document (perf-trajectory artifact)")
     args = ap.parse_args(argv)
 
     from benchmarks import common
@@ -49,16 +79,22 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     failures = []
+    collected: list[tuple[str, list[str]]] = []
     for name, fn in suites:
         t0 = time.time()
+        lines: list[str] = []
+        collected.append((name, lines))  # keep partial rows on failure
         try:
             for line in fn():
                 print(line, flush=True)
+                lines.append(line)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             print(f"{name}_FAILED,0.0,{e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        _write_json(args.json, collected, args.smoke)
     if failures:
         sys.exit(1)
 

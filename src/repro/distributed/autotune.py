@@ -15,6 +15,10 @@ cells and hurts others:
 from __future__ import annotations
 
 from repro.configs.base import ModelConfig
+# Batch-size selection is folded into the roofline-verified kernel autotuner
+# (same analytic chip model, same cache machinery); re-exported here so the
+# launcher keeps a single "what config should this cell run" import.
+from repro.kernels.autotune import roofline_batch_size as best_batch_size  # noqa: F401
 
 
 def best_hints(cfg: ModelConfig, kind: str) -> tuple[dict, str]:

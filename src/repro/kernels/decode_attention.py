@@ -8,6 +8,15 @@ attention for all G query heads of a KV head into ONE kernel: grid
 scratch, and the per-row valid length read from SMEM — one launch instead of
 O(S/page) launches, MXU-aligned (G×d by d×S_tile products).
 
+Rotary embedding is fused: when ``rope_theta`` is given, the query is rotated
+in-kernel at position ``lengths - 1`` (the new token's absolute position), so
+decode needs no separate RoPE launch before attention. Cached keys are
+already rotated at write time, so only q needs the rotation here.
+
+Non-divisible sequence lengths are handled by padding the KV cache up to the
+next ``s_block`` multiple — padded positions sit beyond every row's valid
+length and are masked by the online softmax, so the result is exact.
+
 Layout: q (B, H, d); k/v (B, KV, S, d); lengths (B,) int32.
 """
 from __future__ import annotations
@@ -23,8 +32,23 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _rope_rotate(q, position, theta: float):
+    """Rotate (G, d) query rows to ``position`` (scalar int32) in-kernel."""
+    g, d = q.shape
+    half = d // 2
+    idx = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)
+    inv = jnp.exp(idx * (-2.0 / d) * math.log(theta))        # theta^(-2i/d)
+    ang = position.astype(jnp.float32) * inv                 # (1, half)
+    sin = jnp.sin(ang)
+    cos = jnp.cos(ang)
+    q1 = q[:, :half]
+    q2 = q[:, half:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=1)
+
+
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, s_block: int, num_s_steps: int, g: int):
+            scale: float, s_block: int, num_s_steps: int, g: int,
+            rope_theta: float | None):
     b = pl.program_id(0)
     sj = pl.program_id(2)
 
@@ -38,7 +62,10 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(sj * s_block < length)
     def _step():
-        q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, d)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, d)
+        if rope_theta is not None:
+            q = _rope_rotate(q, length - 1, rope_theta)
+        q = q * scale
         k = k_ref[0, 0].astype(jnp.float32)                  # (sb, d)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G, sb)
@@ -61,21 +88,36 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                        jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("s_block", "interpret"))
-def decode_attention(q, k, v, lengths, *, s_block: int = 512,
+@functools.partial(jax.jit, static_argnames=("s_block", "rope_theta",
+                                             "interpret"))
+def decode_attention(q, k, v, lengths, *, s_block: int | None = None,
+                     rope_theta: float | None = None,
                      interpret: bool = False):
-    """q: (B, H, d); k/v: (B, KV, S, d); lengths: (B,) -> (B, H, d)."""
+    """q: (B, H, d); k/v: (B, KV, S, d); lengths: (B,) -> (B, H, d).
+
+    ``s_block=None`` consults the roofline autotuner (kernels/autotune.py).
+    ``rope_theta``: fuse rotary embedding of q at position ``lengths - 1``.
+    """
     b, h, d = q.shape
     kv, s = k.shape[1], k.shape[2]
     g = h // kv
+    if s_block is None:
+        from repro.kernels import autotune
+        s_block = autotune.best_config(
+            "decode_attention",
+            {"b": b, "kv": kv, "g": g, "s": s, "d": d})["s_block"]
     s_block = min(s_block, s)
-    assert s % s_block == 0
+    if s % s_block:  # pad KV up to a block multiple; padding is masked
+        pad = s_block - s % s_block
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s = s + pad
     ns = s // s_block
     scale = 1.0 / math.sqrt(d)
 
     qg = q.reshape(b, kv, g, d)
     kernel = functools.partial(_kernel, scale=scale, s_block=s_block,
-                               num_s_steps=ns, g=g)
+                               num_s_steps=ns, g=g, rope_theta=rope_theta)
     out = pl.pallas_call(
         kernel,
         grid=(b, kv, ns),

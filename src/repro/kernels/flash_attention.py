@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import largest_divisor as _largest_divisor
+
 NEG_INF = -1e30
 
 
@@ -68,15 +70,28 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
-                    kv_block: int = 128, interpret: bool = False):
-    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d) -> (B, H, Sq, d)."""
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_block: int | None = None, kv_block: int | None = None,
+                    interpret: bool = False):
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d) -> (B, H, Sq, d).
+
+    ``q_block``/``kv_block`` default to the roofline autotuner's choice;
+    non-divisible sequence lengths fall back to the largest valid divisor
+    instead of asserting.
+    """
     b, h, sq, d = q.shape
     kv, skv = k.shape[1], k.shape[2]
     g = h // kv
-    q_block = min(q_block, sq)
-    kv_block = min(kv_block, skv)
-    assert sq % q_block == 0 and skv % kv_block == 0
+    if q_block is None or kv_block is None:
+        from repro.kernels import autotune
+        blocks = autotune.best_config(
+            "flash_attention",
+            {"b": b, "h": h, "kv": kv, "sq": sq, "skv": skv, "d": d,
+             "causal": causal})
+        q_block = q_block or blocks["q_block"]
+        kv_block = kv_block or blocks["kv_block"]
+    q_block = _largest_divisor(sq, min(q_block, sq))
+    kv_block = _largest_divisor(skv, min(kv_block, skv))
     nq, nk = sq // q_block, skv // kv_block
     scale = 1.0 / math.sqrt(d)
 

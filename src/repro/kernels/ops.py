@@ -50,15 +50,20 @@ def attention_prefill(q, k, v, *, causal: bool = True):
     return o.transpose(0, 2, 1, 3)
 
 
-def attention_decode(q, k_cache, v_cache, lengths):
-    """q: (B, 1, H, d); caches: (B, S, KV, d); lengths (B,) -> (B, 1, H, d)."""
+def attention_decode(q, k_cache, v_cache, lengths, rope_theta=None):
+    """q: (B, 1, H, d); caches: (B, S, KV, d); lengths (B,) -> (B, 1, H, d).
+
+    ``rope_theta``: fuse the query rotation (at position ``lengths - 1``)
+    into the attention — no separate RoPE launch on the decode path."""
     be = backend()
     if be == "jnp":
         from repro.models.attention import decode_attention_jnp
-        return decode_attention_jnp(q, k_cache, v_cache, lengths)
+        return decode_attention_jnp(q, k_cache, v_cache, lengths,
+                                    rope_theta=rope_theta)
     kT = k_cache.transpose(0, 2, 1, 3)
     vT = v_cache.transpose(0, 2, 1, 3)
     o = _pallas_decode(q[:, 0], kT, vT, jnp.asarray(lengths, jnp.int32),
+                       rope_theta=rope_theta,
                        interpret=(be == "interpret"))
     return o[:, None]
 

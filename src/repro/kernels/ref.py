@@ -30,11 +30,28 @@ def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) ->
     return o.reshape(b, h, sq, d).astype(q.dtype)
 
 
-def decode_attention_ref(q: Array, k: Array, v: Array, lengths: Array) -> Array:
-    """q: (B, H, d); k/v: (B, KV, S, d); lengths: (B,). -> (B, H, d)."""
+def rope_ref(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding oracle. x: (..., d); positions broadcastable to
+    x.shape[:-1]. Mirrors models.layers.apply_rope's split-halves layout."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, lengths: Array,
+                         rope_theta: float | None = None) -> Array:
+    """q: (B, H, d); k/v: (B, KV, S, d); lengths: (B,). -> (B, H, d).
+
+    ``rope_theta``: rotate q at position ``lengths - 1`` before attending
+    (the fused-RoPE decode contract — cached k is already rotated)."""
     b, h, d = q.shape
     kv, s = k.shape[1], k.shape[2]
     g = h // kv
+    if rope_theta is not None:
+        q = rope_ref(q, (lengths - 1)[:, None], rope_theta).astype(q.dtype)
     qg = q.reshape(b, kv, g, d).astype(jnp.float32)
     scale = 1.0 / math.sqrt(d)
     logits = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) * scale

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.autotune import largest_divisor as _largest_divisor
+
 
 def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *,
             q: int, hb: int, p: int, n: int):
@@ -50,16 +52,22 @@ def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
-def ssd_chunk_scan(x, dt, cum, b_, c_, *, head_block: int = 8,
+def ssd_chunk_scan(x, dt, cum, b_, c_, *, head_block: int | None = None,
                    interpret: bool = False):
     """x: (M, Q, H, P); dt/cum: (M, Q, H); b_/c_: (M, Q, N).
 
-    Returns (y (M, Q, H, P), state (M, H, P, N)).
+    Returns (y (M, Q, H, P), state (M, H, P, N)). ``head_block=None``
+    consults the roofline autotuner; a head count not divisible by the block
+    falls back to the largest valid divisor instead of asserting.
     """
     m, q, h, p = x.shape
     n = b_.shape[-1]
-    hb = min(head_block, h)
-    assert h % hb == 0
+    if head_block is None:
+        from repro.kernels import autotune
+        head_block = autotune.best_config(
+            "ssd_chunk_scan",
+            {"m": m, "q": q, "h": h, "p": p, "n": n})["head_block"]
+    hb = _largest_divisor(h, min(head_block, h))
     nh = h // hb
 
     kernel = functools.partial(_kernel, q=q, hb=hb, p=p, n=n)

@@ -129,17 +129,26 @@ def flash_attention_jnp(q: Array, k: Array, v: Array, *, causal: bool = True,
 
 
 def decode_attention_jnp(q: Array, k_cache: Array, v_cache: Array,
-                         length: Array) -> Array:
+                         length: Array,
+                         rope_theta: float | None = None) -> Array:
     """Single-token decode attention against a (possibly seq-sharded) cache.
 
     q: (B, 1, H, d); caches: (B, S, KV, d); length: () or (B,) valid prefix.
     Softmax reductions run over the full S axis, so when S is sharded
     (long-context SP) XLA lowers max/sum to all-reduces — flash-decode
     combine for free.
+
+    ``rope_theta``: rotate q at position ``length - 1`` in here (fused-RoPE
+    decode contract; cached keys are already rotated at write time), so the
+    caller issues no separate RoPE op on the decode hot path.
     """
     b, _, h, d = q.shape
     kv = k_cache.shape[2]
     s = k_cache.shape[1]
+    if rope_theta is not None:
+        from repro.models import layers
+        pos = jnp.reshape(jnp.asarray(length), (-1,))[:, None] - 1  # (B|1, 1)
+        q = layers.apply_rope(q, pos, rope_theta)
     qg = _split_gqa(q, kv)[:, 0].astype(jnp.float32)  # (B, KV, G, d)
     scale = 1.0 / math.sqrt(d)
     logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) * scale

@@ -159,14 +159,14 @@ def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
 
 
 def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
-                cfg: ModelConfig):
+                cfg: ModelConfig, active: Array | None = None):
     x = layers.embed(params["embedding"], tokens)
 
     def body(x, inp):
         lp, kc, vc, ck, cv = inp
         h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         out, (kc, vc) = transformer.attention_decode_block(
-            lp["self_attn"], h, cfg, kc, vc, lengths)
+            lp["self_attn"], h, cfg, kc, vc, lengths, active=active)
         x = x + out
         hx = layers.rmsnorm(x, lp["lnx"], cfg.norm_eps)
         q = jnp.einsum("bsd,dhe->bshe", hx, lp["cross_attn"]["wq"])
@@ -186,3 +186,22 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
     logits = layers.unembed(x, params["lm_head"], transpose=False)
     return logits[:, 0], {"k": k, "v": v, "cross_k": cache["cross_k"],
                           "cross_v": cache["cross_v"]}
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
+                  cfg: ModelConfig, active: Array | None = None):
+    """Chunked prefill for the enc-dec decoder: a ``lax.scan`` over the C
+    chunk tokens re-using :func:`decode_step` — exact token-stepped
+    semantics, but ONE jitted dispatch per chunk (the scan is a single XLA
+    while-loop) instead of C separate decode launches.
+    """
+    def step(carry, tok):
+        cur_cache, ln = carry
+        logits, cur_cache = decode_step(params, cur_cache, tok[:, None], ln,
+                                        cfg, active=active)
+        inc = 1 if active is None else active.astype(ln.dtype)
+        return (cur_cache, ln + inc), logits
+
+    (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
+                                          tokens.T)
+    return logits.swapaxes(0, 1), new_cache

@@ -84,15 +84,57 @@ class ModelBundle:
                                    embeds=batch.get("embeds"))
 
     def decode_step(self, params: Params, cache: Cache, tokens: Array,
-                    lengths: Array):
+                    lengths: Array, active: Array | None = None):
+        """One decode step for all B rows.
+
+        ``active``: optional (B,) bool slot mask — rows where it is False
+        keep their cache/state bit-identical (mask-isolated decode: the
+        serving engine passes its slot mask instead of saving and restoring
+        per-slot cache slices around every step). The returned cache is cast
+        back to the input cache's dtypes so serving caches never drift
+        upward to f32 across steps.
+        """
         f = self.cfg.family
         if f == "ssm":
-            return mamba_lm.decode_step(params, cache, tokens, lengths, self.cfg)
-        if f == "hybrid":
-            return hybrid.decode_step(params, cache, tokens, lengths, self.cfg)
-        if f == "encdec":
-            return encdec.decode_step(params, cache, tokens, lengths, self.cfg)
-        return transformer.decode_step(params, cache, tokens, lengths, self.cfg)
+            logits, new = mamba_lm.decode_step(params, cache, tokens,
+                                               lengths, self.cfg, active)
+        elif f == "hybrid":
+            logits, new = hybrid.decode_step(params, cache, tokens, lengths,
+                                             self.cfg, active)
+        elif f == "encdec":
+            logits, new = encdec.decode_step(params, cache, tokens, lengths,
+                                             self.cfg, active)
+        else:
+            logits, new = transformer.decode_step(params, cache, tokens,
+                                                  lengths, self.cfg, active)
+        new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
+        return logits, new
+
+    def prefill_chunk(self, params: Params, cache: Cache, tokens: Array,
+                      start_len: Array, active: Array | None = None):
+        """Advance every row's prefill by C tokens in ONE jitted dispatch.
+
+        tokens: (B,C) int32; start_len: (B,) int32 tokens already cached per
+        row; ``active``: optional (B,) bool — inactive rows are untouched.
+        Returns (logits (B,C,V), new_cache). Parity with the token-stepped
+        decode path is pinned per family in tests/test_serving.py.
+        """
+        f = self.cfg.family
+        if f == "ssm":
+            logits, new = mamba_lm.prefill_chunk(params, cache, tokens,
+                                                 start_len, self.cfg, active)
+        elif f == "hybrid":
+            logits, new = hybrid.prefill_chunk(params, cache, tokens,
+                                               start_len, self.cfg, active)
+        elif f == "encdec":
+            logits, new = encdec.prefill_chunk(params, cache, tokens,
+                                               start_len, self.cfg, active)
+        else:
+            logits, new = transformer.prefill_chunk(params, cache, tokens,
+                                                    start_len, self.cfg,
+                                                    active)
+        new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
+        return logits, new
 
     # ---------------------------------------------------------- dry-run IO
     def input_specs(self, shape: ShapeConfig) -> dict:

@@ -68,9 +68,10 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     }
 
 
-def _sub_ffn(sub: dict, x: Array, cfg: ModelConfig):
+def _sub_ffn(sub: dict, x: Array, cfg: ModelConfig,
+             token_mask: Array | None = None):
     if "moe" in sub:
-        return moe.moe_dispatch(sub["moe"], x, cfg)
+        return moe.moe_dispatch(sub["moe"], x, cfg, token_mask)
     return layers.mlp(sub["mlp"], x), jnp.zeros((), jnp.float32)
 
 
@@ -144,7 +145,9 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int):
 
 
 def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
-                cfg: ModelConfig):
+                cfg: ModelConfig, active: Array | None = None):
+    """``active``: optional (B,) bool mask — inactive rows keep both their
+    KV rows (length-masked scatter) and their SSM state (where-mask)."""
     x = layers.embed(params["embedding"], tokens)
     pcount = _period(cfg)
 
@@ -157,15 +160,16 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
             h = layers.rmsnorm(x, sub["ln1"], cfg.norm_eps)
             if _is_attn(cfg, i):
                 out, (kc, vc) = transformer.attention_decode_block(
-                    sub["attn"], h, cfg, kc, vc, lengths)
+                    sub["attn"], h, cfg, kc, vc, lengths, active=active)
             else:
                 st_i = jax.tree.map(lambda a: a[si], states)
-                out, st_i = ssm.ssm_decode_step(sub["ssm"], h, st_i, cfg)
+                out, st_i = ssm.ssm_decode_step(sub["ssm"], h, st_i, cfg,
+                                                active=active)
                 new_states.append(st_i)
                 si += 1
             x = x + out
             h2 = layers.rmsnorm(x, sub["ln2"], cfg.norm_eps)
-            f, _ = _sub_ffn(sub, h2, cfg)
+            f, _ = _sub_ffn(sub, h2, cfg, token_mask=active)
             x = x + f
         stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
         return x, (kc, vc, stacked)
@@ -175,3 +179,47 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
     x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     logits = layers.unembed(x, params["lm_head"], transpose=False)
     return logits[:, 0], {"k": k, "v": v, "ssm": states}
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
+                  cfg: ModelConfig, active: Array | None = None):
+    """Batched chunked prefill across the SSD/attention interleave.
+
+    tokens: (B,C); start_len: (B,). Attention sublayers write the chunk's
+    k/v at per-row offsets (length-masked scatter) and attend over the
+    padded cache; SSD sublayers run one chunked-SSD pass from the cached
+    recurrent state. One jitted dispatch per chunk for the whole stack.
+    """
+    x = layers.embed(params["embedding"], tokens)
+    pcount = _period(cfg)
+
+    def body(x, inp):
+        bp, kc, vc, states = inp
+        new_states = []
+        si = 0
+        for i in range(pcount):
+            sub = bp[f"sub{i}"]
+            h = layers.rmsnorm(x, sub["ln1"], cfg.norm_eps)
+            if _is_attn(cfg, i):
+                out, (kc, vc) = transformer.attention_prefill_chunk_block(
+                    sub["attn"], h, cfg, kc, vc, start_len, active=active)
+            else:
+                st_i = jax.tree.map(lambda a: a[si], states)
+                out, new_st = ssm.ssd_forward(sub["ssm"], h, cfg,
+                                              init_state=st_i)
+                if active is not None:
+                    new_st = ssm.mask_state(new_st, st_i, active)
+                new_states.append(new_st)
+                si += 1
+            x = x + out
+            h2 = layers.rmsnorm(x, sub["ln2"], cfg.norm_eps)
+            f, _ = _sub_ffn(sub, h2, cfg, token_mask=active)
+            x = x + f
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return x, (kc, vc, stacked)
+
+    x, (k, v, states) = layers.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits, {"k": k, "v": v, "ssm": states}

@@ -77,16 +77,44 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int = 0):
 
 
 def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
-                cfg: ModelConfig):
-    """tokens: (B,1). lengths unused (state summarizes the whole prefix)."""
+                cfg: ModelConfig, active: Array | None = None):
+    """tokens: (B,1). lengths unused (state summarizes the whole prefix).
+
+    ``active``: optional (B,) bool mask; inactive rows keep their state
+    (mask-isolated decode for the serving engine)."""
     x = layers.embed(params["embedding"], tokens)
 
     def body(x, inp):
         lp, st = inp
         h = layers.rmsnorm(x, lp["ln"], cfg.norm_eps)
-        out, st = ssm.ssm_decode_step(lp["ssm"], h, st, cfg)
+        out, st = ssm.ssm_decode_step(lp["ssm"], h, st, cfg, active=active)
         return x + out, st
 
     x, new_states = layers.scan(body, x, (params["layers"], cache))
     x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     return _unembed(params, x, cfg)[:, 0], new_states
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
+                  cfg: ModelConfig, active: Array | None = None):
+    """Batched chunked prefill: one SSD pass over C tokens per layer,
+    continuing from the cached recurrent state (``start_len`` is implicit in
+    the state — the SSD recurrence needs no positions).
+
+    tokens: (B,C) -> (logits (B,C,V), new_states). Inactive rows keep their
+    state bit-identical.
+    """
+    del start_len  # state-carrying family: the prefix lives in the state
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, st = inp
+        h = layers.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        out, new_st = ssm.ssd_forward(lp["ssm"], h, cfg, init_state=st)
+        if active is not None:
+            new_st = ssm.mask_state(new_st, st, active)
+        return x + out, new_st
+
+    x, new_states = layers.scan(body, x, (params["layers"], cache))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _unembed(params, x, cfg), new_states

@@ -41,8 +41,16 @@ def capacity(cfg: ModelConfig, num_tokens: int) -> int:
     return max(8, ((c + 7) // 8) * 8)  # pad to 8 for clean tiling
 
 
-def moe_ffn(params: dict, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
-    """x: (B, S, D) -> (y, aux_loss). Aux = load-balance + router z-loss."""
+def moe_ffn(params: dict, x: Array, cfg: ModelConfig,
+            token_mask: Array | None = None) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (y, aux_loss). Aux = load-balance + router z-loss.
+
+    ``token_mask``: optional (B,) bool row mask (the serving engine's
+    active-slot mask). Masked-out rows neither occupy expert capacity nor
+    receive output — without this, the garbage tokens of idle/mid-prefill
+    slots in a mask-isolated decode batch would compete with live slots for
+    capacity and could evict their tokens (cross-slot interference).
+    """
     b, s, d = x.shape
     t = b * s
     k = cfg.num_experts_per_token
@@ -57,9 +65,14 @@ def moe_ffn(params: dict, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
 
     # position of each token inside its expert's capacity buffer
     onehot = jnp.sum(jax.nn.one_hot(eids, e, dtype=jnp.int32), axis=1)  # (T,E) 0/1
+    if token_mask is not None:
+        tok_live = jnp.repeat(token_mask, s)                            # (T,)
+        onehot = onehot * tok_live[:, None].astype(onehot.dtype)
     pos_all = jnp.cumsum(onehot, axis=0) * onehot - 1                   # (T,E)
     pos = jnp.take_along_axis(pos_all, eids, axis=1)                    # (T,k)
     keep = (pos >= 0) & (pos < c)
+    if token_mask is not None:
+        keep = keep & tok_live[:, None]
     pos_c = jnp.clip(pos, 0, c - 1)
 
     # ---- dispatch: k scatters token->expert-buffer (data->model crossing)
@@ -205,9 +218,14 @@ def moe_ffn_shardmap(params: dict, x: Array, cfg: ModelConfig):
     return y, aux
 
 
-def moe_dispatch(params: dict, x: Array, cfg: ModelConfig):
-    """Entry point honoring the hints.moe_impl knob."""
+def moe_dispatch(params: dict, x: Array, cfg: ModelConfig,
+                 token_mask: Array | None = None):
+    """Entry point honoring the hints.moe_impl knob.
+
+    ``token_mask`` (serving active-slot mask) forces the scatter path — the
+    shard_map variant is a train/prefill optimization and never sees decode
+    batches with dead rows (autotune table: shardmap loses on decode)."""
     from repro.distributed import hints
-    if hints.get("moe_impl") == "shardmap":
+    if token_mask is None and hints.get("moe_impl") == "shardmap":
         return moe_ffn_shardmap(params, x, cfg)
-    return moe_ffn(params, x, cfg)
+    return moe_ffn(params, x, cfg, token_mask)

@@ -76,8 +76,10 @@ def ssd_forward(params: dict, x: Array, cfg: ModelConfig,
     ``init_state``: {"ssm": (B,H,P,N), "conv_x": (B,W-1,d_in), ...} or None.
     """
     b, s, d = x.shape
-    q = min(cfg.ssm_chunk, s)
-    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    # largest chunk <= cfg.ssm_chunk that divides S: arbitrary chunk lengths
+    # (serving prefill tails) work instead of asserting on divisibility.
+    from repro.kernels.autotune import largest_divisor
+    q = largest_divisor(s, min(cfg.ssm_chunk, s))
     nc = s // q
     h = cfg.ssm_num_heads
     p = cfg.ssm_head_dim
@@ -156,8 +158,24 @@ def ssd_forward(params: dict, x: Array, cfg: ModelConfig,
     return out, state
 
 
-def ssm_decode_step(params: dict, x: Array, state: dict, cfg: ModelConfig):
-    """Single-token recurrent step. x: (B, 1, D) -> (y, new_state)."""
+def mask_state(new: dict, old: dict, active: Array) -> dict:
+    """Keep ``new`` state only for rows where ``active``; else ``old``.
+
+    Leaves are batch-major (B, ...). This is the recurrent-state analogue of
+    the KV cache's length-masked scatter writes: the serving engine threads
+    one slot mask through the step instead of saving/restoring slices.
+    """
+    def one(n, o):
+        m = active.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o.astype(n.dtype))
+    return jax.tree.map(one, new, old)
+
+
+def ssm_decode_step(params: dict, x: Array, state: dict, cfg: ModelConfig,
+                    active: Array | None = None):
+    """Single-token recurrent step. x: (B, 1, D) -> (y, new_state).
+
+    ``active``: optional (B,) bool mask — inactive rows keep their state."""
     b = x.shape[0]
     h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
 
@@ -182,7 +200,11 @@ def ssm_decode_step(params: dict, x: Array, state: dict, cfg: ModelConfig):
     y = y * jax.nn.silu(z)
     y = layers.rmsnorm(y, params["gate_norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
-    return out, {"ssm": s_new, "conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c}
+    new_state = {"ssm": s_new, "conv_x": conv_x, "conv_B": conv_b,
+                 "conv_C": conv_c}
+    if active is not None:
+        new_state = mask_state(new_state, state, active)
+    return out, new_state
 
 
 def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:

@@ -71,14 +71,18 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 # ----------------------------------------------------------------- pieces
 
-def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array,
+                 rope_q: bool = True):
+    """``rope_q=False``: leave q un-rotated — the fused-RoPE decode kernel
+    applies the rotation in-kernel (k is always rotated before caching)."""
     q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
     k = jnp.einsum("bsd,dke->bske", x, p["wk"])
     v = jnp.einsum("bsd,dke->bske", x, p["wv"])
     if cfg.use_qk_norm:
         q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
         k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
-    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    if rope_q:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
     k = layers.apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
 
@@ -135,50 +139,123 @@ def _quantize_kv(t: Array) -> tuple[Array, Array]:
 def attention_decode_block(p: dict, x: Array, cfg: ModelConfig,
                            k_cache: Array, v_cache: Array, lengths: Array,
                            k_scale: Array | None = None,
-                           v_scale: Array | None = None):
+                           v_scale: Array | None = None,
+                           active: Array | None = None):
     """One-token attention against a cache.
 
     x: (B,1,D); caches: (B,S,KV,hd) bf16 — or int8 with per-(B,S,KV) scales
     (hillclimb hint ``kv_cache_dtype=int8``: halves decode cache traffic).
     Writes the new k/v at position ``lengths``, attends over ``lengths+1``.
+
+    ``active``: optional (B,) bool slot mask. Inactive rows write nothing —
+    their write position is pushed past the cache end so the ``mode="drop"``
+    scatter discards it (length-masked writes: zero extra copies, unlike the
+    old per-slot save/restore). Their outputs are garbage and must be
+    ignored by the caller. RoPE on q is fused into the decode attention
+    (ops.attention_decode / decode_attention_jnp), not a separate op here.
     """
     positions = lengths[:, None]  # (B,1) absolute position of the new token
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, rope_q=False)
 
     b = x.shape[0]
+    s = k_cache.shape[1]
     bidx = jnp.arange(b)
+    w_pos = lengths if active is None else \
+        jnp.where(active, lengths, jnp.int32(s))
     int8_kv = k_scale is not None
     if int8_kv:
         kq, ks = _quantize_kv(k[:, 0])
         vq, vs = _quantize_kv(v[:, 0])
-        k_cache = k_cache.at[bidx, lengths].set(kq, mode="drop")
-        v_cache = v_cache.at[bidx, lengths].set(vq, mode="drop")
-        k_scale = k_scale.at[bidx, lengths].set(ks, mode="drop")
-        v_scale = v_scale.at[bidx, lengths].set(vs, mode="drop")
+        k_cache = k_cache.at[bidx, w_pos].set(kq, mode="drop")
+        v_cache = v_cache.at[bidx, w_pos].set(vq, mode="drop")
+        k_scale = k_scale.at[bidx, w_pos].set(ks, mode="drop")
+        v_scale = v_scale.at[bidx, w_pos].set(vs, mode="drop")
         k_full = (k_cache.astype(jnp.bfloat16) *
                   k_scale[..., None].astype(jnp.bfloat16))
         v_full = (v_cache.astype(jnp.bfloat16) *
                   v_scale[..., None].astype(jnp.bfloat16))
     else:
-        k_cache = k_cache.at[bidx, lengths].set(
+        k_cache = k_cache.at[bidx, w_pos].set(
             k[:, 0].astype(k_cache.dtype), mode="drop")
-        v_cache = v_cache.at[bidx, lengths].set(
+        v_cache = v_cache.at[bidx, w_pos].set(
             v[:, 0].astype(v_cache.dtype), mode="drop")
         k_full, v_full = k_cache, v_cache
     from repro.kernels import ops
     if ops.backend() != "jnp":
-        o = ops.attention_decode(q, k_full, v_full, lengths + 1)
+        o = ops.attention_decode(q, k_full, v_full, lengths + 1,
+                                 rope_theta=cfg.rope_theta)
     else:
-        o = decode_attention_jnp(q, k_full, v_full, lengths + 1)
+        o = decode_attention_jnp(q, k_full, v_full, lengths + 1,
+                                 rope_theta=cfg.rope_theta)
     out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
     if int8_kv:
         return out, (k_cache, v_cache, k_scale, v_scale)
     return out, (k_cache, v_cache)
 
 
-def _ffn(p: dict, x: Array, cfg: ModelConfig):
+def attention_prefill_chunk_block(p: dict, x: Array, cfg: ModelConfig,
+                                  k_cache: Array, v_cache: Array,
+                                  start_len: Array,
+                                  k_scale: Array | None = None,
+                                  v_scale: Array | None = None,
+                                  active: Array | None = None):
+    """Chunked-prefill attention: C new tokens against cache + themselves.
+
+    x: (B,C,D); caches: (B,S,KV,hd); start_len: (B,) tokens already in the
+    cache per row. Writes the chunk's k/v at ``start_len .. start_len+C-1``
+    (length-masked scatter; inactive rows dropped, same contract as
+    :func:`attention_decode_block`) and attends causally over the whole
+    padded cache — ONE dispatch for the whole chunk instead of C.
+    """
+    b, c, _ = x.shape
+    s = k_cache.shape[1]
+    positions = start_len[:, None] + jnp.arange(c)[None, :]       # (B,C)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    w_start = start_len if active is None else \
+        jnp.where(active, start_len, jnp.int32(s))
+    w_pos = w_start[:, None] + jnp.arange(c)[None, :]             # (B,C)
+    bidx = jnp.arange(b)[:, None]
+    int8_kv = k_scale is not None
+    if int8_kv:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = k_cache.at[bidx, w_pos].set(kq, mode="drop")
+        v_cache = v_cache.at[bidx, w_pos].set(vq, mode="drop")
+        k_scale = k_scale.at[bidx, w_pos].set(ks, mode="drop")
+        v_scale = v_scale.at[bidx, w_pos].set(vs, mode="drop")
+        k_full = (k_cache.astype(jnp.bfloat16) *
+                  k_scale[..., None].astype(jnp.bfloat16))
+        v_full = (v_cache.astype(jnp.bfloat16) *
+                  v_scale[..., None].astype(jnp.bfloat16))
+    else:
+        k_cache = k_cache.at[bidx, w_pos].set(
+            k.astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[bidx, w_pos].set(
+            v.astype(v_cache.dtype), mode="drop")
+        k_full, v_full = k_cache, v_cache
+
+    kvh = k_full.shape[2]
+    g = cfg.num_heads // kvh
+    qg = q.reshape(b, c, kvh, g, -1).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bckgd,bskd->bkgcs", qg,
+                        k_full.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr, v_full.astype(jnp.float32))
+    o = o.reshape(b, c, cfg.num_heads, -1).astype(x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    if int8_kv:
+        return out, (k_cache, v_cache, k_scale, v_scale)
+    return out, (k_cache, v_cache)
+
+
+def _ffn(p: dict, x: Array, cfg: ModelConfig,
+         token_mask: Array | None = None):
     if cfg.is_moe:
-        return moe.moe_dispatch(p, x, cfg)
+        return moe.moe_dispatch(p, x, cfg, token_mask)
     return layers.mlp(p, x), jnp.zeros((), jnp.float32)
 
 
@@ -275,10 +352,13 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int,
 
 
 def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
-                cfg: ModelConfig):
+                cfg: ModelConfig, active: Array | None = None):
     """One decode step. tokens: (B,1); lengths: (B,).
 
-    Returns (logits (B, V), new_cache).
+    Returns (logits (B, V), new_cache). ``active``: optional (B,) bool mask;
+    inactive rows leave the cache untouched (mask-isolated decode — the
+    serving engine threads its slot mask here instead of saving/restoring
+    per-slot cache slices around every step).
     """
     x = layers.embed(params["embedding"], tokens)
     int8_kv = "k_scale" in cache
@@ -291,10 +371,11 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
             ks = vs = None
         h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         attn_out, caches = attention_decode_block(lp["attn"], h, cfg,
-                                                  kc, vc, lengths, ks, vs)
+                                                  kc, vc, lengths, ks, vs,
+                                                  active=active)
         x = x + attn_out
         h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
-        ffn_out, _ = _ffn(lp["ffn"], h2, cfg)
+        ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)
         x = x + ffn_out
         return x, caches
 
@@ -314,3 +395,49 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
     else:
         logits = layers.unembed(x, params["lm_head"], transpose=False)
     return logits[:, 0], new_cache
+
+
+def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
+                  cfg: ModelConfig, active: Array | None = None):
+    """Batched chunked prefill: advance every row by C tokens in ONE pass.
+
+    tokens: (B,C); start_len: (B,) tokens already cached per row. Returns
+    (logits (B,C,V), new_cache). Replaces the serving engine's
+    token-at-a-time prefill loop (C jitted dispatches) with one dispatch;
+    parity with the token-stepped path is pinned in tests/test_serving.py.
+    Rows with ``active=False`` keep their cache bit-identical.
+    """
+    x = layers.embed(params["embedding"], tokens)
+    int8_kv = "k_scale" in cache
+
+    def body(x, inp):
+        if int8_kv:
+            lp, kc, vc, ks, vs = inp
+        else:
+            lp, kc, vc = inp
+            ks = vs = None
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, caches = attention_prefill_chunk_block(
+            lp["attn"], h, cfg, kc, vc, start_len, ks, vs, active=active)
+        x = x + attn_out
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)
+        x = x + ffn_out
+        return x, caches
+
+    if int8_kv:
+        x, (k_new, v_new, ks_new, vs_new) = layers.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": k_new, "v": v_new, "k_scale": ks_new,
+                     "v_scale": vs_new}
+    else:
+        x, (k_new, v_new) = layers.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embedding"], transpose=True)
+    else:
+        logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits, new_cache

@@ -16,9 +16,19 @@ interleaving). With the shipped policies:
                (the fix the paper's §5.2 calls for; BEYOND-PAPER here).
   slo_aware  — chunked + earliest-deadline-first admission.
 
-Slot isolation: prefill and state-restore operate on batch-1 cache slices
-(ModelBundle.slice_cache/set_cache_slice) so recurrent families (SSM/hybrid)
-never leak state across slots. Works on every ModelBundle family.
+Hot-path structure (the dispatch-bound seed loop is gone):
+
+  * **Batched chunked prefill** — one ``ModelBundle.prefill_chunk`` dispatch
+    per chunk (``stats.prefill_dispatches``), not one ``decode_step`` per
+    prompt *token*.
+  * **Mask-isolated decode** — ONE full-batch ``decode_step`` per engine
+    step with an ``active`` slot mask threaded into the cache update
+    (length-masked scatter writes / state where-masks inside the model), so
+    mid-prefill and idle slots are never written — no O(slots) per-step
+    slice/restore device copies.
+  * **Host-mirrored lengths** — per-slot lengths live in a numpy array
+    (shipped to device per dispatch); the decode loop performs exactly one
+    host sync per step, the argmax fetch (``stats.decode_syncs``).
 
 Time can be virtual: pass ``step_cost_s(kind, tokens)`` and the engine
 advances its own clock — deterministic tests + pod-scale what-ifs on CPU.
@@ -44,6 +54,8 @@ class EngineStats:
     decode_tokens: int = 0
     prefill_tokens: int = 0
     max_decode_gap_s: float = 0.0
+    prefill_dispatches: int = 0   # jitted prefill_chunk calls (≤ ceil(P/C))
+    decode_syncs: int = 0         # host-device syncs in the decode loop
 
 
 class InferenceEngine:
@@ -68,18 +80,36 @@ class InferenceEngine:
         self.params = None
         self.cache = self.model.init_cache(max_slots, max_seq)
         self._fresh_slot = self.model.init_cache(1, max_seq)
-        self.lengths = jnp.zeros((max_slots,), jnp.int32)
+        # host mirror: no device sync ever needed to READ a slot's length.
+        # COPY-ON-WRITE invariant: jnp.asarray may zero-copy ALIAS this
+        # buffer on the CPU backend while dispatch is async, so any buffer
+        # already handed to a jitted call must never be mutated in place —
+        # every update below rebinds self.lengths to a fresh array.
+        self.lengths = np.zeros((max_slots,), np.int32)
         self.active: list[Optional[Request]] = [None] * max_slots
         self.waiting: list[Request] = []
         self._partial: dict[int, int] = {}   # slot -> prompt tokens prefilled
         self.done: list[Request] = []
         # jitted fast paths (eager dispatch would compile thousands of tiny
-        # executables over a serving session and exhaust the CPU ORC JIT)
-        self._jit_decode = jax.jit(self.model.decode_step)
-        self._jit_slice = jax.jit(self.model.slice_cache,
-                                  static_argnums=(1,))
-        self._jit_set_slice = jax.jit(self.model.set_cache_slice,
-                                      static_argnums=(1,))
+        # executables over a serving session and exhaust the CPU ORC JIT);
+        # shared across engines of the same ModelBundle so multiple engines
+        # (or an engine plus its serve-alone test oracle) reuse executables
+        jits = getattr(model, "_serving_jit_cache", None)
+        if jits is None:
+            jits = {
+                "decode": jax.jit(
+                    lambda p, c, t, ln, act: model.decode_step(p, c, t, ln,
+                                                               act)),
+                "prefill": jax.jit(
+                    lambda p, c, t, st, act: model.prefill_chunk(p, c, t, st,
+                                                                 act)),
+                "set_slice": jax.jit(model.set_cache_slice,
+                                     static_argnums=(1,)),
+            }
+            model._serving_jit_cache = jits
+        self._jit_decode = jits["decode"]
+        self._jit_prefill = jits["prefill"]
+        self._jit_set_slice = jits["set_slice"]
 
     # ------------------------------------------------------------- setup
     def load_params(self, params):
@@ -104,9 +134,15 @@ class InferenceEngine:
     # ----------------------------------------------------------- prefill
     def _prefill_slot(self, slot: int, req: Request,
                       chunk: Optional[int]) -> bool:
-        """Advance the slot's prefill by ``chunk`` tokens (None = all).
-        Token-stepping on a batch-1 cache slice: slot-isolated and exact for
-        every family (production prefill on TPU uses model.prefill)."""
+        """Advance the slot's prefill by ``chunk`` tokens (None = all) in
+        jitted ``prefill_chunk`` dispatches of at most ``self.prefill_chunk``
+        tokens each. The slot mask keeps every other row's cache untouched,
+        so no slice/restore copies are needed.
+
+        Dispatch widths are capped at ``self.prefill_chunk`` even for
+        whole-prompt (chunk=None, fcfs) prefill: the jit cache then holds at
+        most ``prefill_chunk`` distinct prefill shapes per model, instead of
+        one fresh XLA compile per distinct prompt length in the trace."""
         done_tok = self._partial.get(slot, 0)
         prompt = req.prompt
         upto = len(prompt) if chunk is None else min(len(prompt),
@@ -114,16 +150,21 @@ class InferenceEngine:
         piece = prompt[done_tok:upto]
         if len(piece) == 0:
             return True
-        sl_cache = self._jit_slice(self.cache, slot)
-        sl_len = self.lengths[slot:slot + 1]
-        for t in range(len(piece)):
-            tok = jnp.asarray([[int(piece[t])]], jnp.int32)
-            _, sl_cache = self._jit_decode(self.params, sl_cache, tok,
-                                           sl_len)
-            sl_len = sl_len + 1
-        self.cache = self._jit_set_slice(self.cache, slot, sl_cache)
-        self.lengths = self.lengths.at[slot].set(sl_len[0])
-        self.stats.prefill_tokens += len(piece)
+        for lo in range(0, len(piece), self.prefill_chunk):
+            sub = piece[lo:lo + self.prefill_chunk]
+            c = len(sub)
+            tokens = np.zeros((self.max_slots, c), np.int32)
+            tokens[slot] = np.asarray(sub, np.int32)
+            mask = np.zeros((self.max_slots,), bool)
+            mask[slot] = True
+            _, self.cache = self._jit_prefill(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths), jnp.asarray(mask))
+            new_lengths = self.lengths.copy()
+            new_lengths[slot] += c
+            self.lengths = new_lengths
+            self.stats.prefill_tokens += c
+            self.stats.prefill_dispatches += 1
         self._advance("prefill", len(piece))
         self._partial[slot] = upto
         return upto >= len(prompt)
@@ -145,7 +186,9 @@ class InferenceEngine:
             self._partial[slot] = 0
             self.cache = self._jit_set_slice(self.cache, slot,
                                              self._fresh_slot)
-            self.lengths = self.lengths.at[slot].set(0)
+            new_lengths = self.lengths.copy()
+            new_lengths[slot] = 0
+            self.lengths = new_lengths
 
         # 2) prefill work
         prefilling = [i for i, r in enumerate(self.active)
@@ -157,32 +200,32 @@ class InferenceEngine:
             if self.policy.exclusive_prefill:
                 return emitted  # greedy: prefill consumed the whole step
 
-        # 3) decode step for all fully-prefilled slots (isolated restore for
-        #    rows that are mid-prefill or idle)
+        # 3) decode step for all fully-prefilled slots — one full-batch
+        #    dispatch; the active mask isolates mid-prefill/idle rows
         decoding = [i for i, r in enumerate(self.active)
                     if r is not None and self._partial.get(i, 0) >= len(r.prompt)]
         if decoding:
-            protect = [i for i in range(self.max_slots) if i not in decoding]
-            saved = {i: self._jit_slice(self.cache, i) for i in protect}
-            tokens = jnp.zeros((self.max_slots, 1), jnp.int32)
+            mask = np.zeros((self.max_slots,), bool)
+            tokens = np.zeros((self.max_slots, 1), np.int32)
             for i in decoding:
+                mask[i] = True
                 req = self.active[i]
-                last = (req.tokens_out[-1] if req.tokens_out
-                        else int(req.prompt[-1]))
-                tokens = tokens.at[i, 0].set(last)
+                tokens[i, 0] = (req.tokens_out[-1] if req.tokens_out
+                                else int(req.prompt[-1]))
             logits, self.cache = self._jit_decode(
-                self.params, self.cache, tokens, self.lengths)
-            for i, piece in saved.items():
-                self.cache = self._jit_set_slice(self.cache, i, piece)
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths), jnp.asarray(mask))
             self._advance("decode", len(decoding))
             t = self.now()
             if self._last_decode_t is not None:
                 self.stats.max_decode_gap_s = max(
                     self.stats.max_decode_gap_s, t - self._last_decode_t)
             self._last_decode_t = t
+            # the one host sync of the decode loop: fetch the argmaxes
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.stats.decode_syncs += 1
+            self.lengths = self.lengths + mask  # rebind, never mutate
             for i in decoding:
-                self.lengths = self.lengths.at[i].add(1)
                 req = self.active[i]
                 tok = int(nxt[i]) % self.cfg.vocab_size
                 req.tokens_out.append(tok)

@@ -108,6 +108,112 @@ def test_rmsnorm(r, d, dtype, rng_key):
                                atol=_tol(dtype), rtol=_tol(dtype))
 
 
+def test_decode_attention_non_divisible_seq(rng_key):
+    """S not divisible by s_block: pad+mask fallback instead of assert."""
+    b, h, kv, s, d = 2, 8, 4, 130, 64
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    out = decode_attention(q, k, v, lengths, s_block=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_fused_rope(rng_key):
+    """Fused-RoPE decode == rope(q at lengths-1) then plain attention, for
+    kernel (interpret), jnp lowering, and ref oracle alike."""
+    from repro.models.attention import decode_attention_jnp
+    from repro.models.layers import apply_rope
+    b, h, kv, s, d = 2, 8, 4, 128, 64
+    theta = 10_000.0
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    # manual: rotate q at the new token's position, then un-fused attention
+    q_rot = apply_rope(q[:, None], (lengths - 1)[:, None], theta)[:, 0]
+    want = ref.decode_attention_ref(q_rot, k, v, lengths)
+    got_kernel = decode_attention(q, k, v, lengths, s_block=64,
+                                  rope_theta=theta, interpret=True)
+    got_ref = ref.decode_attention_ref(q, k, v, lengths, rope_theta=theta)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # model-facing jnp lowering: (B,1,H,d) against (B,S,KV,d) caches
+    got_jnp = decode_attention_jnp(
+        q[:, None], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        lengths, rope_theta=theta)[:, 0]
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_chunk_scan_non_divisible_heads(rng_key):
+    """H not divisible by head_block: largest-divisor fallback."""
+    m, q, h, p, n = 2, 32, 6, 16, 32
+    ks = jax.random.split(rng_key, 4)
+    x = jax.random.normal(ks[0], (m, q, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (m, q, h)))
+    cum = jnp.cumsum(-0.1 * dt, axis=1)
+    b_ = jax.random.normal(ks[2], (m, q, n))
+    c_ = jax.random.normal(ks[3], (m, q, n))
+    y, st = ssd_chunk_scan(x, dt, cum, b_, c_, head_block=4, interpret=True)
+    y_ref, st_ref = jax.vmap(ref.ssd_chunk_ref)(x, dt, cum, b_, c_)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=4e-4, rtol=4e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=4e-4, rtol=4e-4)
+
+
+def test_flash_attention_non_divisible_seq(rng_key):
+    """Sq/Skv not divisible by the blocks: largest-divisor fallback."""
+    b, h, kv, s, d = 1, 4, 2, 96, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    out = flash_attention(q, k, v, causal=True, q_block=64, kv_block=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_autotuned_blocks_match_oracle(rng_key, tmp_path, monkeypatch):
+    """Entry points called WITHOUT explicit blocks consult the autotuner and
+    still match the jnp oracles (interpret mode)."""
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    autotune.reset()
+    try:
+        ks = jax.random.split(rng_key, 4)
+        b, h, kv, s, d = 2, 8, 4, 192, 64
+        q = jax.random.normal(ks[0], (b, h, d))
+        k = jax.random.normal(ks[1], (b, kv, s, d))
+        v = jax.random.normal(ks[2], (b, kv, s, d))
+        lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+        out = decode_attention(q, k, v, lengths, interpret=True)
+        want = ref.decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+        qf = jax.random.normal(ks[0], (1, 4, 128, 32))
+        kf = jax.random.normal(ks[1], (1, 2, 128, 32))
+        vf = jax.random.normal(ks[2], (1, 2, 128, 32))
+        of = flash_attention(qf, kf, vf, causal=True, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(of),
+            np.asarray(ref.flash_attention_ref(qf, kf, vf, causal=True)),
+            atol=2e-5, rtol=2e-5)
+        assert (tmp_path / "autotune.json").exists()  # persisted
+    finally:
+        autotune.reset()
+
+
 def test_ops_interpret_backend_end_to_end(rng_key):
     """Whole model under the interpret backend == jnp backend."""
     from repro.configs.registry import CONFIGS
