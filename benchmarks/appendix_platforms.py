@@ -5,7 +5,8 @@ contention, mirroring the paper's observation that scheduling behaviour is
 platform-dependent."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, row
+from benchmarks.common import (NUM_REQUESTS, STANDARD_APPS,
+                               current_substrate, row)
 from repro.bench import Scenario, ScenarioApp
 
 
@@ -16,6 +17,7 @@ def run() -> list[str]:
             sc = Scenario(
                 name=f"platform-{chip}-{policy}", mode="concurrent",
                 policy=policy, total_chips=chips, chip=chip,
+                substrate=current_substrate(),
                 apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
                       for t in STANDARD_APPS])
             sim = sc.run().sim

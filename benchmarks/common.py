@@ -40,6 +40,22 @@ TOTAL_CHIPS = 256
 _SMOKE_NUM_REQUESTS = {"chatbot": 2, "imagegen": 2, "live_captions": 5,
                        "deep_research": 1}
 _smoke = False
+_substrate = "simulator"
+
+
+def set_substrate(substrate: str) -> None:
+    """Select the execution substrate every figure Scenario runs on
+    (``benchmarks/run.py --substrate engine``)."""
+    from repro.bench import SUBSTRATES
+    if substrate not in SUBSTRATES:
+        raise ValueError(f"unknown substrate {substrate!r}; "
+                         f"expected one of {SUBSTRATES}")
+    global _substrate
+    _substrate = substrate
+
+
+def current_substrate() -> str:
+    return _substrate
 
 
 def enable_smoke() -> None:
@@ -65,11 +81,13 @@ def smoke_requests(n: int) -> int:
 
 def standard_scenario(name: str, policy: str, *, mode: str = "concurrent",
                       chip: str = "tpu-v5e",
-                      num_requests: dict[str, int] | None = None) -> Scenario:
-    """The paper's three-app concurrent workload as a Scenario declaration."""
+                      num_requests: dict[str, int] | None = None,
+                      substrate: str | None = None) -> Scenario:
+    """The paper's three-app concurrent workload as a Scenario declaration;
+    runs on the module-selected substrate unless overridden."""
     counts = num_requests or NUM_REQUESTS
     return Scenario(
         name=name, mode=mode, policy=policy, total_chips=TOTAL_CHIPS,
-        chip=chip,
+        chip=chip, substrate=substrate or _substrate,
         apps=[ScenarioApp(app_type=t, num_requests=counts[t])
               for t in STANDARD_APPS])

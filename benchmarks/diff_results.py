@@ -1,0 +1,209 @@
+"""CI regression dashboard: diff two versioned result documents.
+
+Accepts either document family this repo emits:
+
+* **Scenario documents** — ``ScenarioResult.to_json()`` (``schema_version``
+  1.0/1.1): per-app SLO attainment, latency percentiles (p50/p99/mean),
+  makespan/utilization, workflow ``e2e_s``. A file may also hold a JSON
+  list of such documents (e.g. one per policy).
+* **BENCH documents** — ``benchmarks/run.py --json`` (``version`` 1):
+  ``us_per_call`` per suite/row, which covers both timings and dispatch
+  counters (``engine_dispatch_*`` rows).
+
+Exit status: 0 = no regressions (or baseline missing with ``--missing-ok``),
+1 = at least one metric regressed beyond ``--threshold`` (default 10%),
+2 = usage/parse error. Higher-is-better metrics (attainment, utilization)
+regress when they DROP by more than the threshold; everything else
+(latencies, makespan, energy, us_per_call) regresses when it RISES.
+
+    python benchmarks/diff_results.py old.json new.json --markdown
+
+is what the ``bench-diff`` CI job runs, posting the table as a step
+summary. Standalone on purpose: stdlib only, no repro/ imports.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: metric-name suffixes where HIGHER is better (everything else: lower)
+HIGHER_IS_BETTER = ("slo_attainment", "utilization", "attainment")
+#: ignore absolute deltas below this (in metric units) — keeps near-zero
+#: virtual-clock metrics from tripping the relative threshold
+DEFAULT_MIN_ABS = 1e-9
+
+
+# ------------------------------------------------------------- extraction
+def _is_bench_doc(doc: dict) -> bool:
+    return "entries" in doc and "version" in doc
+
+
+def _is_scenario_doc(doc: dict) -> bool:
+    return "schema_version" in doc and "results" in doc
+
+
+def _scenario_metrics(doc: dict) -> dict[str, float]:
+    """Flatten a ScenarioResult document into {metric_path: value}."""
+    name = doc.get("scenario", {}).get("name", "scenario")
+    substrate = doc.get("substrate",
+                        doc.get("scenario", {}).get("substrate", "simulator"))
+    base = f"{name}[{substrate}]"
+    out: dict[str, float] = {}
+    results = doc.get("results", {})
+    for label, summary in results.items():
+        if label == "e2e_s":
+            out[f"{base}/e2e_s"] = float(summary)
+            continue
+        if not isinstance(summary, dict) or "apps" not in summary:
+            continue
+        for key in ("makespan_s", "utilization", "energy_kj"):
+            if key in summary:
+                out[f"{base}/{label}/{key}"] = float(summary[key])
+        for app, stats in summary["apps"].items():
+            for key in ("slo_attainment", "mean", "p50", "p99"):
+                if key in stats:
+                    out[f"{base}/{label}/{app}/{key}"] = float(stats[key])
+    return out
+
+
+def _bench_metrics(doc: dict) -> dict[str, float]:
+    out = {}
+    for e in doc.get("entries", []):
+        out[f"{e['suite']}/{e['name']}/us_per_call"] = float(e["us_per_call"])
+    return out
+
+
+def extract_metrics(doc) -> dict[str, float]:
+    """Document (or list of documents) -> flat {metric_path: value}."""
+    if isinstance(doc, list):
+        out: dict[str, float] = {}
+        for i, d in enumerate(doc):
+            sub = extract_metrics(d)
+            for k, v in sub.items():
+                out[k if k not in out else f"#{i}/{k}"] = v
+        return out
+    if _is_bench_doc(doc):
+        return _bench_metrics(doc)
+    if _is_scenario_doc(doc):
+        return _scenario_metrics(doc)
+    raise ValueError("unrecognized result document: expected a "
+                     "ScenarioResult to_json() or a BENCH --json document")
+
+
+# ------------------------------------------------------------------- diff
+def diff_metrics(old: dict[str, float], new: dict[str, float], *,
+                 threshold: float = 0.10,
+                 min_abs: float = DEFAULT_MIN_ABS) -> list[dict]:
+    """Row per metric: name, old, new, rel delta, status. Status is one of
+    ok | improved | regressed | added | removed."""
+    rows = []
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None:
+            rows.append({"metric": name, "old": None, "new": n,
+                         "delta": None, "status": "added"})
+            continue
+        if n is None:
+            rows.append({"metric": name, "old": o, "new": None,
+                         "delta": None, "status": "removed"})
+            continue
+        higher_better = name.rsplit("/", 1)[-1] in HIGHER_IS_BETTER
+        delta = (n - o) / abs(o) if o else (0.0 if n == o else float("inf"))
+        worse = (o - n) if higher_better else (n - o)
+        rel_worse = worse / abs(o) if o else (float("inf") if worse > 0
+                                              else 0.0)
+        if worse > min_abs and rel_worse > threshold:
+            status = "regressed"
+        elif -worse > min_abs and -rel_worse > threshold:
+            status = "improved"
+        else:
+            status = "ok"
+        rows.append({"metric": name, "old": o, "new": n,
+                     "delta": delta, "status": status})
+    return rows
+
+
+def render(rows: list[dict], *, markdown: bool = False,
+           show_ok: bool = False) -> str:
+    def fmt(v):
+        if v is None:
+            return "—"
+        return f"{v:.6g}"
+
+    def fmt_delta(d):
+        if d is None:
+            return "—"
+        if d == float("inf"):
+            return "+inf"
+        return f"{d:+.1%}"
+
+    interesting = [r for r in rows if show_ok or r["status"] != "ok"]
+    n_reg = sum(r["status"] == "regressed" for r in rows)
+    n_imp = sum(r["status"] == "improved" for r in rows)
+    header = (f"bench-diff: {len(rows)} metrics compared, "
+              f"{n_reg} regressed, {n_imp} improved")
+    lines = []
+    if markdown:
+        lines.append(f"### {header}")
+        lines.append("")
+        if interesting:
+            lines.append("| metric | old | new | delta | status |")
+            lines.append("|---|---:|---:|---:|---|")
+            for r in interesting:
+                mark = {"regressed": "❌", "improved": "✅",
+                        "added": "🆕", "removed": "⚠️"}.get(r["status"], "")
+                lines.append(f"| `{r['metric']}` | {fmt(r['old'])} | "
+                             f"{fmt(r['new'])} | {fmt_delta(r['delta'])} | "
+                             f"{mark} {r['status']} |")
+        else:
+            lines.append("No changes beyond threshold.")
+    else:
+        lines.append(header)
+        for r in interesting:
+            lines.append(f"  {r['status']:9s} {r['metric']}: "
+                         f"{fmt(r['old'])} -> {fmt(r['new'])} "
+                         f"({fmt_delta(r['delta'])})")
+    return "\n".join(lines)
+
+
+# -------------------------------------------------------------------- cli
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline result JSON (previous run)")
+    ap.add_argument("new", help="candidate result JSON (this run)")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression gate (default 0.10 = 10%%)")
+    ap.add_argument("--min-abs", type=float, default=DEFAULT_MIN_ABS,
+                    help="ignore absolute deltas smaller than this")
+    ap.add_argument("--markdown", action="store_true",
+                    help="emit a GitHub-flavoured markdown table")
+    ap.add_argument("--show-ok", action="store_true",
+                    help="list unchanged metrics too")
+    ap.add_argument("--missing-ok", action="store_true",
+                    help="exit 0 when the baseline file does not exist "
+                         "(first run on a branch)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.old):
+        msg = f"no baseline at {args.old}: nothing to diff against"
+        print(f"### bench-diff\n\n{msg}" if args.markdown else msg)
+        return 0 if args.missing_ok else 2
+    try:
+        with open(args.old) as f:
+            old = extract_metrics(json.load(f))
+        with open(args.new) as f:
+            new = extract_metrics(json.load(f))
+    except (OSError, ValueError, KeyError) as e:
+        print(f"bench-diff: cannot read documents: {e}", file=sys.stderr)
+        return 2
+
+    rows = diff_metrics(old, new, threshold=args.threshold,
+                        min_abs=args.min_abs)
+    print(render(rows, markdown=args.markdown, show_ok=args.show_ok))
+    return 1 if any(r["status"] == "regressed" for r in rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,8 @@ bound). Pod analogue: full 256-chip mesh vs host fallback — declared as
 exclusive-mode Scenarios."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS, row
+from benchmarks.common import (NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS,
+                               current_substrate, row)
 from repro.bench import Scenario, ScenarioApp
 
 
@@ -13,7 +14,7 @@ def scenario(device: str) -> Scenario:
     scale = (lambda n: n) if device == "gpu" else (lambda n: max(n // 2, 3))
     return Scenario(
         name=f"fig3-exclusive-{device}", mode="exclusive", policy="greedy",
-        total_chips=TOTAL_CHIPS, chip=chip,
+        total_chips=TOTAL_CHIPS, chip=chip, substrate=current_substrate(),
         apps=[ScenarioApp(app_type=t, num_requests=scale(NUM_REQUESTS[t]))
               for t in STANDARD_APPS])
 

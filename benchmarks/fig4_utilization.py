@@ -3,7 +3,8 @@ TPU translation: SMACT ≙ reserved-chip fraction, SMOCC ≙ reserved ×
 roofline-achievement; plus the power model (paper Fig. 8)."""
 from __future__ import annotations
 
-from benchmarks.common import NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS, row
+from benchmarks.common import (NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS,
+                               current_substrate, row)
 from repro.bench import Scenario, ScenarioApp
 from repro.monitor.metrics import UtilizationTimeline
 
@@ -11,7 +12,7 @@ from repro.monitor.metrics import UtilizationTimeline
 def run() -> list[str]:
     scenario = Scenario(
         name="fig4-utilization", mode="exclusive", policy="greedy",
-        total_chips=TOTAL_CHIPS,
+        total_chips=TOTAL_CHIPS, substrate=current_substrate(),
         apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
               for t in STANDARD_APPS])
     res = scenario.run()

@@ -1,11 +1,14 @@
 """Paper Fig. 5: concurrent execution under greedy allocation vs static
-partitioning — plus this repo's SLO-aware scheduler (paper §5.2's ask) and
-the beyond-paper weighted-fair policy, all through the policy registry."""
+partitioning — plus this repo's SLO-aware scheduler (paper §5.2's ask),
+the beyond-paper weighted-fair policy, and preemptive priority classes,
+all through the policy registry. Runs on whichever substrate
+``benchmarks/run.py --substrate`` selects (simulator or real engine)."""
 from __future__ import annotations
 
 from benchmarks.common import STANDARD_APPS, row, standard_scenario
 
-POLICIES = ("greedy", "static", "slo_aware", "weighted_fair")
+POLICIES = ("greedy", "static", "slo_aware", "weighted_fair",
+            "preemptive_priority")
 
 
 def run() -> list[str]:

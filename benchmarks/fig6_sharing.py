@@ -4,7 +4,8 @@ shared-server pair is declared as a Scenario: DeepResearch rides on the
 chatbot's architecture, and kv_cache=host moves attention to the host."""
 from __future__ import annotations
 
-from benchmarks.common import TOTAL_CHIPS, row, smoke_requests
+from benchmarks.common import (TOTAL_CHIPS, current_substrate, row,
+                               smoke_requests)
 from repro.bench import Scenario, ScenarioApp
 from repro.core.apps import DEFAULT_ARCH
 
@@ -15,7 +16,7 @@ def scenario(kv: str) -> Scenario:
     shared_arch = DEFAULT_ARCH["chatbot"]   # one server backs both apps
     return Scenario(
         name=f"fig6-sharing-kv-{kv}", mode="concurrent", policy="greedy",
-        total_chips=TOTAL_CHIPS,
+        total_chips=TOTAL_CHIPS, substrate=current_substrate(),
         apps=[ScenarioApp("chatbot", name=chat, kv_cache_on_host=host,
                           num_requests=smoke_requests(10)),
               ScenarioApp("deep_research", name="DeepResearch",

@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import TOTAL_CHIPS, row, smoke_enabled, smoke_requests
+from benchmarks.common import (TOTAL_CHIPS, current_substrate, row,
+                               smoke_enabled, smoke_requests)
 from repro.bench import Scenario
 from repro.core.workflow import CONTENT_CREATION_YAML, WorkflowSpec, \
     parse_workflow
@@ -28,7 +29,7 @@ def run() -> list[str]:
     for policy in POLICIES:
         res = Scenario(name=f"fig7-workflow-{policy}", mode="workflow",
                        policy=policy, total_chips=TOTAL_CHIPS,
-                       workflow=wf).run()
+                       substrate=current_substrate(), workflow=wf).run()
         e2e[policy] = res.e2e_s
         cap = res.report("generate_captions")
         img = res.report("cover_art")

@@ -48,11 +48,18 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default="",
                     help="also write collected rows to this path as a "
                          "versioned JSON document (perf-trajectory artifact)")
+    ap.add_argument("--substrate", default="simulator",
+                    choices=("simulator", "engine"),
+                    help="execution substrate for Scenario-declared "
+                         "figures: the analytic pod simulator (default) or "
+                         "the real InferenceEngine under a virtual cost "
+                         "clock")
     args = ap.parse_args(argv)
 
     from benchmarks import common
     if args.smoke:
         common.enable_smoke()
+    common.set_substrate(args.substrate)
 
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,

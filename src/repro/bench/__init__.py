@@ -21,12 +21,14 @@ _EXPORTS = {
     "arrival": ["ArrivalProcess", "BurstyArrivals", "FixedSpacing",
                 "PoissonArrivals", "available_arrivals", "make_arrival",
                 "register_arrival"],
-    "policy": ["ChunkedPolicy", "GreedyPolicy", "SchedulingPolicy",
-               "SloAwarePolicy", "StaticPartitionPolicy",
+    "policy": ["ChunkedPolicy", "GreedyPolicy", "PreemptivePriorityPolicy",
+               "SchedulingPolicy", "SloAwarePolicy", "StaticPartitionPolicy",
                "WeightedFairPolicy", "available_policies", "get_policy",
                "register_policy"],
-    "scenario": ["SCHEMA_VERSION", "Scenario", "ScenarioApp",
+    "scenario": ["SCHEMA_VERSION", "SUBSTRATES", "Scenario", "ScenarioApp",
                  "ScenarioResult", "run_workflow_spec"],
+    "engine_runner": ["CostedRequest", "engine_model",
+                      "run_scenario_on_engine"],
 }
 _ATTR_TO_MODULE = {attr: mod for mod, attrs in _EXPORTS.items()
                    for attr in attrs}

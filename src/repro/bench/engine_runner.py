@@ -1,0 +1,400 @@
+"""Engine-substrate scenario execution: run any :class:`Scenario` on the
+real continuous-batching :class:`~repro.serving.engine.InferenceEngine`.
+
+The simulator and the engine answer the same question — how do scheduling
+policies behave under realistic concurrent execution? — from two sides:
+the simulator is analytic (roofline work items, discrete events), the
+engine is real JAX execution (jitted prefill/decode dispatches, slot
+admission, chunked-prefill interleaving). This module closes the gap the
+ROADMAP names: one YAML spec, two substrates, one versioned result schema.
+
+How a ScenarioApp becomes an engine trace
+-----------------------------------------
+Each app's :meth:`AppDef.request_chain` work items are the ground truth for
+*service demand*. Per request we collapse them into an engine
+:class:`CostedRequest`:
+
+* non-decode items (``prefill``/``encode``/``denoise``) → a synthetic
+  prompt whose per-token virtual cost spreads the chain's total
+  prefill-like service time (at the partition's chip count, from
+  :mod:`repro.core.costs` via ``WorkItem.duration_s``), sized so one
+  prefill chunk ≈ ``chunk_target_s`` — the simulator's preemption quantum;
+  ``step``-SLO accounting reads per-chunk advance timestamps;
+* ``decode`` items → one engine decode step per item, each charged the
+  mean item duration, so TTFT granularity matches the simulator's item
+  granularity. TPOT is re-normalized to the app's FULL decode token count
+  (``decode_tokens_full``) before SLO accounting.
+
+Execution is real (the tiny ``ENGINE_ARCH`` model actually prefill/decodes
+every request through the engine's jitted hot path) while time is virtual
+(``request_cost_s``), so CPU CI runs are deterministic and fast, and the
+emitted :class:`ScenarioResult` carries pod-scale seconds.
+
+Scheduling fidelity
+-------------------
+``SchedulingPolicy.partition`` is honoured: each partition gets its own
+engine (chips scale that partition's virtual costs), so ``static`` shows
+its idle-partition pathology on this substrate too. ``admit_order`` /
+``prefill_chunk_tokens`` / ``exclusive_prefill`` drive the engine exactly
+as in production serving. Workflow mode releases dependent requests at
+PER-REQUEST granularity by default (``Scenario.workflow_release =
+"request"``): request *j* of a node waits only for request *j* of its
+dependencies (clamped to their length), not for the whole node — the
+concurrency fix over the simulator's all-requests release
+(``workflow_release="node"`` reproduces the old behaviour for A/B runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.bench.policy import get_policy
+from repro.bench.scenario import SETUP_S, Scenario, ScenarioResult
+from repro.core.dag import Phase, build_dag
+from repro.core.apps import app_from_task
+from repro.core.simulator import AppTrace, SimResult, UtilSample
+from repro.core.slo import RequestRecord, SLOReport
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import Request
+
+ENGINE_ARCH = "tinyllama-1.1b"   # execution vehicle; timing is virtual
+ENGINE_LAYERS = 2
+ENGINE_SLOTS = 4
+ENGINE_PREFILL_CHUNK = 8
+#: prompt sizing: the request chain's total prefill-like service time is
+#: spread over enough synthetic tokens that ONE engine prefill chunk
+#: (``ENGINE_PREFILL_CHUNK`` tokens) costs about ``Scenario.chunk_target_s``
+#: of virtual time — the engine then preempts at the same TIME granularity
+#: the simulator's ``chunk_fraction`` hook uses, while ``exclusive_prefill``
+#: policies (greedy/fcfs) still stall every decode for the whole prompt
+#: (the paper's Fig. 5b starvation mechanism on the real engine).
+#: PROMPT_MAX_TOKENS bounds real dispatch count and cache size per request:
+#: chains needing more than PROMPT_MAX_TOKENS/ENGINE_PREFILL_CHUNK chunks
+#: (e.g. deep_research's 100s-scale prefill) degrade gracefully to a
+#: coarser quantum of prefill_s / (PROMPT_MAX_TOKENS/ENGINE_PREFILL_CHUNK)
+#: per chunk — exactly as a real engine cannot slice a chunk below its
+#: compute time.
+PROMPT_MIN_TOKENS = 4
+PROMPT_MAX_TOKENS = 1024
+SEQ_BUCKET = 64                  # max_seq rounds up to this (bounds compiles)
+#: work-item kinds that map onto engine decode steps (one step per item);
+#: everything else (prefill/encode/denoise) becomes prompt tokens
+DECODE_KINDS = ("decode",)
+_MAX_ITERS = 1_000_000
+
+
+@lru_cache(maxsize=1)
+def engine_model():
+    """The shared reduced model every engine run executes on (correctness
+    of cross-app tokens is irrelevant to the benchmark; costs are virtual).
+    Cached so repeated scenario runs reuse one set of jitted executables."""
+    import jax
+    from repro.configs.registry import CONFIGS
+    from repro.models.factory import build_model
+    cfg = dataclasses.replace(CONFIGS[ENGINE_ARCH].reduced(),
+                              num_layers=ENGINE_LAYERS)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params, cfg
+
+
+@dataclass
+class CostedRequest(Request):
+    """Engine request carrying its app's analytic per-token costs."""
+    trace_idx: int = 0               # index within the app's trace
+    prefill_tok_s: float = 0.0
+    decode_tok_s: float = 0.0
+    decode_tokens_full: int = 0      # full-scale decode tokens (tpot norm)
+    prefill_items: int = 0           # source chain items (step-SLO bounds)
+
+
+def _request_cost(req: CostedRequest, kind: str, tokens: int) -> float:
+    rate = req.prefill_tok_s if kind == "prefill" else req.decode_tok_s
+    return rate * tokens
+
+
+# ----------------------------------------------------------------- driver
+@dataclass
+class _Pending:
+    """A request not yet submitted: released once its gates complete."""
+    run_idx: int
+    request: CostedRequest
+    offset_s: float                  # nominal arrival offset (cadence)
+    setup_s: float                   # per-node engine warmup (workflow)
+    deadline_hint_s: float
+    background: bool
+    dep_gates: tuple = ()            # (app, idx) completions gating release
+    pred: Optional[tuple] = None     # closed-loop predecessor key
+
+    @property
+    def gates(self) -> tuple:
+        return self.dep_gates + ((self.pred,) if self.pred else ())
+
+
+@dataclass
+class _EngineRun:
+    engine: InferenceEngine
+    chips: int
+    seen: int = 0                    # engine.done entries already collected
+
+
+def _drive(runs: list[_EngineRun], pending: list[_Pending],
+           total_chips: int) -> tuple[dict, list[UtilSample]]:
+    """Event loop over one or more engines (one per chip partition) sharing
+    a single virtual timeline. Always steps the laggard engine among those
+    with runnable work so cross-partition dependency releases stay causal;
+    idle engines jump their clock to the next arrival."""
+    completed: dict[tuple, float] = {}
+    util: list[UtilSample] = []
+    waiting = list(pending)
+    n_total = len(pending)
+    for _ in range(_MAX_ITERS):
+        for run in runs:
+            done = run.engine.done
+            while run.seen < len(done):
+                r = done[run.seen]
+                run.seen += 1
+                completed[(r.app, r.trace_idx)] = r.t_done
+        if len(completed) >= n_total:
+            return completed, util
+        still = []
+        for p in waiting:
+            if all(g in completed for g in p.gates):
+                dep_t = max((completed[g] for g in p.dep_gates), default=0.0)
+                arr = dep_t + p.setup_s + p.offset_s
+                if p.pred is not None:
+                    arr = max(arr, completed[p.pred])
+                p.request.arrival_s = arr
+                if not p.background:
+                    p.request.deadline_s = arr + p.deadline_hint_s
+                runs[p.run_idx].engine.submit(p.request)
+            else:
+                still.append(p)
+        waiting = still
+        # same predicate as InferenceEngine._admit_order: a request the
+        # engine would not admit must not make its engine a candidate, or
+        # an epsilon-future arrival spins the loop without advancing time
+        cands = [run for run in runs
+                 if any(a is not None for a in run.engine.active)
+                 or any(w.arrival_s <= run.engine.now()
+                        for w in run.engine.waiting)]
+        if cands:
+            run = min(cands, key=lambda r: r.engine.now())
+            t0 = run.engine.now()
+            run.engine.step()
+            t1 = run.engine.now()
+            if t1 > t0:
+                util.append(UtilSample(t0, t1, run.chips, total_chips))
+        else:
+            idle = [run for run in runs if run.engine.waiting]
+            if not idle:
+                raise RuntimeError(
+                    f"engine scenario deadlocked: {len(waiting)} request(s) "
+                    "gated on completions that can no longer happen")
+            run = min(idle, key=lambda r: min(w.arrival_s
+                                              for w in r.engine.waiting))
+            run.engine.advance_to(min(w.arrival_s
+                                      for w in run.engine.waiting))
+    raise RuntimeError("engine scenario exceeded the iteration budget")
+
+
+# ----------------------------------------------------------- trace mapping
+def _build_pending(trace: AppTrace, run_idx: int, *,
+                   chips: int, chip, vocab: int, seed: int, rid,
+                   chunk_target_s: float = 0.05, setup_s: float = 0.0,
+                   dep_gates_for: Optional[Callable[[int], list]] = None,
+                   priority: int = 0) -> list[_Pending]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for j, sim_req in enumerate(trace.requests):
+        pre = [it for it in sim_req.items if it.kind not in DECODE_KINDS]
+        dec = [it for it in sim_req.items if it.kind in DECODE_KINDS]
+        prefill_s = sum(it.duration_s(chips, chip) for it in pre)
+        decode_s = sum(it.duration_s(chips, chip) for it in dec)
+        n_chunks = math.ceil(prefill_s / max(chunk_target_s, 1e-9))
+        prompt_tokens = min(max(ENGINE_PREFILL_CHUNK * n_chunks,
+                                PROMPT_MIN_TOKENS), PROMPT_MAX_TOKENS)
+        n_steps = max(len(dec), 1)
+        full = sum(it.tokens for it in dec)
+        req = CostedRequest(
+            request_id=next(rid),
+            prompt=rng.integers(0, vocab, size=prompt_tokens).astype(np.int32),
+            max_new_tokens=n_steps,
+            app=trace.name,
+            priority=priority,
+            trace_idx=j,
+            prefill_tok_s=prefill_s / prompt_tokens,
+            decode_tok_s=decode_s / n_steps,
+            decode_tokens_full=full,
+            prefill_items=len(pre))
+        out.append(_Pending(
+            run_idx=run_idx, request=req, offset_s=sim_req.arrival_s,
+            setup_s=setup_s, deadline_hint_s=sim_req.deadline_hint_s,
+            background=sim_req.background or trace.background,
+            dep_gates=tuple(dep_gates_for(j)) if dep_gates_for else (),
+            pred=(trace.name, j - 1) if trace.closed_loop and j > 0
+            else None))
+    return out
+
+
+def _records(runs: list[_EngineRun],
+             traces: dict[str, AppTrace]) -> dict[str, list[RequestRecord]]:
+    """Per-request SLO records from engine timing, in completion order."""
+    recs: dict[str, list[RequestRecord]] = {name: [] for name in traces}
+    all_done = sorted((r for run in runs for r in run.engine.done),
+                      key=lambda r: (r.t_done, r.app, r.trace_idx))
+    for r in all_done:
+        trace = traces[r.app]
+        rec = RequestRecord(r.app, r.trace_idx, r.arrival_s)
+        rec.e2e_s = r.t_done - r.arrival_s
+        if r.decode_tokens_full > 0:
+            if r.t_first_token is not None:
+                rec.ttft_s = r.t_first_token - r.arrival_s
+            if r.decode_tokens_full > 1 and len(r.t_tokens) > 1:
+                rec.tpot_s = ((r.t_tokens[-1] - r.t_tokens[0])
+                              / (r.decode_tokens_full - 1))
+            else:
+                rec.tpot_s = 0.0
+        if trace.slo.step is not None:
+            # the source chain had `prefill_items` separately-schedulable
+            # steps (denoise iterations); the engine prompt collapses them,
+            # so resample the per-dispatch timestamps at item boundaries —
+            # a step's span then reflects the policy's actual interleaving
+            # at the same granularity the simulator dispatches items
+            times = r.t_prefill or r.t_tokens
+            m = max(r.prefill_items, 1) if isinstance(r, CostedRequest) \
+                else len(times)
+            k = len(times)
+            prev = r.arrival_s
+            for i in range(min(m, k)):
+                t = times[min(k - 1, math.ceil(k * (i + 1) / m) - 1)]
+                rec.step_times_s.append(t - prev)
+                prev = t
+        recs[r.app].append(rec)
+    return recs
+
+
+def _run_traces(sc: Scenario, traces: list[AppTrace],
+                total_chips: int, *, setup_s: float = 0.0,
+                dep_map: Optional[dict[str, list[tuple[str, int]]]] = None,
+                release: str = "request"):
+    """Run a set of app traces on per-partition engines; returns the merged
+    SimResult, per-partition EngineStats, and the completion-time map."""
+    model, params, ecfg = engine_model()
+    chip = sc.chip_spec
+    policy = get_policy(sc.policy)
+    policy.reset()
+    part_of, chips_of = policy.partition(traces, total_chips)
+    parts = list(chips_of)
+    run_idx_of = {p: i for i, p in enumerate(parts)}
+    rid = itertools.count()
+
+    pending: list[_Pending] = []
+    for t_i, trace in enumerate(traces):
+        part = part_of[trace.name]
+        if hasattr(policy, "level_for"):
+            prio = policy.level_for(trace.name, trace.background)
+        else:
+            prio = 1 if trace.background else 0
+        dep_fn = None
+        if dep_map and trace.name in dep_map:
+            deps = dep_map[trace.name]
+            if release == "node":
+                def dep_fn(j, deps=deps):
+                    return [(d, k) for d, n in deps for k in range(n)]
+            else:
+                def dep_fn(j, deps=deps):
+                    return [(d, min(j, n - 1)) for d, n in deps if n > 0]
+        pending += _build_pending(
+            trace, run_idx_of[part], chips=chips_of[part],
+            chip=chip, vocab=ecfg.vocab_size, seed=sc.seed + t_i, rid=rid,
+            chunk_target_s=sc.chunk_target_s, setup_s=setup_s,
+            dep_gates_for=dep_fn, priority=prio)
+
+    runs = []
+    for p_i, part in enumerate(parts):
+        mine = [p for p in pending if p.run_idx == p_i]
+        need = max((len(p.request.prompt) + p.request.max_new_tokens
+                    for p in mine), default=PROMPT_MIN_TOKENS) + 8
+        max_seq = math.ceil(need / SEQ_BUCKET) * SEQ_BUCKET
+        eng = InferenceEngine(model, max_slots=ENGINE_SLOTS, max_seq=max_seq,
+                              policy=policy,
+                              prefill_chunk=ENGINE_PREFILL_CHUNK,
+                              request_cost_s=_request_cost)
+        eng.load_params(params)
+        runs.append(_EngineRun(engine=eng, chips=chips_of[part]))
+
+    completed, util = _drive(runs, pending, total_chips)
+    recs = _records(runs, {t.name: t for t in traces})
+    reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
+    sim = SimResult(reports=reports, util=util, total_chips=total_chips,
+                    chip=chip, strategy=policy.name)
+    stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
+    return sim, stats, completed
+
+
+# ------------------------------------------------------------ entry point
+def run_scenario_on_engine(sc: Scenario) -> ScenarioResult:
+    """Execute ``sc`` on the real InferenceEngine; same modes, same result
+    schema as the simulator substrate (``substrate`` field aside)."""
+    if sc.mode == "exclusive":
+        return _run_exclusive(sc)
+    if sc.mode == "concurrent":
+        return _run_concurrent(sc)
+    return _run_workflow(sc)
+
+
+def _run_concurrent(sc: Scenario) -> ScenarioResult:
+    traces = [sc._trace(i, sa, sa.build()) for i, sa in enumerate(sc.apps)]
+    sim, stats, _ = _run_traces(sc, traces, sc.total_chips)
+    return ScenarioResult(scenario=sc, sims={"concurrent": sim},
+                          substrate="engine", engine_stats=stats)
+
+
+def _run_exclusive(sc: Scenario) -> ScenarioResult:
+    chips = sc.total_chips if sc.chip_spec.name != "host-cpu" else 1
+    sims, stats = {}, {}
+    for i, sa in enumerate(sc.apps):
+        app = sa.build()
+        sim, st, _ = _run_traces(sc, [sc._trace(i, sa, app)], chips)
+        sims[app.name] = sim
+        stats[app.name] = next(iter(st.values()))
+    return ScenarioResult(scenario=sc, sims=sims, substrate="engine",
+                          engine_stats=stats)
+
+
+def _run_workflow(sc: Scenario) -> ScenarioResult:
+    spec = sc.workflow_spec()
+    dag = build_dag(spec)
+    exec_nodes = {n.node: n for n in dag.nodes.values()
+                  if n.phase == Phase.EXEC}
+    traces: list[AppTrace] = []
+    lens: dict[str, int] = {}
+    for name, node in exec_nodes.items():
+        app = dataclasses.replace(app_from_task(node.task), name=name)
+        tr = app.sim_trace(node.task.num_requests)
+        tr = AppTrace(name=name, slo=tr.slo, requests=tr.requests,
+                      background=tr.background or node.background,
+                      closed_loop=tr.closed_loop)
+        traces.append(tr)
+        lens[name] = len(tr.requests)
+    dep_map: dict[str, list[tuple[str, int]]] = {}
+    for name, node in exec_nodes.items():
+        deps = [d.split(":")[0] for d in node.deps if d.endswith(":exec")]
+        if deps:
+            dep_map[name] = [(d, lens[d]) for d in deps]
+    sim, stats, completed = _run_traces(
+        sc, traces, sc.total_chips, setup_s=SETUP_S,
+        dep_map=dep_map, release=sc.workflow_release)
+    finish = {name: max((completed[(name, j)] for j in range(lens[name])),
+                        default=0.0) for name in exec_nodes}
+    e2e = max(finish.values(), default=0.0)
+    return ScenarioResult(scenario=sc, sims={"workflow": sim},
+                          node_finish_s=finish, e2e_s=e2e,
+                          substrate="engine", engine_stats=stats)

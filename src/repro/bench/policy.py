@@ -38,6 +38,10 @@ Shipped policies:
                normalized service time per app; backgrounds get a small
                weight instead of strict demotion, so no app starves even
                without SLO hints.
+  preemptive_priority — strict priority classes (explicit per-app levels,
+               else background demoted one class) with chunk-boundary
+               preemption simulator-side and class-ordered slot admission
+               engine-side (ROADMAP follow-on).
 """
 from __future__ import annotations
 
@@ -88,7 +92,8 @@ def available_policies() -> list[str]:
 
 
 class SchedulingPolicy:
-    """Base policy: shared pool, FIFO, no chunking, chunked engine prefill.
+    """Base policy: shared pool, FIFO, no chunking on either substrate
+    (simulator items run whole; engine prefill advances whole-prompt).
 
     Subclasses override only the hooks they care about. Policies may hold
     per-run state (see :class:`WeightedFairPolicy`); the simulator calls
@@ -138,8 +143,9 @@ class SchedulingPolicy:
 
     def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
         """Tokens of prefill to advance per engine step; None = whole
-        prompt at once."""
-        return default_chunk
+        prompt at once (mirrors the simulator's no-chunking default —
+        :class:`ChunkedPolicy` and descendants opt into chunking)."""
+        return None
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"{type(self).__name__}(name={self.name!r})"
@@ -167,6 +173,9 @@ class ChunkedPolicy(SchedulingPolicy):
         if item.chunkable and full_dur * frac > chunk_target_s:
             return min(frac, chunk_target_s / full_dur)
         return frac
+
+    def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
+        return default_chunk
 
 
 @register_policy("static")
@@ -200,6 +209,41 @@ class SloAwarePolicy(ChunkedPolicy):
         return sorted(ready, key=lambda r: (
             r.deadline_s if r.deadline_s is not None else float("inf"),
             r.arrival_s))
+
+
+@register_policy("preemptive_priority")
+class PreemptivePriorityPolicy(ChunkedPolicy):
+    """Strict priority classes with chunk-boundary preemption.
+
+    Each app maps to an integer *level* (0 = most urgent): explicit levels
+    win, otherwise background apps land one class below foreground. On the
+    simulator the level dominates the queue key while chunked splitting
+    (inherited from :class:`ChunkedPolicy`) bounds how long a low-priority
+    chunk can delay a high-priority arrival — preemption at chunk
+    boundaries. On the engine, slot admission is ordered by
+    ``Request.priority`` then arrival; chunked prefill provides the same
+    bounded-delay interleaving (running decodes are never revoked)."""
+
+    def __init__(self, levels: Optional[dict[str, int]] = None,
+                 background_level: int = 1):
+        self.levels = dict(levels or {})
+        self.background_level = background_level
+
+    def level_for(self, name: str, background: bool) -> int:
+        lv = self.levels.get(name)
+        if lv is not None:
+            return lv
+        return self.background_level if background else 0
+
+    def priority(self, trace: "AppTrace", req: "SimRequest",
+                 item: "WorkItem", now: float) -> float:
+        lv = self.level_for(req.app, req.background or trace.background)
+        return lv * BACKGROUND_DEMOTION_S + now
+
+    def admit_order(self, ready: list["Request"],
+                    now: float) -> list["Request"]:
+        return sorted(ready, key=lambda r: (getattr(r, "priority", 0),
+                                            r.arrival_s))
 
 
 @register_policy("weighted_fair")

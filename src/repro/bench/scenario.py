@@ -23,6 +23,18 @@ Workflow mode embeds the existing workflow YAML (paper Fig. 23) under a
 ``workflow:`` key and honours its DAG dependencies via the same fixed-point
 release-time iteration the Orchestrator used. ``Orchestrator`` remains as a
 thin deprecated shim over this module.
+
+Every scenario runs on TWO substrates from the same spec (``substrate:``):
+
+* ``simulator`` (default) — the analytic discrete-event pod simulator, and
+* ``engine`` — the real continuous-batching :class:`InferenceEngine` under
+  a virtual cost clock (``repro.bench.engine_runner``), with ``mode:
+  engine`` accepted as shorthand for ``mode: concurrent`` + ``substrate:
+  engine``.
+
+Both emit the same versioned ``to_json()`` schema (1.1 adds the
+``substrate`` field), so result documents diff across substrates and PRs
+(``benchmarks/diff_results.py``).
 """
 from __future__ import annotations
 
@@ -41,10 +53,12 @@ from repro.core.slo import SLO
 from repro.core.workflow import WorkflowSpec, parse_workflow
 from repro.roofline.hw import ChipSpec, get_chip
 
-SCHEMA_VERSION = "1.0"
+SCHEMA_VERSION = "1.1"   # 1.1: + top-level "substrate", scenario.substrate
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
+SUBSTRATES = ("simulator", "engine")
+RELEASES = ("request", "node")   # workflow dependency-release granularity
 
 
 # --------------------------------------------------------------------- spec
@@ -103,8 +117,9 @@ class ScenarioApp:
 
 @dataclass
 class Scenario:
-    """Declarative benchmark scenario; ``run()`` executes it on the pod
-    simulator under the named scheduling policy."""
+    """Declarative benchmark scenario; ``run()`` executes it on the chosen
+    substrate (pod simulator or real inference engine) under the named
+    scheduling policy."""
     name: str = "scenario"
     mode: str = "concurrent"           # exclusive | concurrent | workflow
     policy: Union[str, SchedulingPolicy] = "greedy"
@@ -112,13 +127,24 @@ class Scenario:
     chip: Union[str, ChipSpec] = "tpu-v5e"
     chunk_target_s: float = 0.05
     seed: int = 0
+    substrate: str = "simulator"       # simulator | engine
+    workflow_release: str = "request"  # engine substrate: request | node
     apps: list[ScenarioApp] = field(default_factory=list)
     workflow: Union[None, str, dict, WorkflowSpec] = None
 
     def __post_init__(self):
+        if self.mode == "engine":      # sugar: concurrent on the real engine
+            self.mode, self.substrate = "concurrent", "engine"
         if self.mode not in MODES:
             raise ValueError(f"unknown scenario mode {self.mode!r}; "
                              f"expected one of {MODES}")
+        if self.substrate not in SUBSTRATES:
+            raise ValueError(f"unknown substrate {self.substrate!r}; "
+                             f"expected one of {SUBSTRATES}")
+        if self.workflow_release not in RELEASES:
+            raise ValueError(
+                f"unknown workflow_release {self.workflow_release!r}; "
+                f"expected one of {RELEASES}")
 
     # ------------------------------------------------------------- helpers
     @property
@@ -162,7 +188,10 @@ class Scenario:
             "chip": self.chip_spec.name,
             "chunk_target_s": self.chunk_target_s,
             "seed": self.seed,
+            "substrate": self.substrate,
         }
+        if self.mode == "workflow":
+            d["workflow_release"] = self.workflow_release
         if self.apps:
             d["apps"] = [a.to_dict() for a in self.apps]
         if self.workflow is not None:
@@ -190,6 +219,18 @@ class Scenario:
                              seed=self.seed + idx, arrival=sa.arrival)
 
     def run(self) -> "ScenarioResult":
+        names = [sa.name or sa.app_type for sa in self.apps]
+        dups = sorted({n for n in names if names.count(n) > 1})
+        if dups:
+            # both substrates key traces/records by app name — duplicates
+            # would silently merge (simulator) or deadlock (engine)
+            raise ValueError(f"duplicate app name(s) {dups}; give each "
+                             "ScenarioApp a unique name=")
+        if self.substrate == "engine":
+            # lazy import: the engine substrate pulls in JAX + the model
+            # zoo, which simulator-only callers never need
+            from repro.bench.engine_runner import run_scenario_on_engine
+            return run_scenario_on_engine(self)
         if self.mode == "exclusive":
             return self._run_exclusive()
         if self.mode == "concurrent":
@@ -230,6 +271,10 @@ class ScenarioResult:
     sims: dict[str, SimResult]         # exclusive: per app; else one entry
     node_finish_s: dict[str, float] = field(default_factory=dict)
     e2e_s: Optional[float] = None
+    substrate: str = "simulator"
+    #: engine substrate only: partition label -> EngineStats (dispatch
+    #: counters); NOT part of the versioned to_json schema
+    engine_stats: dict = field(default_factory=dict)
 
     @property
     def sim(self) -> SimResult:
@@ -254,9 +299,16 @@ class ScenarioResult:
         return out
 
     def to_json(self) -> dict:
-        """Stable, versioned result schema (consumed by dashboards/CI)."""
+        """Stable, versioned result schema (consumed by dashboards/CI).
+
+        Schema 1.1: adds the ``substrate`` field (and mirrors it inside the
+        embedded scenario spec). 1.0 documents are 1.1 documents with
+        ``substrate: simulator`` implied — see docs/scenarios.md for the
+        migration note and ``benchmarks/diff_results.py`` for the
+        regression-diff consumer."""
         return {
             "schema_version": SCHEMA_VERSION,
+            "substrate": self.substrate,
             "scenario": self.scenario.to_dict(),
             "results": self.summary(),
         }

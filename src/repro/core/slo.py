@@ -102,7 +102,8 @@ class SLOReport:
             return {}
         a = np.asarray(lat)
         return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
-                "p95": float(np.percentile(a, 95)), "max": float(a.max()),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99)), "max": float(a.max()),
                 "n": len(a)}
 
     def normalized_latency(self) -> float:

@@ -32,6 +32,12 @@ Hot-path structure (the dispatch-bound seed loop is gone):
 
 Time can be virtual: pass ``step_cost_s(kind, tokens)`` and the engine
 advances its own clock — deterministic tests + pod-scale what-ifs on CPU.
+``request_cost_s(req, kind, tokens)`` refines this to per-request costs
+(each app charges its own analytic per-token roofline cost): a decode step
+then advances the clock by the SUM over active rows — shared hardware
+serializes service demand, matching the pod simulator's contention model.
+This is what lets one engine benchmark a whole multi-app Scenario
+(``repro.bench.engine_runner``) deterministically on CPU.
 """
 from __future__ import annotations
 
@@ -63,7 +69,9 @@ class InferenceEngine:
                  max_seq: int = 256,
                  policy: "str | SchedulingPolicy" = "fcfs",
                  prefill_chunk: int = 16,
-                 step_cost_s: Optional[Callable[[str, int], float]] = None):
+                 step_cost_s: Optional[Callable[[str, int], float]] = None,
+                 request_cost_s: Optional[
+                     Callable[[Request, str, int], float]] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_slots = max_slots
@@ -71,7 +79,8 @@ class InferenceEngine:
         self.policy = get_policy(policy)
         self.prefill_chunk = prefill_chunk
         self._step_cost = step_cost_s
-        self._use_vclock = step_cost_s is not None
+        self._req_cost = request_cost_s
+        self._use_vclock = step_cost_s is not None or request_cost_s is not None
         self._vclock = 0.0
         self._t0 = _time.monotonic()
         self.stats = EngineStats()
@@ -118,9 +127,24 @@ class InferenceEngine:
     def now(self) -> float:
         return self._vclock if self._use_vclock else _time.monotonic() - self._t0
 
-    def _advance(self, kind: str, tokens: int):
-        if self._use_vclock:
+    def _advance(self, kind: str, tokens: int,
+                 req: Optional[Request] = None):
+        if not self._use_vclock:
+            return
+        if self._req_cost is not None and req is not None:
+            self._vclock += self._req_cost(req, kind, tokens)
+        elif self._step_cost is not None:
             self._vclock += self._step_cost(kind, tokens)
+
+    def advance_to(self, t: float) -> None:
+        """Jump the virtual clock forward to ``t`` (idle gap to the next
+        arrival); no-op on wall-clock engines or when ``t`` is in the past.
+        Resets the decode-gap tracker: idle waiting is not a stall, so
+        ``stats.max_decode_gap_s`` keeps measuring scheduling-induced
+        decode starvation only."""
+        if self._use_vclock and t > self._vclock:
+            self._vclock = t
+            self._last_decode_t = None
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -165,7 +189,12 @@ class InferenceEngine:
             self.lengths = new_lengths
             self.stats.prefill_tokens += c
             self.stats.prefill_dispatches += 1
-        self._advance("prefill", len(piece))
+            # cost + timestamp accrue per dispatched sub-chunk (identical
+            # totals for token-linear cost functions), so whole-prompt
+            # policies still expose intra-prompt boundaries to step-SLO
+            # accounting (Request.t_prefill)
+            self._advance("prefill", c, req)
+            req.t_prefill.append(self.now())
         self._partial[slot] = upto
         return upto >= len(prompt)
 
@@ -215,7 +244,13 @@ class InferenceEngine:
             logits, self.cache = self._jit_decode(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.lengths), jnp.asarray(mask))
-            self._advance("decode", len(decoding))
+            if self._req_cost is not None:
+                # shared hardware serializes service demand: the step costs
+                # the sum of every active row's per-token decode cost
+                for i in decoding:
+                    self._advance("decode", 1, self.active[i])
+            else:
+                self._advance("decode", len(decoding))
             t = self.now()
             if self._last_decode_t is not None:
                 self.stats.max_decode_gap_s = max(
@@ -249,6 +284,6 @@ class InferenceEngine:
             if (self._use_vclock and
                     not any(r.arrival_s <= self.now() for r in self.waiting)
                     and all(a is None for a in self.active)):
-                self._vclock = min(r.arrival_s for r in self.waiting)
+                self.advance_to(min(r.arrival_s for r in self.waiting))
             self.step()
         return self.done

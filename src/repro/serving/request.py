@@ -21,11 +21,14 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     deadline_s: Optional[float] = None  # absolute deadline hint (SLO-aware)
+    app: str = ""                      # owning application (scenario runner)
+    priority: int = 0                  # admission class (0 = most urgent)
     # filled by the engine:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     tokens_out: list = field(default_factory=list)
     t_tokens: list = field(default_factory=list)
+    t_prefill: list = field(default_factory=list)  # per prefill-chunk advance
 
     @property
     def ttft(self) -> Optional[float]:

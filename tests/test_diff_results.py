@@ -1,0 +1,136 @@
+"""benchmarks/diff_results.py: metric extraction from both document
+families, the >threshold regression gate, exit codes, and markdown
+rendering (the bench-diff CI job's contract)."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_PATH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / \
+    "diff_results.py"
+_spec = importlib.util.spec_from_file_location("diff_results", _PATH)
+diff_results = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(diff_results)
+
+
+def scenario_doc(attainment=1.0, mean=2.0, makespan=10.0,
+                 substrate="simulator"):
+    return {
+        "schema_version": "1.1",
+        "substrate": substrate,
+        "scenario": {"name": "fig5", "mode": "concurrent",
+                     "policy": "greedy", "substrate": substrate},
+        "results": {"concurrent": {
+            "strategy": "greedy", "makespan_s": makespan,
+            "utilization": 0.5, "energy_kj": 1.0,
+            "apps": {"chatbot": {"slo_attainment": attainment,
+                                 "mean": mean, "p50": mean, "p95": mean,
+                                 "p99": mean, "max": mean, "n": 4}},
+        }},
+    }
+
+
+def bench_doc(us=100.0):
+    return {"version": 1, "smoke": True, "python": "3.10", "machine": "x",
+            "entries": [{"suite": "kernel_bench", "name": "flash",
+                         "us_per_call": us, "derived": ""}]}
+
+
+# ---------------------------------------------------------- extraction
+def test_extracts_scenario_metrics():
+    m = diff_results.extract_metrics(scenario_doc())
+    assert m["fig5[simulator]/concurrent/chatbot/slo_attainment"] == 1.0
+    assert m["fig5[simulator]/concurrent/chatbot/p99"] == 2.0
+    assert m["fig5[simulator]/concurrent/makespan_s"] == 10.0
+
+
+def test_extracts_bench_metrics_and_lists():
+    assert diff_results.extract_metrics(bench_doc(42.0)) == {
+        "kernel_bench/flash/us_per_call": 42.0}
+    both = diff_results.extract_metrics(
+        [scenario_doc(), scenario_doc(substrate="engine")])
+    assert "fig5[simulator]/concurrent/makespan_s" in both
+    assert "fig5[engine]/concurrent/makespan_s" in both
+
+
+def test_unrecognized_document_rejected():
+    with pytest.raises(ValueError, match="unrecognized"):
+        diff_results.extract_metrics({"what": "is this"})
+
+
+# ---------------------------------------------------------------- gate
+def _statuses(old_doc, new_doc, **kw):
+    rows = diff_results.diff_metrics(diff_results.extract_metrics(old_doc),
+                                     diff_results.extract_metrics(new_doc),
+                                     **kw)
+    return {r["metric"]: r["status"] for r in rows}
+
+def test_latency_rise_beyond_threshold_regresses():
+    st = _statuses(scenario_doc(mean=2.0), scenario_doc(mean=2.5))
+    assert st["fig5[simulator]/concurrent/chatbot/mean"] == "regressed"
+    assert st["fig5[simulator]/concurrent/chatbot/slo_attainment"] == "ok"
+
+
+def test_attainment_drop_regresses_and_rise_improves():
+    st = _statuses(scenario_doc(attainment=1.0), scenario_doc(attainment=0.5))
+    assert st["fig5[simulator]/concurrent/chatbot/slo_attainment"] == \
+        "regressed"
+    st = _statuses(scenario_doc(attainment=0.5), scenario_doc(attainment=1.0))
+    assert st["fig5[simulator]/concurrent/chatbot/slo_attainment"] == \
+        "improved"
+
+
+def test_within_threshold_is_ok():
+    st = _statuses(scenario_doc(mean=2.0), scenario_doc(mean=2.1))
+    assert st["fig5[simulator]/concurrent/chatbot/mean"] == "ok"
+
+
+def test_added_and_removed_metrics_do_not_gate():
+    old = diff_results.extract_metrics(bench_doc())
+    new = {"kernel_bench/other/us_per_call": 1.0}
+    rows = diff_results.diff_metrics(old, new)
+    assert {r["status"] for r in rows} == {"added", "removed"}
+
+
+# ----------------------------------------------------------- cli / exit
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", scenario_doc(mean=2.0))
+    ok = _write(tmp_path, "ok.json", scenario_doc(mean=2.0))
+    bad = _write(tmp_path, "bad.json", scenario_doc(mean=9.0))
+    assert diff_results.main([old, ok]) == 0
+    assert diff_results.main([old, bad]) == 1
+    capsys.readouterr()
+
+
+def test_main_missing_baseline(tmp_path, capsys):
+    new = _write(tmp_path, "new.json", scenario_doc())
+    missing = str(tmp_path / "nope.json")
+    assert diff_results.main([missing, new, "--missing-ok"]) == 0
+    assert diff_results.main([missing, new]) == 2
+    out = capsys.readouterr().out
+    assert "no baseline" in out
+
+
+def test_markdown_rendering(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", bench_doc(100.0))
+    new = _write(tmp_path, "new.json", bench_doc(200.0))
+    assert diff_results.main([old, new, "--markdown"]) == 1
+    out = capsys.readouterr().out
+    assert "| metric | old | new | delta | status |" in out
+    assert "regressed" in out
+    assert "`kernel_bench/flash/us_per_call`" in out
+
+
+def test_threshold_flag(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", bench_doc(100.0))
+    new = _write(tmp_path, "new.json", bench_doc(140.0))
+    assert diff_results.main([old, new]) == 1
+    assert diff_results.main([old, new, "--threshold", "0.5"]) == 0
+    capsys.readouterr()

@@ -1,0 +1,242 @@
+"""Engine-substrate scenarios: the same Scenario spec on the real
+InferenceEngine — determinism, schema parity with the simulator substrate,
+consistent policy ranking, the preemptive_priority policy on both
+substrates, and per-request workflow release."""
+import dataclasses
+
+import pytest
+
+from repro.bench import (SCHEMA_VERSION, Scenario, ScenarioApp, get_policy)
+from repro.bench.policy import PreemptivePriorityPolicy
+from repro.core.simulator import AppTrace, PodSimulator
+from repro.core.slo import SLO
+from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+
+ALL_POLICIES = ("greedy", "chunked", "static", "slo_aware", "weighted_fair",
+                "preemptive_priority")
+
+
+def _concurrent(policy, substrate, *, chips=256, seed=1):
+    return Scenario(
+        name="parity", mode="concurrent", policy=policy, total_chips=chips,
+        substrate=substrate, seed=seed,
+        apps=[ScenarioApp("chatbot", num_requests=3),
+              ScenarioApp("imagegen", num_requests=3),
+              ScenarioApp("live_captions", num_requests=8)])
+
+
+def _small_engine(policy="chunked"):
+    return Scenario(
+        name="t", mode="concurrent", policy=policy, total_chips=64,
+        substrate="engine",
+        apps=[ScenarioApp("chatbot", num_requests=2),
+              ScenarioApp("live_captions", num_requests=3)])
+
+
+# ------------------------------------------------------------- spec sugar
+def test_mode_engine_is_concurrent_on_engine_substrate():
+    sc = Scenario(mode="engine", apps=[ScenarioApp("chatbot")])
+    assert sc.mode == "concurrent"
+    assert sc.substrate == "engine"
+
+
+def test_unknown_substrate_rejected():
+    with pytest.raises(ValueError, match="unknown substrate"):
+        Scenario(substrate="abacus")
+    with pytest.raises(ValueError, match="unknown workflow_release"):
+        Scenario(workflow_release="whenever")
+
+
+def test_duplicate_app_names_rejected_on_both_substrates():
+    """Both substrates key traces by app name; duplicates used to merge
+    silently (simulator) or deadlock (engine) — now a clear error."""
+    for substrate in ("simulator", "engine"):
+        sc = Scenario(mode="concurrent", substrate=substrate,
+                      apps=[ScenarioApp("live_captions", num_requests=1),
+                            ScenarioApp("live_captions", num_requests=1)])
+        with pytest.raises(ValueError, match="duplicate app name"):
+            sc.run()
+
+
+def test_substrate_round_trips_through_yaml():
+    sc = _small_engine()
+    sc2 = Scenario.from_yaml(sc.to_yaml())
+    assert sc2.substrate == "engine"
+    assert sc2 == sc
+
+
+# -------------------------------------------------- all policies, engine
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_every_policy_runs_on_engine_deterministically(policy):
+    a = _small_engine(policy).run().to_json()
+    b = _small_engine(policy).run().to_json()
+    assert a == b                      # virtual clock: bit-stable on CPU
+    assert a["substrate"] == "engine"
+    assert a["schema_version"] == SCHEMA_VERSION
+    apps = a["results"]["concurrent"]["apps"]
+    assert set(apps) == {"chatbot", "live_captions"}
+    for stats in apps.values():
+        assert 0.0 <= stats["slo_attainment"] <= 1.0
+        assert stats["n"] > 0
+
+
+# ------------------------------------------------------------ parity
+def test_substrates_emit_schema_identical_documents():
+    """Same YAML -> simulator and engine to_json() documents have identical
+    structure; only the substrate field (and metric values) differ."""
+    eng = _concurrent("slo_aware", "engine").run().to_json()
+    sim_sc = _concurrent("slo_aware", "engine")
+    sim_sc.substrate = "simulator"
+    sim = sim_sc.run().to_json()
+    assert eng["substrate"] == "engine" and sim["substrate"] == "simulator"
+    assert eng["scenario"] == {**sim["scenario"], "substrate": "engine"}
+
+    def key_tree(doc):
+        if isinstance(doc, dict):
+            return {k: key_tree(v) for k, v in doc.items()}
+        return None
+
+    assert key_tree(eng["results"]) == key_tree(sim["results"])
+
+
+def test_substrates_rank_policies_consistently():
+    """The core claim: policy ordering by SLO attainment agrees across the
+    analytic simulator and the real engine on a contended scenario."""
+    def mean_attainment(policy, substrate):
+        doc = _concurrent(policy, substrate).run().to_json()
+        apps = doc["results"]["concurrent"]["apps"].values()
+        return sum(a["slo_attainment"] for a in apps) / len(list(apps))
+
+    for substrate in ("simulator", "engine"):
+        greedy = mean_attainment("greedy", substrate)
+        static = mean_attainment("static", substrate)
+        slo = mean_attainment("slo_aware", substrate)
+        assert greedy < static < slo, (substrate, greedy, static, slo)
+
+
+def test_substrates_agree_on_static_partition_tradeoff():
+    """Static partitioning starves ImageGen (third of the pod misses its
+    step SLO) while protecting latency apps — on BOTH substrates."""
+    for substrate in ("simulator", "engine"):
+        doc = _concurrent("static", substrate).run().to_json()
+        apps = doc["results"]["concurrent"]["apps"]
+        assert apps["imagegen"]["slo_attainment"] == 0.0, substrate
+        assert apps["chatbot"]["slo_attainment"] == 1.0, substrate
+        assert apps["live_captions"]["slo_attainment"] == 1.0, substrate
+
+
+def test_engine_makespan_matches_simulator():
+    """The serialized virtual-cost model conserves total service demand:
+    shared-pool makespans agree across substrates to within a percent."""
+    for policy in ("greedy", "slo_aware"):
+        eng = _concurrent(policy, "engine").run().sim.makespan_s
+        sim = _concurrent(policy, "simulator").run().sim.makespan_s
+        assert eng == pytest.approx(sim, rel=0.01), policy
+
+
+# -------------------------------------------------------- engine extras
+def test_engine_exclusive_mode_runs_each_app_alone():
+    sc = Scenario(name="x", mode="exclusive", policy="greedy",
+                  total_chips=64, substrate="engine",
+                  apps=[ScenarioApp("chatbot", num_requests=2),
+                        ScenarioApp("live_captions", num_requests=2)])
+    res = sc.run()
+    assert set(res.sims) == {"chatbot", "live_captions"}
+    assert res.substrate == "engine"
+    assert res.report("chatbot").attainment == 1.0
+
+
+def test_engine_stats_surface_dispatch_counters():
+    res = _small_engine().run()
+    stats = res.engine_stats
+    assert stats, "engine substrate must surface per-partition EngineStats"
+    st = next(iter(stats.values()))
+    assert st.prefill_dispatches > 0
+    assert st.decode_syncs > 0
+    # dispatch counters are NOT part of the versioned schema
+    assert "engine_stats" not in res.to_json()
+
+
+# ----------------------------------------------------- preemptive policy
+def test_preemptive_priority_registered_with_both_substrate_hooks():
+    p = get_policy("preemptive_priority")
+    assert isinstance(p, PreemptivePriorityPolicy)
+    assert p.name == "preemptive_priority"
+    # engine side: admission ordered by priority class then arrival
+    from repro.serving.request import Request
+
+    def mk(prio, arr):
+        return Request(0, None, 1, priority=prio, arrival_s=arr)
+
+    bg, fg_late, fg_early = mk(1, 0.0), mk(0, 2.0), mk(0, 1.0)
+    assert p.admit_order([bg, fg_late, fg_early], 5.0) == \
+        [fg_early, fg_late, bg]
+    # simulator side: background class demoted behind foreground
+    from repro.core.costs import WorkItem
+    from repro.core.simulator import SimRequest
+    tr_fg = AppTrace("fg", SLO(), [])
+    tr_bg = AppTrace("bg", SLO(), [], background=True)
+    it = WorkItem("fg", 0, "decode", 1.0, 1.0)
+    prio_fg = p.priority(tr_fg, SimRequest("fg", 0, 0.0, [it]), it, 10.0)
+    prio_bg = p.priority(tr_bg, SimRequest("bg", 0, 0.0, [it]), it, 0.0)
+    assert prio_fg < prio_bg
+
+
+def test_preemptive_priority_explicit_levels_beat_background_default():
+    p = PreemptivePriorityPolicy(levels={"vip": 0, "bulk": 2})
+    assert p.level_for("vip", background=True) == 0
+    assert p.level_for("bulk", background=False) == 2
+    assert p.level_for("other", background=True) == 1
+    assert p.level_for("other", background=False) == 0
+
+
+def test_preemptive_priority_protects_foreground_in_simulator():
+    from repro.core.costs import WorkItem
+    from repro.core.simulator import SimRequest
+
+    def trace(name, background):
+        reqs = [SimRequest(name, i, 0.0,
+                           [WorkItem(name, i, "decode", 1e12, 1e10, 0,
+                                     tokens=1)], background=background)
+                for i in range(4)]
+        return AppTrace(name, SLO(e2e=10.0), reqs, background=background)
+
+    res = PodSimulator(64, policy="preemptive_priority").run(
+        [trace("bg", True), trace("fg", False)])
+    fin_fg = max(r.arrival_s + r.e2e_s for r in res.reports["fg"].records)
+    fin_bg = max(r.arrival_s + r.e2e_s for r in res.reports["bg"].records)
+    assert fin_fg < fin_bg
+
+
+# ------------------------------------------------------- workflow release
+def _wf_spec(n=3):
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    wf.tasks = {name: dataclasses.replace(t,
+                                          num_requests=min(t.num_requests, n))
+                for name, t in wf.tasks.items()}
+    return wf
+
+
+def test_engine_workflow_per_request_release_beats_node_release():
+    """Regression (ROADMAP): releasing dependent nodes per REQUEST instead
+    of after the whole upstream node must strictly shorten the pipeline."""
+    def run(release):
+        return Scenario(name="wf", mode="workflow", policy="slo_aware",
+                        total_chips=256, substrate="engine",
+                        workflow_release=release, workflow=_wf_spec()).run()
+
+    per_request = run("request")
+    per_node = run("node")
+    assert per_request.e2e_s < per_node.e2e_s
+    assert set(per_request.node_finish_s) == set(per_node.node_finish_s)
+
+
+def test_engine_workflow_node_release_matches_simulator_e2e():
+    """With node-granularity release the engine reproduces the simulator's
+    fixed-point workflow end-to-end time — cross-substrate validation."""
+    eng = Scenario(name="wf", mode="workflow", policy="slo_aware",
+                   total_chips=256, substrate="engine",
+                   workflow_release="node", workflow=_wf_spec()).run()
+    sim = Scenario(name="wf", mode="workflow", policy="slo_aware",
+                   total_chips=256, workflow=_wf_spec()).run()
+    assert eng.e2e_s == pytest.approx(sim.e2e_s, rel=0.01)
