@@ -61,6 +61,10 @@ def _scenario_metrics(doc: dict) -> dict[str, float]:
         for key in ("makespan_s", "utilization", "energy_kj"):
             if key in summary:
                 out[f"{base}/{label}/{key}"] = float(summary[key])
+        for key in ("page_utilization", "evictions", "recompute_tokens"):
+            if key in summary.get("memory", {}):   # schema 1.2 memory block
+                out[f"{base}/{label}/memory/{key}"] = \
+                    float(summary["memory"][key])
         for app, stats in summary["apps"].items():
             for key in ("slo_attainment", "mean", "p50", "p99"):
                 if key in stats:

@@ -82,7 +82,10 @@ def run() -> list[str]:
             f"max_decode_gap_s={stats.max_decode_gap_s:.3f};"
             f"makespan_s={sim.makespan_s:.2f};"
             f"prefill_dispatches={stats.prefill_dispatches};"
-            f"decode_syncs={stats.decode_syncs}"))
+            f"decode_syncs={stats.decode_syncs};"
+            f"pages_in_use={stats.pages_in_use};"
+            f"evictions={stats.evictions};"
+            f"recompute_tokens={stats.recompute_tokens}"))
     return rows
 
 

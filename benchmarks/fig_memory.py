@@ -1,0 +1,90 @@
+"""Memory-contention scenario family (the paper's §4.3 model-sharing
+inefficiency, reproduced as PAGE pressure instead of a static slot count).
+
+One three-app workload — LiveCaptions (latency-critical), Chatbot, and the
+KV-giant DeepResearch — runs under a shrinking KV page budget on BOTH
+substrates:
+
+* **simulator rows** — the analytic memory model: as the budget tightens,
+  DeepResearch's resident context forces LRU evict-and-recompute cycles;
+  evictions and recomputed tokens climb and the makespan degrades while
+  the unconstrained run is untouched.
+* **engine row** — the real paged InferenceEngine under a small pool:
+  page-gated admission + preempt-to-evict, with
+  ``pages_in_use``/``evictions``/``recompute_tokens`` surfaced from
+  EngineStats into the schema-1.2 ``memory`` block.
+
+Row value = makespan (the metric recompute moves); derived carries the
+memory block — all virtual-clock deterministic, so the rows are diffable
+in CI (``bench-diff``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_requests
+from repro.bench import Scenario, ScenarioApp
+
+#: full-scale page budgets (pages of 16 tokens): ample -> thrashing.
+#: DeepResearch alone holds ~131k pages; 132k leaves slack for captions
+#: only until chatbot bursts arrive; 131.1k thrashes.
+SIM_BUDGETS = (None, 200_000, 132_000, 131_100)
+#: tiny-vehicle pool (page_size 8): just above the largest single request
+#: (~8 pages) and below the concurrent working set (~13), so admission
+#: succeeds but decode growth forces preempt-to-evict cycles
+ENGINE_BUDGET_PAGES = 10
+
+
+def scenario(budget_pages, *, substrate: str = "simulator",
+             policy: str = "slo_aware") -> Scenario:
+    apps = [ScenarioApp("live_captions", num_requests=smoke_requests(10)),
+            ScenarioApp("chatbot", num_requests=smoke_requests(4)),
+            ScenarioApp("deep_research", num_requests=1)]
+    return Scenario(
+        name=f"mem-{budget_pages or 'unbounded'}-{substrate}",
+        mode="concurrent", policy=policy, total_chips=64,
+        substrate=substrate,
+        kv_page_budget=budget_pages,
+        page_size=16 if substrate == "simulator" else 8,
+        apps=apps)
+
+
+def engine_scenario() -> Scenario:
+    """Small-pool engine run: captions + chatbot on one chip, pool sized to
+    force preempt-to-evict while staying deterministic and CI-fast."""
+    return Scenario(
+        name="mem-engine", mode="engine", policy="chunked", total_chips=1,
+        kv_page_budget=ENGINE_BUDGET_PAGES, page_size=8,
+        apps=[ScenarioApp("live_captions", num_requests=smoke_requests(6)),
+              ScenarioApp("chatbot", num_requests=smoke_requests(3))])
+
+
+def _mem_derived(summary: dict) -> str:
+    m = summary.get("memory", {})
+    if not m:
+        return "memory=unbounded"
+    return (f"pages_in_use={m['pages_in_use']};"
+            f"page_utilization={m['page_utilization']:.3f};"
+            f"evictions={m['evictions']};"
+            f"recompute_tokens={m['recompute_tokens']}")
+
+
+def run() -> list[str]:
+    rows = []
+    for budget in SIM_BUDGETS:
+        res = scenario(budget).run()
+        s = res.sim.summary()
+        cap = s["apps"]["live_captions"]
+        rows.append(row(
+            f"mem_sim_{budget or 'unbounded'}", s["makespan_s"] * 1e6,
+            f"{_mem_derived(s)};captions_slo={cap['slo_attainment']:.3f};"
+            f"captions_p99={cap.get('p99', 0.0):.4f}"))
+    res = engine_scenario().run()
+    s = res.sim.summary()
+    cap = s["apps"]["live_captions"]
+    rows.append(row(
+        "mem_engine_paged", s["makespan_s"] * 1e6,
+        f"{_mem_derived(s)};captions_slo={cap['slo_attainment']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,221 @@
+"""Result-schema consumer: render ``ScenarioResult.to_json()`` documents to
+a markdown report and (optionally) PNG charts — the non-diff half of the
+dashboard (``diff_results.py`` is the regression-diff half).
+
+Input: any mix of files, each holding one document or a JSON array of
+documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
+1.0–1.2; the 1.2 ``memory`` block (page utilization, evictions, recompute)
+is surfaced when present.
+
+    python benchmarks/plot_results.py results/*.json            # markdown
+    python benchmarks/plot_results.py sweep.json --png out.png  # + charts
+
+The PNG needs matplotlib; without it the command still emits the markdown
+report and says what it skipped. Charts follow the repo's dataviz rules:
+fixed-order categorical palette (never cycled), one axis per chart, thin
+marks, direct labels, a legend whenever more than one series is shown —
+and the markdown table IS the accessible table view of the same data.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Optional
+
+# fixed-order categorical palette (validated; assign by slot, never cycle —
+# >4 series fold into "other")
+SERIES = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100")
+TEXT_PRIMARY = "#0b0b0b"
+TEXT_SECONDARY = "#52514e"
+GRID = "#e3e2de"
+SURFACE = "#fcfcfb"
+MAX_SERIES = 4
+
+
+# ----------------------------------------------------------------- loading
+def load_docs(paths: list[str]) -> list[dict]:
+    docs: list[dict] = []
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        docs.extend(doc if isinstance(doc, list) else [doc])
+    bad = [d for d in docs if "schema_version" not in d or "results" not in d]
+    if bad:
+        raise ValueError(
+            "not a ScenarioResult to_json() document (missing "
+            "schema_version/results); got keys "
+            f"{sorted(bad[0])[:6]} — BENCH_*.json kernel documents go to "
+            "diff_results.py, not here")
+    return docs
+
+
+def _arrival_rate(doc: dict) -> Optional[float]:
+    """The swept Poisson rate, when every app shares one (sweep points)."""
+    rates = set()
+    for app in doc.get("scenario", {}).get("apps", []):
+        arr = app.get("arrival") or {}
+        if arr.get("kind") == "poisson":
+            rates.add(float(arr["rate_per_s"]))
+    return rates.pop() if len(rates) == 1 else None
+
+
+def flatten(doc: dict) -> list[dict]:
+    """One row per (sim label, app) with the metrics the report shows."""
+    rows = []
+    scenario = doc.get("scenario", {})
+    name = scenario.get("name", "scenario")
+    substrate = doc.get("substrate", scenario.get("substrate", "simulator"))
+    rate = _arrival_rate(doc)
+    for label, summary in doc.get("results", {}).items():
+        if not isinstance(summary, dict) or "apps" not in summary:
+            continue
+        mem = summary.get("memory", {})
+        for app, stats in summary["apps"].items():
+            rows.append({
+                "scenario": name, "substrate": substrate, "label": label,
+                "app": app, "rate_per_s": rate,
+                "attainment": stats.get("slo_attainment"),
+                "p99_s": stats.get("p99"),
+                "makespan_s": summary.get("makespan_s"),
+                "page_utilization": mem.get("page_utilization"),
+                "evictions": mem.get("evictions"),
+                "recompute_tokens": mem.get("recompute_tokens"),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------- markdown
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def to_markdown(rows: list[dict]) -> str:
+    cols = ["scenario", "substrate", "app", "rate_per_s", "attainment",
+            "p99_s", "page_utilization", "evictions", "recompute_tokens"]
+    # drop all-empty optional columns (memory block absent on <1.2 docs)
+    cols = [c for c in cols
+            if c in ("scenario", "substrate", "app")
+            or any(r.get(c) is not None for r in rows)]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(_fmt(r.get(c)) for c in cols) + " |")
+    return "\n".join(out)
+
+
+# ------------------------------------------------------------------- plots
+def render_png(rows: list[dict], path: str) -> bool:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("# matplotlib unavailable: skipped PNG (markdown above is "
+              "the full report)", file=sys.stderr)
+        return False
+
+    sweep = [r for r in rows if r["rate_per_s"] is not None
+             and r["attainment"] is not None]
+    mem = {}
+    for r in rows:
+        if r["evictions"] is not None:
+            mem.setdefault((r["scenario"], r["label"]), r)
+    panels = (1 if sweep else 0) + (2 if mem else 0)
+    if not panels:
+        print("# nothing to plot: no sweep points and no memory blocks",
+              file=sys.stderr)
+        return False
+
+    fig, axes = plt.subplots(1, panels, figsize=(5.2 * panels, 3.6))
+    axes = [axes] if panels == 1 else list(axes)
+    for ax in axes:
+        ax.set_facecolor(SURFACE)
+        ax.grid(True, color=GRID, linewidth=0.8)
+        ax.set_axisbelow(True)
+        for spine in ("top", "right"):
+            ax.spines[spine].set_visible(False)
+        for spine in ("left", "bottom"):
+            ax.spines[spine].set_color(GRID)
+        ax.tick_params(colors=TEXT_SECONDARY, labelsize=8)
+    fig.patch.set_facecolor(SURFACE)
+
+    if sweep:
+        ax = axes.pop(0)
+        apps = []
+        for r in sweep:                       # fixed first-seen slot order
+            if r["app"] not in apps:
+                apps.append(r["app"])
+        shown, folded = apps[:MAX_SERIES], apps[MAX_SERIES:]
+        for slot, app in enumerate(shown):
+            pts = sorted((r["rate_per_s"], r["attainment"])
+                         for r in sweep if r["app"] == app)
+            xs, ys = zip(*pts)
+            ax.plot(xs, ys, color=SERIES[slot], linewidth=2,
+                    marker="o", markersize=4, label=app)
+            # stagger end labels per slot: coincident series (e.g. every
+            # app at attainment 1.0) must not overprint
+            ax.annotate(app, (xs[-1], ys[-1]), textcoords="offset points",
+                        xytext=(6, -slot * 11), fontsize=8,
+                        color=TEXT_PRIMARY)
+        if folded:
+            print(f"# folded {len(folded)} app(s) beyond {MAX_SERIES} "
+                  f"series: {', '.join(folded)}", file=sys.stderr)
+        ax.set_xlabel("arrival rate (req/s)", color=TEXT_SECONDARY,
+                      fontsize=9)
+        ax.set_ylabel("SLO attainment", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_ylim(-0.02, 1.05)
+        if len(shown) > 1:
+            ax.legend(fontsize=8, frameon=False, labelcolor=TEXT_PRIMARY)
+        ax.set_title("attainment vs Poisson rate", color=TEXT_PRIMARY,
+                     fontsize=10)
+
+    if mem:
+        labels = [f"{s}\n{l}" if l != "concurrent" else s
+                  for s, l in mem]
+        # two measures of different scale -> two charts, never a dual axis
+        for ax, key, title in ((axes[0], "page_utilization",
+                                "peak page utilization"),
+                               (axes[1], "evictions", "evictions")):
+            vals = [m[key] or 0 for m in mem.values()]
+            ax.bar(range(len(vals)), vals, color=SERIES[0], width=0.62)
+            ax.set_xticks(range(len(vals)))
+            ax.set_xticklabels(labels, fontsize=7, color=TEXT_SECONDARY)
+            for i, v in enumerate(vals):
+                ax.annotate(_fmt(v), (i, v), ha="center",
+                            textcoords="offset points", xytext=(0, 3),
+                            fontsize=8, color=TEXT_PRIMARY)
+            ax.set_title(title, color=TEXT_PRIMARY, fontsize=10)
+
+    fig.tight_layout()
+    fig.savefig(path, dpi=144)
+    print(f"# wrote {path}", file=sys.stderr)
+    return True
+
+
+# -------------------------------------------------------------------- main
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("paths", nargs="+",
+                    help="ScenarioResult to_json() files (or JSON arrays "
+                         "of them, e.g. a saved sweep)")
+    ap.add_argument("--png", default="",
+                    help="also render charts to this PNG (needs matplotlib)")
+    args = ap.parse_args(argv)
+
+    rows = [r for doc in load_docs(args.paths) for r in flatten(doc)]
+    if not rows:
+        print("no app results found", file=sys.stderr)
+        return 1
+    print(to_markdown(rows))
+    if args.png:
+        render_png(rows, args.png)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

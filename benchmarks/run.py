@@ -63,13 +63,15 @@ def main(argv=None) -> None:
 
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
-                            fig7_workflow, kernel_bench, roofline_table)
+                            fig7_workflow, fig_memory, kernel_bench,
+                            roofline_table)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
         ("fig5_concurrent", fig5_concurrent.run),
         ("fig6_sharing", fig6_sharing.run),
         ("fig7_workflow", fig7_workflow.run),
+        ("fig_memory", fig_memory.run),
         ("appendix_platforms", appendix_platforms.run),
         ("engine_bench", engine_bench.run),
         ("kernel_bench", kernel_bench.run),

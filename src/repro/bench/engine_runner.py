@@ -317,24 +317,62 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             chunk_target_s=sc.chunk_target_s, setup_s=setup_s,
             dep_gates_for=dep_fn, priority=prio)
 
+    # memory knobs -> a page budget for the (reduced) execution vehicle,
+    # via the shared pool-sizing helper; partitions own their chips, so
+    # each gets a chip-proportional share
+    pages_total = sc.kv_page_budget
+    if pages_total is None and sc.memory_mb is not None:
+        from repro.roofline.hw import kv_pool_pages
+        pages_total = kv_pool_pages(chip, model.kv_bytes_per_token(),
+                                    sc.page_size,
+                                    memory_mb=sc.memory_mb) or None
+
     runs = []
     for p_i, part in enumerate(parts):
         mine = [p for p in pending if p.run_idx == p_i]
         need = max((len(p.request.prompt) + p.request.max_new_tokens
                     for p in mine), default=PROMPT_MIN_TOKENS) + 8
         max_seq = math.ceil(need / SEQ_BUCKET) * SEQ_BUCKET
+        kv_pages = None
+        if pages_total is not None:
+            kv_pages = max(1, pages_total * chips_of[part] // total_chips)
+        # the scenario's page_size only governs budgeted pools; without a
+        # budget the engine consults the autotuner's paged_decode_attention
+        # entry for the page size (page_size=None)
         eng = InferenceEngine(model, max_slots=ENGINE_SLOTS, max_seq=max_seq,
                               policy=policy,
                               prefill_chunk=ENGINE_PREFILL_CHUNK,
-                              request_cost_s=_request_cost)
+                              request_cost_s=_request_cost,
+                              kv_pages=kv_pages,
+                              page_size=(sc.page_size
+                                         if pages_total is not None else None))
         eng.load_params(params)
         runs.append(_EngineRun(engine=eng, chips=chips_of[part]))
 
     completed, util = _drive(runs, pending, total_chips)
     recs = _records(runs, {t.name: t for t in traces})
     reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
+    paged = [r.engine for r in runs if r.engine.paged]
+    mem = {}
+    # the versioned "memory" block appears only when the scenario set a
+    # budget — mirroring the simulator substrate, so the two substrates
+    # keep emitting schema-identical documents. Partition pools are
+    # independent memory slices whose peaks happen at different instants,
+    # so the binding constraint is the MOST-utilized pool: report the max
+    # per-pool utilization (scaled onto the total budget), not the sum of
+    # staggered peaks, which could overstate utilization past 1.0.
+    if paged and pages_total is not None:
+        page = paged[0].page_size
+        budget = sum(e.kv_pages for e in paged)
+        pool_util = max(e.stats.pages_in_use / e.kv_pages for e in paged)
+        mem = dict(
+            kv_token_budget=budget * page,
+            page_size=page,
+            peak_kv_tokens=round(pool_util * budget) * page,
+            evictions=sum(e.stats.evictions for e in paged),
+            recompute_tokens=sum(e.stats.recompute_tokens for e in paged))
     sim = SimResult(reports=reports, util=util, total_chips=total_chips,
-                    chip=chip, strategy=policy.name)
+                    chip=chip, strategy=policy.name, **mem)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed
 

@@ -42,6 +42,10 @@ Shipped policies:
                else background demoted one class) with chunk-boundary
                preemption simulator-side and class-ordered slot admission
                engine-side (ROADMAP follow-on).
+  deficit_round_robin (alias: drr) — BEYOND-PAPER: per-app TOKEN deficits
+               (Shreedhar–Varghese DRR); one quantum of tokens per app per
+               round on both substrates, no SLO hints or weights needed
+               (ROADMAP follow-on).
 """
 from __future__ import annotations
 
@@ -147,6 +151,11 @@ class SchedulingPolicy:
         :class:`ChunkedPolicy` and descendants opt into chunking)."""
         return None
 
+    def on_admit(self, req: "Request") -> None:
+        """Observe a request actually claiming a decode slot — the
+        engine-side state hook (mirror of the simulator's
+        :meth:`on_dispatch`; deficit/fair-queueing policies charge here)."""
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"{type(self).__name__}(name={self.name!r})"
 
@@ -244,6 +253,79 @@ class PreemptivePriorityPolicy(ChunkedPolicy):
                     now: float) -> list["Request"]:
         return sorted(ready, key=lambda r: (getattr(r, "priority", 0),
                                             r.arrival_s))
+
+
+@register_policy("deficit_round_robin", "drr")
+class DeficitRoundRobinPolicy(SchedulingPolicy):
+    """BEYOND-PAPER: deficit round robin over apps, in TOKENS.
+
+    Each app carries a token deficit replenished by ``quantum_tokens`` per
+    round; serving work charges its token count against the deficit, and
+    an app that overdraws advances to a later round. The queue key is the
+    app's current round (then ready time), so every app gets roughly one
+    quantum of tokens per round regardless of how bursty or token-hungry
+    its requests are — O(1) fairness without SLO hints or weights (the
+    classic Shreedhar–Varghese scheduler, applied to tokens).
+
+    Both substrates consume the same deficit state: the simulator charges
+    each dispatched work item (``on_dispatch``), the engine charges a
+    request's whole token demand when admission ordering consults it
+    (``admit_order``) — slot admission is the engine's scheduling decision
+    point, mirroring ``priority`` being the simulator's."""
+
+    def __init__(self, quantum_tokens: int = 256,
+                 background_rounds: int = 4):
+        self.quantum_tokens = quantum_tokens
+        #: background apps replenish every Nth round: strict-ish demotion
+        #: without starvation
+        self.background_rounds = background_rounds
+        self._round: dict[str, int] = {}
+        self._deficit: dict[str, float] = {}
+
+    def reset(self) -> None:
+        self._round = {}
+        self._deficit = {}
+
+    def _charge(self, app: str, tokens: float, background: bool) -> None:
+        """Spend ``tokens`` of the app's deficit, rolling into later rounds
+        (background apps pay ``background_rounds`` rounds per quantum)."""
+        per_round = self.quantum_tokens / (self.background_rounds
+                                           if background else 1)
+        d = self._deficit.get(app, per_round) - max(tokens, 1.0)
+        while d < 0:
+            self._round[app] = self._round.get(app, 0) + 1
+            d += per_round
+        self._deficit[app] = d
+
+    def _item_tokens(self, item: "WorkItem") -> float:
+        return float(getattr(item, "tokens", 0) or 1)
+
+    # simulator: round dominates the queue key; dispatch charges the item
+    def priority(self, trace: "AppTrace", req: "SimRequest",
+                 item: "WorkItem", now: float) -> float:
+        return self._round.get(req.app, 0) * BACKGROUND_DEMOTION_S + now
+
+    def on_dispatch(self, trace: "AppTrace", req: "SimRequest",
+                    item: "WorkItem", start: float, end: float,
+                    chips: int) -> None:
+        self._charge(req.app, self._item_tokens(item),
+                     req.background or trace.background)
+
+    # engine: round-ordered slot admission; actual admission charges the
+    # request's whole token demand (the engine's scheduling decision point)
+    def admit_order(self, ready: list["Request"],
+                    now: float) -> list["Request"]:
+        return sorted(
+            ready, key=lambda r: (self._round.get(r.app, 0), r.arrival_s))
+
+    def on_admit(self, req: "Request") -> None:
+        if req.tokens_out:
+            return   # preempt-to-evict re-admission: demand already charged
+        self._charge(req.app, len(req.prompt) + req.max_new_tokens,
+                     getattr(req, "priority", 0) > 0)
+
+    def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
+        return default_chunk    # chunked prefill: rounds stay responsive
 
 
 @register_policy("weighted_fair")

@@ -53,7 +53,10 @@ from repro.core.slo import SLO
 from repro.core.workflow import WorkflowSpec, parse_workflow
 from repro.roofline.hw import ChipSpec, get_chip
 
-SCHEMA_VERSION = "1.1"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.2"   # 1.1: + top-level "substrate", scenario.substrate
+                         # 1.2: + per-sim "memory" block (page utilization,
+                         #      evictions, recompute) + memory knobs in the
+                         #      embedded scenario spec
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
@@ -129,6 +132,17 @@ class Scenario:
     seed: int = 0
     substrate: str = "simulator"       # simulator | engine
     workflow_release: str = "request"  # engine substrate: request | node
+    #: memory-pressure knobs (schema 1.2). ``kv_page_budget`` caps the KV
+    #: pool in PAGES of ``page_size`` tokens; ``memory_mb`` derives the
+    #: budget from bytes instead (substrate-native: full-scale KV bytes on
+    #: the simulator, the reduced execution vehicle's on the engine).
+    #: None = unconstrained (pre-paging behaviour).
+    memory_mb: Optional[float] = None
+    kv_page_budget: Optional[int] = None
+    page_size: int = 16
+    #: arrival rates for :meth:`sweep` (one ScenarioResult per rate);
+    #: serialized so a sweep is one YAML document
+    sweep_rates: list = field(default_factory=list)
     apps: list[ScenarioApp] = field(default_factory=list)
     workflow: Union[None, str, dict, WorkflowSpec] = None
 
@@ -155,6 +169,25 @@ class Scenario:
     @property
     def policy_name(self) -> str:
         return self.policy if isinstance(self.policy, str) else self.policy.name
+
+    def kv_token_budget(self) -> Optional[int]:
+        """The memory knobs as a full-scale KV TOKEN budget (simulator
+        substrate). ``kv_page_budget`` wins; ``memory_mb`` divides by the
+        most expensive app's per-token KV bytes (conservative), through
+        the same :func:`repro.roofline.hw.kv_pool_pages` sizing the engine
+        substrate and platform budgets use."""
+        if self.kv_page_budget is not None:
+            return self.kv_page_budget * self.page_size
+        if self.memory_mb is None:
+            return None
+        from repro.roofline.hw import kv_bytes_per_token, kv_pool_pages
+        per_tok = max((kv_bytes_per_token(sa.build().cfg)
+                       for sa in self.apps), default=0)
+        pages = kv_pool_pages(self.chip_spec, per_tok, self.page_size,
+                              memory_mb=self.memory_mb)
+        if pages <= 0:
+            return None              # no app holds KV: knob is a no-op
+        return pages * self.page_size
 
     def workflow_spec(self) -> WorkflowSpec:
         if self.workflow is None:
@@ -192,6 +225,14 @@ class Scenario:
         }
         if self.mode == "workflow":
             d["workflow_release"] = self.workflow_release
+        if self.memory_mb is not None:
+            d["memory_mb"] = self.memory_mb
+        if self.kv_page_budget is not None:
+            d["kv_page_budget"] = self.kv_page_budget
+        if self.memory_mb is not None or self.kv_page_budget is not None:
+            d["page_size"] = self.page_size
+        if self.sweep_rates:
+            d["sweep_rates"] = list(self.sweep_rates)
         if self.apps:
             d["apps"] = [a.to_dict() for a in self.apps]
         if self.workflow is not None:
@@ -211,7 +252,9 @@ class Scenario:
         return PodSimulator(total_chips or self.total_chips,
                             policy=policy if policy is not None else self.policy,
                             chip=self.chip_spec,
-                            chunk_target_s=self.chunk_target_s)
+                            chunk_target_s=self.chunk_target_s,
+                            kv_token_budget=self.kv_token_budget(),
+                            page_size=self.page_size)
 
     def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
                start_s: float = 0.0) -> AppTrace:
@@ -236,6 +279,31 @@ class Scenario:
         if self.mode == "concurrent":
             return self._run_concurrent()
         return self._run_workflow()
+
+    def sweep(self, rates_per_s: Optional[list] = None, *,
+              apps: Optional[list] = None) -> list["ScenarioResult"]:
+        """Arrival-rate load curve: run this scenario once per Poisson rate
+        (``rates_per_s`` or the spec's ``sweep_rates``) and return one
+        :class:`ScenarioResult` per point — attainment-vs-rate curves from
+        one declaration, on either substrate. ``apps`` restricts which app
+        names get the swept arrival process (default: all)."""
+        rates = list(rates_per_s if rates_per_s is not None
+                     else self.sweep_rates)
+        if not rates:
+            raise ValueError("no sweep rates: pass rates_per_s or set "
+                             "Scenario.sweep_rates")
+        from repro.bench.arrival import PoissonArrivals
+        results = []
+        for rate in rates:
+            swept = [dataclasses.replace(
+                         sa, arrival=PoissonArrivals(rate_per_s=float(rate)))
+                     if apps is None or (sa.name or sa.app_type) in apps
+                     else sa
+                     for sa in self.apps]
+            point = dataclasses.replace(self, name=f"{self.name}@{rate}",
+                                        apps=swept, sweep_rates=[])
+            results.append(point.run())
+        return results
 
     def _run_exclusive(self) -> "ScenarioResult":
         """Each app alone on the device (paper §4.1 upper bound; on

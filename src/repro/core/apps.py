@@ -48,7 +48,8 @@ class AppDef:
             ttft = self.slo.ttft or 1.0
             tpot = self.slo.tpot or 0.25
             items = [WorkItem(self.name, rid, "prefill", pf, pb, pc,
-                              chunkable=True, slo_hint_s=ttft)]
+                              chunkable=True, slo_hint_s=ttft,
+                              tokens=prompt)]
             df, db, dc, hf, hb = costs.decode_cost(
                 c, b, prompt, kv_cache_on_host=self.kv_cache_on_host)
             for j in range(new // 8):
@@ -59,20 +60,24 @@ class AppDef:
                                       host_bytes=hb * 8, tokens=8,
                                       slo_hint_s=hint))
             return SimRequest(self.name, rid, arrival, items,
-                              deadline_hint_s=self.slo.ttft or 1.0)
+                              deadline_hint_s=self.slo.ttft or 1.0,
+                              kv_tokens=b * (prompt + new))
         if self.app_type == "deep_research":
             items = []
             for _ in range(48):
                 pf, pb, pc = costs.prefill_cost(c, 16, 131_072)
                 items.append(WorkItem(self.name, rid, "prefill", pf, pb, pc,
-                                      chunkable=True))
+                                      chunkable=True, tokens=131_072))
                 df, db, dc, hf, hb = costs.decode_cost(
                     c, 16, 131_072, kv_cache_on_host=self.kv_cache_on_host)
                 items.append(WorkItem(self.name, rid, "decode", df * 64,
                                       db * 64, dc * 64, host_flops=hf * 64,
                                       host_bytes=hb * 64, tokens=64))
+            # one 16 x 131k context is resident at a time (the 48 rounds
+            # run sequentially) — the KV giant that triggers contention
             return SimRequest(self.name, rid, arrival, items,
-                              deadline_hint_s=3600.0, background=True)
+                              deadline_hint_s=3600.0, background=True,
+                              kv_tokens=16 * (131_072 + 64))
         if self.app_type == "imagegen":
             items = []
             for _ in range(8):   # denoising steps (SD-3.5-TURBO: few-step)
@@ -86,13 +91,14 @@ class AppDef:
             seg = self.slo.segment or 2.0
             ef, eb, ec = costs.forward_cost(c, 256)   # 2 s of fbank frames
             items = [WorkItem(self.name, rid, "encode", ef, eb, ec,
-                              slo_hint_s=seg / 4)]
+                              slo_hint_s=seg / 4, tokens=256)]
             df, db, dc, hf, hb = costs.decode_cost(c, 1, 512)
             for _ in range(24):
                 items.append(WorkItem(self.name, rid, "decode", df, db, dc,
                                       tokens=1, slo_hint_s=seg / 8))
             return SimRequest(self.name, rid, arrival, items,
-                              deadline_hint_s=self.slo.segment or 2.0)
+                              deadline_hint_s=self.slo.segment or 2.0,
+                              kv_tokens=512 + 24)
         raise ValueError(self.app_type)
 
     #: default inter-request cadence per app type (LiveCaptions' 2 s audio

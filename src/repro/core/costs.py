@@ -37,7 +37,9 @@ class WorkItem:
     host_bytes: float = 0.0
     chunkable: bool = False
     min_chips: int = 1
-    tokens: int = 1                # decode tokens this item produces
+    tokens: int = 1                # tokens this item computes (decode: per
+                                   # sequence; prefill: prompt length) —
+                                   # drives tpot/recompute/DRR accounting
     slo_hint_s: float = 1.0        # per-item slack for SLO-aware priority
     meta: dict = field(default_factory=dict)
 

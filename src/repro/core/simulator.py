@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import warnings
 from dataclasses import dataclass
 from typing import Union
@@ -38,6 +39,10 @@ class SimRequest:
     items: list[WorkItem]
     deadline_hint_s: float = 1.0      # for slack priority
     background: bool = False
+    #: KV/working-set tokens the request holds while in flight (full-scale
+    #: accounting for the analytic memory model; 0 = no resident footprint,
+    #: e.g. diffusion denoising)
+    kv_tokens: int = 0
 
 
 @dataclass
@@ -58,9 +63,19 @@ class UtilSample:
 
 
 class PodSimulator:
+    """``kv_token_budget`` enables the analytic memory model (the paged
+    engine's discrete-event mirror): each request's ``kv_tokens`` must be
+    resident while it runs; when an admission would overflow the budget,
+    the least-recently-dispatched resident request is EVICTED — its chain
+    restarts from item 0 (evict-and-recompute) and the lost work is counted
+    in ``SimResult.recompute_tokens``. None (default) keeps memory
+    unconstrained, the pre-paging behaviour."""
+
     def __init__(self, total_chips: int, *,
                  policy: Union[str, SchedulingPolicy] = "greedy",
                  chip: ChipSpec = TPU_V5E, chunk_target_s: float = 0.05,
+                 kv_token_budget: Union[int, None] = None,
+                 page_size: int = 16,
                  strategy: Union[str, None] = None):
         if strategy is not None:
             warnings.warn("PodSimulator(strategy=...) is deprecated; use "
@@ -71,6 +86,8 @@ class PodSimulator:
         self.policy = get_policy(policy)
         self.chip = chip
         self.chunk_target_s = chunk_target_s
+        self.kv_token_budget = kv_token_budget
+        self.page_size = page_size
         self._seq = itertools.count()
 
     @property
@@ -106,31 +123,112 @@ class PodSimulator:
 
         state: dict[tuple[str, int], dict] = {}
 
+        # ---- analytic memory model (None budget = unconstrained) -------
+        budget = self.kv_token_budget
+        resident: dict[tuple, tuple[SimRequest, int]] = {}  # key -> (req, tok)
+        executing: set[tuple] = set()
+        epoch: dict[tuple, int] = {}        # bumped on eviction: stale marker
+        last_use: dict[tuple, float] = {}
+        #: anti-livelock: a request that has been evicted loses its right
+        #: to evict others — its re-admissions wait for FREE budget. Two
+        #: footprints that cannot co-reside then serialize instead of
+        #: ping-pong evicting each other forever; total evictions are
+        #: bounded by (requests x residents), so run() always terminates.
+        evicted_ever: set[tuple] = set()
+        mem = {"resident": 0, "peak": 0, "evictions": 0, "recompute": 0}
+
         def enqueue(partition: str, ready_t: float, req: SimRequest,
                     item_idx: int, chunk_frac: float):
             prio = policy.priority(apps[req.app], req, req.items[item_idx],
                                    ready_t)
             heapq.heappush(queues[partition],
                            (prio, ready_t, next(self._seq), req, item_idx,
-                            chunk_frac))
+                            chunk_frac,
+                            epoch.get((req.app, req.request_id), 0)))
+
+        def evict(k: tuple, now: float):
+            """Evict-and-recompute: drop the victim's residency and restart
+            its chain from item 0 (its queued entry goes stale)."""
+            req, toks = resident.pop(k)
+            mem["resident"] -= toks
+            mem["evictions"] += 1
+            st = state[k]
+            mem["recompute"] += int(st.get("tokens_done", 0))
+            st["tokens_done"] = 0
+            st["decode_done"] = 0
+            st["decode_t0"] = None
+            epoch[k] = epoch.get(k, 0) + 1
+            evicted_ever.add(k)
+            enqueue(partition_of[req.app], now, req, 0, 1.0)
+
+        def admit(req: SimRequest, now: float) -> bool:
+            """Make the request resident, LRU-evicting idle residents to
+            fit; False = no room right now (an in-flight request holds the
+            pool — retry after its completion)."""
+            k = (req.app, req.request_id)
+            if budget is None or req.kv_tokens <= 0 or k in resident:
+                return True
+            need = min(req.kv_tokens, budget)   # clamp: must be runnable
+            while mem["resident"] + need > budget:
+                cands = [kk for kk in resident
+                         if kk not in executing and kk != k]
+                # previously-evicted requests have no eviction rights, but
+                # an otherwise-empty pool must still admit them (the last
+                # residents standing may be un-evictable executing ones)
+                if not cands or (k in evicted_ever and resident):
+                    return False
+                # feasibility first: if the EXECUTING residue alone still
+                # blocks admission, evicting idle victims only destroys
+                # their work without helping — wait for a completion
+                if (mem["resident"]
+                        - sum(resident[kk][1] for kk in cands)
+                        + need > budget):
+                    return False
+                evict(min(cands, key=lambda kk: last_use.get(kk, 0.0)), now)
+            resident[k] = (req, need)
+            mem["resident"] += need
+            mem["peak"] = max(mem["peak"], mem["resident"])
+            return True
 
         def try_dispatch(partition: str, now: float):
-            if not queues[partition] or busy_until[partition] > now + 1e-12:
+            # memory-blocked entries are HELD aside (and restored after),
+            # not left at the head: a request waiting for KV room must not
+            # stall residents queued behind it, whose completions are what
+            # eventually free that room
+            held: list = []
+            try:
+                _try_dispatch(partition, now, held)
+            finally:
+                for entry in held:
+                    heapq.heappush(queues[partition], entry)
+
+        def _try_dispatch(partition: str, now: float, held: list):
+            while queues[partition] and busy_until[partition] <= now + 1e-12:
+                entry = heapq.heappop(queues[partition])
+                prio, ready_t, seq, req, idx, frac, ep = entry
+                k = (req.app, req.request_id)
+                if ep != epoch.get(k, 0):
+                    continue    # superseded by an eviction restart
+                if not admit(req, now):
+                    held.append(entry)
+                    continue
+                item = req.items[idx]
+                chips = chips_of[partition]
+                full_dur = item.duration_s(chips, self.chip)
+                run_frac = min(frac, policy.chunk_fraction(
+                    item, full_dur, frac, self.chunk_target_s))
+                dur = full_dur * run_frac
+                end = now + dur
+                busy_until[partition] = end
+                util.append(UtilSample(now, end, chips, self.total_chips))
+                policy.on_dispatch(apps[req.app], req, item, now, end, chips)
+                executing.add(k)
+                last_use[k] = now
+                rem = frac - run_frac
+                heapq.heappush(events, (end, next(self._seq), "complete",
+                                        (partition, req, idx, rem, now,
+                                         run_frac)))
                 return
-            _, ready_t, _, req, idx, frac = heapq.heappop(queues[partition])
-            item = req.items[idx]
-            chips = chips_of[partition]
-            full_dur = item.duration_s(chips, self.chip)
-            run_frac = min(frac, policy.chunk_fraction(
-                item, full_dur, frac, self.chunk_target_s))
-            dur = full_dur * run_frac
-            end = now + dur
-            busy_until[partition] = end
-            util.append(UtilSample(now, end, chips, self.total_chips))
-            policy.on_dispatch(apps[req.app], req, item, now, end, chips)
-            rem = frac - run_frac
-            heapq.heappush(events, (end, next(self._seq), "complete",
-                                    (partition, req, idx, rem, now)))
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -139,12 +237,19 @@ class PodSimulator:
                 st = state[(req.app, req.request_id)] = {
                     "rec": RequestRecord(req.app, req.request_id, now),
                     "t_start": now, "decode_done": 0, "decode_t0": None,
+                    "tokens_done": 0,
                 }
                 enqueue(partition_of[req.app], now, req, 0, 1.0)
             elif kind == "complete":
-                partition, req, idx, rem, started = payload
+                partition, req, idx, rem, started, run_frac = payload
                 busy_until[partition] = now
-                st = state[(req.app, req.request_id)]
+                k = (req.app, req.request_id)
+                executing.discard(k)
+                last_use[k] = now
+                st = state[k]
+                # partial chunks count toward the recompute bill too: an
+                # eviction mid-prefill loses real work
+                st["tokens_done"] += req.items[idx].tokens * run_frac
                 if rem > 1e-9:  # chunk remainder goes back to the queue
                     enqueue(partition, now, req, idx, rem)
                 else:
@@ -153,13 +258,16 @@ class PodSimulator:
                     if item.kind == "decode":
                         if st["decode_t0"] is None:
                             st["decode_t0"] = now
-                            rec.ttft_s = now - rec.arrival_s
+                            if rec.ttft_s is None:  # evicted: keep first ttft
+                                rec.ttft_s = now - rec.arrival_s
                         st["decode_done"] += item.tokens
                     if item.kind in ("denoise", "encode", "train"):
                         rec.step_times_s.append(now - max(started, rec.arrival_s))
                     if idx + 1 < len(req.items):
                         enqueue(partition, now, req, idx + 1, 1.0)
                     else:
+                        if k in resident:    # release the KV footprint
+                            mem["resident"] -= resident.pop(k)[1]
                         rec.e2e_s = now - rec.arrival_s
                         if st["decode_done"] > 1 and st["decode_t0"] is not None:
                             rec.tpot_s = ((now - st["decode_t0"]) /
@@ -188,7 +296,11 @@ class PodSimulator:
                    for t in traces}
         return SimResult(reports=reports, util=util,
                          total_chips=self.total_chips, chip=self.chip,
-                         strategy=policy.name)
+                         strategy=policy.name,
+                         kv_token_budget=budget, page_size=self.page_size,
+                         peak_kv_tokens=mem["peak"],
+                         evictions=mem["evictions"],
+                         recompute_tokens=mem["recompute"])
 
 
 @dataclass
@@ -198,6 +310,12 @@ class SimResult:
     total_chips: int
     chip: ChipSpec
     strategy: str           # the scheduling policy's registry name
+    # ---- memory model (schema 1.2's "memory" block; None budget = off)
+    kv_token_budget: Union[int, None] = None
+    page_size: int = 16
+    peak_kv_tokens: int = 0
+    evictions: int = 0
+    recompute_tokens: int = 0
 
     @property
     def policy_name(self) -> str:
@@ -222,12 +340,31 @@ class SimResult:
         return (busy * self.chip.peak_power_w +
                 idle * self.chip.idle_power_w)
 
+    def memory_summary(self) -> Union[dict, None]:
+        """Schema 1.2 "memory" block: page-pool accounting (None when the
+        run was memory-unconstrained)."""
+        if self.kv_token_budget is None:
+            return None
+        pages_total = max(1, math.ceil(self.kv_token_budget / self.page_size))
+        pages_peak = math.ceil(self.peak_kv_tokens / self.page_size)
+        return {
+            "kv_token_budget": self.kv_token_budget,
+            "page_size": self.page_size,
+            "pages_total": pages_total,
+            "pages_in_use": pages_peak,          # peak
+            "page_utilization": pages_peak / pages_total,
+            "evictions": self.evictions,
+            "recompute_tokens": self.recompute_tokens,
+        }
+
     def summary(self) -> dict:
+        mem = self.memory_summary()
         return {
             "strategy": self.strategy,
             "makespan_s": self.makespan_s,
             "utilization": self.utilization(),
             "energy_kj": self.energy_j() / 1e3,
+            **({"memory": mem} if mem is not None else {}),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,

@@ -182,6 +182,46 @@ def _decode_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
     return t + b * kv * ns * GRID_STEP_OVERHEAD_S
 
 
+# Paged flash-decode: the sequence tile IS the page (pages are not
+# contiguous in the pool, so a tile cannot span pages). The autotuner
+# therefore tunes the PAGE SIZE the engine's BlockAllocator should use:
+# per-grid-step issue overhead pushes pages up; internal fragmentation
+# (on average half a page wasted per resident sequence) pushes them down.
+_PAGE_SIZES = (8, 16, 32, 64, 128, 256)
+
+
+def _paged_decode_bucket(shape: dict) -> dict:
+    return _decode_bucket(shape)
+
+
+def _paged_decode_candidates(bk: dict) -> list[dict]:
+    s = bk["s"]
+    cands = [{"page_size": p} for p in _PAGE_SIZES if p <= s]
+    return cands or [{"page_size": s}]
+
+
+def _paged_decode_vmem(bk: dict, blocks: dict) -> int:
+    return _decode_vmem(bk, {"s_block": blocks["page_size"]})
+
+
+def _paged_decode_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
+    b, kv, g, s, d = bk["b"], bk["kv"], bk["g"], bk["s"], bk["d"]
+    page = blocks["page_size"]
+    # shape buckets round UP to a power of two, so model the mean resident
+    # length as 0.75*s; the kernel streams every ALLOCATED page, and on
+    # average the last page is half empty — internal fragmentation charges
+    # page/2 extra tokens per row (pushes pages DOWN), while the per-page
+    # grid-step issue overhead pushes pages UP.
+    ell = 0.75 * s
+    nb = ell / page + 0.5
+    s_eff = nb * page
+    flops = 4.0 * b * kv * g * s_eff * d
+    byts = 2.0 * (2 * b * kv * s_eff * d) + 2.0 * 2 * b * kv * g * d
+    # block-table scalar reads are SMEM-resident: no HBM term
+    t = max(flops / chip.peak_flops_bf16, byts / chip.hbm_bandwidth)
+    return t + b * kv * nb * GRID_STEP_OVERHEAD_S
+
+
 def _flash_bucket(shape: dict) -> dict:
     return {"b": pow2_bucket(shape["b"]), "h": shape["h"], "kv": shape["kv"],
             "sq": pow2_bucket(shape["sq"]), "skv": pow2_bucket(shape["skv"]),
@@ -246,6 +286,8 @@ def _ssd_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
 _KERNELS = {
     "decode_attention": (_decode_bucket, _decode_candidates, _decode_vmem,
                          _decode_roofline),
+    "paged_decode_attention": (_paged_decode_bucket, _paged_decode_candidates,
+                               _paged_decode_vmem, _paged_decode_roofline),
     "flash_attention": (_flash_bucket, _flash_candidates, _flash_vmem,
                         _flash_roofline),
     "ssd_chunk_scan": (_ssd_bucket, _ssd_candidates, _ssd_vmem,

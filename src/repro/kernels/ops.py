@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pallas_decode
 from repro.kernels.flash_attention import flash_attention as _pallas_flash
+from repro.kernels.paged_decode_attention import \
+    paged_decode_attention as _pallas_paged_decode
 from repro.kernels.rmsnorm import rmsnorm as _pallas_rmsnorm
 from repro.kernels.ssd_scan import ssd_chunk_scan as _pallas_ssd
 
@@ -65,6 +67,29 @@ def attention_decode(q, k_cache, v_cache, lengths, rope_theta=None):
     o = _pallas_decode(q[:, 0], kT, vT, jnp.asarray(lengths, jnp.int32),
                        rope_theta=rope_theta,
                        interpret=(be == "interpret"))
+    return o[:, None]
+
+
+def attention_decode_paged(q, k_pages, v_pages, block_tables, lengths,
+                           rope_theta=None):
+    """q: (B, 1, H, d); pools: (P, page, KV, d); block_tables: (B, nb);
+    lengths (B,) -> (B, 1, H, d).
+
+    Paged counterpart of :func:`attention_decode`: K/V are gathered through
+    the per-row block table instead of read from a contiguous per-slot
+    cache. Same fused-RoPE contract."""
+    be = backend()
+    if be == "jnp":
+        from repro.models.attention import paged_decode_attention_jnp
+        return paged_decode_attention_jnp(q, k_pages, v_pages, block_tables,
+                                          lengths, rope_theta=rope_theta)
+    # the paged kernel consumes the model-layout pool directly — relayouting
+    # the whole pool per decode token would dwarf the attention itself
+    o = _pallas_paged_decode(q[:, 0], k_pages, v_pages,
+                             jnp.asarray(block_tables, jnp.int32),
+                             jnp.asarray(lengths, jnp.int32),
+                             rope_theta=rope_theta,
+                             interpret=(be == "interpret"))
     return o[:, None]
 
 

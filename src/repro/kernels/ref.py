@@ -62,6 +62,25 @@ def decode_attention_ref(q: Array, k: Array, v: Array, lengths: Array,
     return o.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                               block_tables: Array, lengths: Array,
+                               rope_theta: float | None = None) -> Array:
+    """Paged flash-decode oracle: gather pages, defer to the dense oracle.
+
+    q: (B, H, d); k/v pools: (P, page, KV, d) — the kernel's model layout;
+    block_tables: (B, nb) int32 page ids; lengths: (B,). -> (B, H, d).
+    Unallocated table entries hold a valid sentinel page; its stale
+    contents sit past ``lengths`` and are masked, so the
+    gather-then-attend is exact.
+    """
+    k = k_pages[block_tables]                       # (B, nb, page, KV, d)
+    v = v_pages[block_tables]
+    b, nb, page, kv, d = k.shape
+    k = k.reshape(b, nb * page, kv, d).transpose(0, 2, 1, 3)
+    v = v.reshape(b, nb * page, kv, d).transpose(0, 2, 1, 3)
+    return decode_attention_ref(q, k, v, lengths, rope_theta=rope_theta)
+
+
 def ssd_chunk_ref(x: Array, dt: Array, cum: Array, b_: Array, c_: Array) -> tuple[Array, Array]:
     """Intra-chunk SSD + end-of-chunk state, one chunk.
 

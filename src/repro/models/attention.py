@@ -128,6 +128,30 @@ def flash_attention_jnp(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.reshape(b, sq, h, d)
 
 
+def paged_decode_attention_jnp(q: Array, k_pages: Array, v_pages: Array,
+                               block_tables: Array, length: Array,
+                               rope_theta: float | None = None) -> Array:
+    """Single-token decode attention against a PAGED cache (jnp lowering).
+
+    q: (B, 1, H, d); pools: (P, page, KV, d) model layout; block_tables:
+    (B, nb) int32 page ids; length: (B,) valid prefix per row.
+
+    The jnp fallback materializes the gathered view ``pool[block_tables]``
+    and defers to :func:`decode_attention_jnp` — correct everywhere, and
+    cheap at CPU test shapes. The Pallas kernel
+    (``repro.kernels.paged_decode_attention``) is the TPU runtime path that
+    streams pages through the block table without the materialized copy.
+    Sentinel (unallocated) table entries point at a real page whose stale
+    contents lie beyond ``length`` — masked like cache padding.
+    """
+    k = k_pages[block_tables]                  # (B, nb, page, KV, d)
+    v = v_pages[block_tables]
+    b, nb, page, kv, d = k.shape
+    k = k.reshape(b, nb * page, kv, d)
+    v = v.reshape(b, nb * page, kv, d)
+    return decode_attention_jnp(q, k, v, length, rope_theta=rope_theta)
+
+
 def decode_attention_jnp(q: Array, k_cache: Array, v_cache: Array,
                          length: Array,
                          rope_theta: float | None = None) -> Array:

@@ -145,6 +145,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    """Paged enc-dec cache: the GROWING decoder self-KV moves into the page
+    pool; the cross-KV is written once at encode time and never grows, so
+    it stays slot-resident (paging it would buy nothing and cost a second
+    block table)."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ld = cfg.num_decoder_layers
+    tf = frames_len(max_seq)
+    return {
+        "k_pages": jnp.zeros((ld, num_pages, page_size, kv, hd), dtype),
+        "v_pages": jnp.zeros((ld, num_pages, page_size, kv, hd), dtype),
+        "cross_k": jnp.zeros((ld, batch, tf, kv, hd), dtype),
+        "cross_v": jnp.zeros((ld, batch, tf, kv, hd), dtype),
+    }
+
+
 def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
             max_seq: int):
     logits, _, cache = forward(params, frames, tokens, cfg, remat="none",
@@ -188,6 +205,41 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
                           "cross_v": cache["cross_v"]}
 
 
+def decode_step_paged(params: dict, cache: dict, tokens: Array,
+                      lengths: Array, block_tables: Array, cfg: ModelConfig,
+                      active: Array | None = None):
+    """Paged decode step: self-attention KV through the page pool + block
+    tables; cross-attention reads the slot-resident static cache."""
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, kp, vp, ck, cv = inp
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        out, (kp, vp) = transformer.attention_decode_block_paged(
+            lp["self_attn"], h, cfg, kp, vp, block_tables, lengths,
+            active=active)
+        x = x + out
+        hx = layers.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", hx, lp["cross_attn"]["wq"])
+        if cfg.use_qk_norm:
+            q = layers.rmsnorm(q, lp["cross_attn"]["q_norm"], cfg.norm_eps)
+        tf = ck.shape[1]
+        o = decode_attention_jnp(q, ck, cv, jnp.full((x.shape[0],), tf))
+        x = x + jnp.einsum("bshe,hed->bsd", o, lp["cross_attn"]["wo"])
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(lp["ffn"], h2)
+        return x, (kp, vp)
+
+    x, (k, v) = layers.scan(
+        body, x, (params["decoder"], cache["k_pages"], cache["v_pages"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits[:, 0], {"k_pages": k, "v_pages": v,
+                          "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}
+
+
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
                   cfg: ModelConfig, active: Array | None = None):
     """Chunked prefill for the enc-dec decoder: a ``lax.scan`` over the C
@@ -199,6 +251,25 @@ def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
         cur_cache, ln = carry
         logits, cur_cache = decode_step(params, cur_cache, tok[:, None], ln,
                                         cfg, active=active)
+        inc = 1 if active is None else active.astype(ln.dtype)
+        return (cur_cache, ln + inc), logits
+
+    (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
+                                          tokens.T)
+    return logits.swapaxes(0, 1), new_cache
+
+
+def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
+                        start_len: Array, block_tables: Array,
+                        cfg: ModelConfig, active: Array | None = None):
+    """Paged chunked prefill: token-stepped ``lax.scan`` over the chunk
+    re-using :func:`decode_step_paged` (same construction as the
+    contiguous :func:`prefill_chunk`)."""
+    def step(carry, tok):
+        cur_cache, ln = carry
+        logits, cur_cache = decode_step_paged(params, cur_cache, tok[:, None],
+                                              ln, block_tables, cfg,
+                                              active=active)
         inc = 1 if active is None else active.astype(ln.dtype)
         return (cur_cache, ln + inc), logits
 

@@ -71,6 +71,96 @@ class ModelBundle:
             return encdec.init_cache(self.cfg, batch, max_seq, dtype)
         return transformer.init_cache(self.cfg, batch, max_seq, dtype)
 
+    # ------------------------------------------------------ paged serving
+    #: cache leaves that live in the shared page pool (no batch axis);
+    #: slot-slicing helpers pass them through untouched
+    PAGE_KEYS = ("k_pages", "v_pages")
+
+    def cache_pages(self) -> bool:
+        """Does this family support the paged KV cache? True for every
+        family with growing attention KV (dense/moe/vlm transformers,
+        hybrid attention sublayers, enc-dec decoder self-KV). False for
+        pure SSM: its O(1) recurrent state is slot-resident by nature —
+        there is nothing to page. int8 KV (``kv_cache_dtype`` hint) stays
+        on the contiguous path."""
+        from repro.distributed import hints
+        if hints.get("kv_cache_dtype") == "int8":
+            return False
+        return self.cfg.family != "ssm"
+
+    def init_paged_cache(self, num_pages: int, page_size: int, batch: int,
+                         max_seq: int, dtype=jnp.bfloat16) -> Cache:
+        """Page-pool cache: ``num_pages`` pages of ``page_size`` tokens per
+        layer shared by all rows (block tables are engine-side); leaves
+        that cannot page (hybrid SSM state, enc-dec cross-KV) remain
+        slot-resident with a ``batch`` axis."""
+        f = self.cfg.family
+        if f == "hybrid":
+            return hybrid.init_paged_cache(self.cfg, num_pages, page_size,
+                                           batch, dtype)
+        if f == "encdec":
+            return encdec.init_paged_cache(self.cfg, num_pages, page_size,
+                                           batch, max_seq, dtype)
+        if f == "ssm":
+            raise ValueError("family 'ssm' has no KV to page; "
+                             "check cache_pages() first")
+        return transformer.init_paged_cache(self.cfg, num_pages, page_size,
+                                            dtype)
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """Device bytes ONE cached token costs across all paged layers —
+        what sizes the page pool against a memory budget."""
+        from repro.roofline.hw import kv_bytes_per_token
+        return kv_bytes_per_token(self.cfg, dtype_bytes)
+
+    def decode_step_paged(self, params: Params, cache: Cache, tokens: Array,
+                          lengths: Array, block_tables: Array,
+                          active: Array | None = None):
+        """Paged :meth:`decode_step`: K/V resolved through ``block_tables``
+        (B, nb) into the shared page pool. Token-identical to the
+        contiguous path — parity pinned per family in tests/test_paged.py."""
+        f = self.cfg.family
+        if f == "hybrid":
+            logits, new = hybrid.decode_step_paged(
+                params, cache, tokens, lengths, block_tables, self.cfg,
+                active)
+        elif f == "encdec":
+            logits, new = encdec.decode_step_paged(
+                params, cache, tokens, lengths, block_tables, self.cfg,
+                active)
+        elif f == "ssm":
+            raise ValueError("family 'ssm' has no paged decode path")
+        else:
+            logits, new = transformer.decode_step_paged(
+                params, cache, tokens, lengths, block_tables, self.cfg,
+                active)
+        new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
+        return logits, new
+
+    def prefill_chunk_paged(self, params: Params, cache: Cache,
+                            tokens: Array, start_len: Array,
+                            block_tables: Array,
+                            active: Array | None = None):
+        """Paged :meth:`prefill_chunk`: chunk K/V scattered into the rows'
+        pages; same one-dispatch-per-chunk hot path."""
+        f = self.cfg.family
+        if f == "hybrid":
+            logits, new = hybrid.prefill_chunk_paged(
+                params, cache, tokens, start_len, block_tables, self.cfg,
+                active)
+        elif f == "encdec":
+            logits, new = encdec.prefill_chunk_paged(
+                params, cache, tokens, start_len, block_tables, self.cfg,
+                active)
+        elif f == "ssm":
+            raise ValueError("family 'ssm' has no paged prefill path")
+        else:
+            logits, new = transformer.prefill_chunk_paged(
+                params, cache, tokens, start_len, block_tables, self.cfg,
+                active)
+        new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
+        return logits, new
+
     def prefill(self, params: Params, batch: dict, max_seq: int):
         f = self.cfg.family
         if f == "encdec":
@@ -160,20 +250,33 @@ class ModelBundle:
 
     # ------------------------------------------------- cache slot slicing
     # (serving engine: per-slot isolation for prefill / state restore)
+    def _leaf_key(self, path_entries) -> str:
+        return str(getattr(path_entries[0], "key", path_entries[0]))
+
     def _cache_batch_axis(self, path_entries) -> int:
-        top = str(getattr(path_entries[0], "key", path_entries[0]))
+        top = self._leaf_key(path_entries)
         if self.cfg.family == "hybrid" and top == "ssm":
             return 2  # (nb, n_ssm, B, ...)
         return 1      # (L, B, ...)
 
     def slice_cache(self, cache: Cache, slot: int) -> Cache:
+        """Per-slot view of the cache. Page-pool leaves have no batch axis
+        (pages are shared, block tables are engine-side) and pass through
+        whole, so a slice of a paged cache still zips against it in
+        :meth:`set_cache_slice`."""
         def one(path, leaf):
+            if self._leaf_key(path) in self.PAGE_KEYS:
+                return leaf
             ax = self._cache_batch_axis(path)
             return jax.lax.slice_in_dim(leaf, slot, slot + 1, axis=ax)
         return jax.tree_util.tree_map_with_path(one, cache)
 
     def set_cache_slice(self, cache: Cache, slot: int, piece: Cache) -> Cache:
+        """Write a per-slot piece back; page-pool leaves are left untouched
+        (slot admission remaps block tables instead of copying pages)."""
         def one(path, leaf, pleaf):
+            if self._leaf_key(path) in self.PAGE_KEYS:
+                return leaf
             ax = self._cache_batch_axis(path)
             return jax.lax.dynamic_update_slice_in_dim(
                 leaf, pleaf.astype(leaf.dtype), slot, axis=ax)

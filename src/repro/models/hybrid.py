@@ -133,6 +133,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     batch: int, dtype=jnp.bfloat16) -> dict:
+    """Paged hybrid cache: the attention sublayers' KV moves into a shared
+    page pool (one pool row per period-block, addressed by the engine's
+    block tables); the SSD sublayers' recurrent state is O(1) per slot and
+    stays slot-resident — there is nothing to page."""
+    nb = cfg.num_layers // _period(cfg)
+    n_ssm = _period(cfg) - 1
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    one = ssm.init_ssm_state(cfg, batch, dtype)
+    states = jax.tree.map(
+        lambda a: jnp.zeros((nb, n_ssm) + a.shape, a.dtype), one)
+    return {
+        "k_pages": jnp.zeros((nb, num_pages, page_size, kvh, hd), dtype),
+        "v_pages": jnp.zeros((nb, num_pages, page_size, kvh, hd), dtype),
+        "ssm": states,
+    }
+
+
 def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int):
     logits, _, cache = forward(params, tokens, cfg, remat="none",
                                return_cache=True)
@@ -179,6 +198,89 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
     x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     logits = layers.unembed(x, params["lm_head"], transpose=False)
     return logits[:, 0], {"k": k, "v": v, "ssm": states}
+
+
+def decode_step_paged(params: dict, cache: dict, tokens: Array,
+                      lengths: Array, block_tables: Array, cfg: ModelConfig,
+                      active: Array | None = None):
+    """Paged decode across the SSD/attention interleave: attention KV goes
+    through the page pool + block tables; SSM state stays slot-resident
+    (same where-mask isolation as :func:`decode_step`)."""
+    x = layers.embed(params["embedding"], tokens)
+    pcount = _period(cfg)
+
+    def body(x, inp):
+        bp, kp, vp, states = inp
+        new_states = []
+        si = 0
+        for i in range(pcount):
+            sub = bp[f"sub{i}"]
+            h = layers.rmsnorm(x, sub["ln1"], cfg.norm_eps)
+            if _is_attn(cfg, i):
+                out, (kp, vp) = transformer.attention_decode_block_paged(
+                    sub["attn"], h, cfg, kp, vp, block_tables, lengths,
+                    active=active)
+            else:
+                st_i = jax.tree.map(lambda a: a[si], states)
+                out, st_i = ssm.ssm_decode_step(sub["ssm"], h, st_i, cfg,
+                                                active=active)
+                new_states.append(st_i)
+                si += 1
+            x = x + out
+            h2 = layers.rmsnorm(x, sub["ln2"], cfg.norm_eps)
+            f, _ = _sub_ffn(sub, h2, cfg, token_mask=active)
+            x = x + f
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return x, (kp, vp, stacked)
+
+    x, (k, v, states) = layers.scan(
+        body, x, (params["blocks"], cache["k_pages"], cache["v_pages"],
+                  cache["ssm"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits[:, 0], {"k_pages": k, "v_pages": v, "ssm": states}
+
+
+def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
+                        start_len: Array, block_tables: Array,
+                        cfg: ModelConfig, active: Array | None = None):
+    """Paged batched chunked prefill; see :func:`prefill_chunk`."""
+    x = layers.embed(params["embedding"], tokens)
+    pcount = _period(cfg)
+
+    def body(x, inp):
+        bp, kp, vp, states = inp
+        new_states = []
+        si = 0
+        for i in range(pcount):
+            sub = bp[f"sub{i}"]
+            h = layers.rmsnorm(x, sub["ln1"], cfg.norm_eps)
+            if _is_attn(cfg, i):
+                out, (kp, vp) = \
+                    transformer.attention_prefill_chunk_block_paged(
+                        sub["attn"], h, cfg, kp, vp, block_tables, start_len,
+                        active=active)
+            else:
+                st_i = jax.tree.map(lambda a: a[si], states)
+                out, new_st = ssm.ssd_forward(sub["ssm"], h, cfg,
+                                              init_state=st_i)
+                if active is not None:
+                    new_st = ssm.mask_state(new_st, st_i, active)
+                new_states.append(new_st)
+                si += 1
+            x = x + out
+            h2 = layers.rmsnorm(x, sub["ln2"], cfg.norm_eps)
+            f, _ = _sub_ffn(sub, h2, cfg, token_mask=active)
+            x = x + f
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return x, (kp, vp, stacked)
+
+    x, (k, v, states) = layers.scan(
+        body, x, (params["blocks"], cache["k_pages"], cache["v_pages"],
+                  cache["ssm"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits, {"k_pages": k, "v_pages": v, "ssm": states}
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,

@@ -193,6 +193,94 @@ def attention_decode_block(p: dict, x: Array, cfg: ModelConfig,
     return out, (k_cache, v_cache)
 
 
+def attention_decode_block_paged(p: dict, x: Array, cfg: ModelConfig,
+                                 k_pages: Array, v_pages: Array,
+                                 block_tables: Array, lengths: Array,
+                                 active: Array | None = None):
+    """One-token attention against a PAGED cache.
+
+    x: (B,1,D); pools: (P, page, KV, hd) shared across rows; block_tables:
+    (B, nb) int32 page ids. The new k/v lands in the page covering position
+    ``lengths`` (the engine maps that page before dispatch); attention
+    gathers K/V through the block table (``ops.attention_decode_paged`` —
+    Pallas scalar-prefetch gather on TPU, materialized gather on jnp).
+
+    ``active``: inactive rows write nothing — their target page id is
+    pushed past the pool end so the ``mode="drop"`` scatter discards it.
+    Same contract as :func:`attention_decode_block`; no int8 path (the
+    engine falls back to the contiguous cache under ``kv_cache_dtype``
+    hints).
+    """
+    positions = lengths[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions, rope_q=False)
+
+    num_pages, page = k_pages.shape[0], k_pages.shape[1]
+    block = jnp.minimum(lengths // page, block_tables.shape[1] - 1)
+    pidx = jnp.take_along_axis(block_tables, block[:, None], axis=1)[:, 0]
+    off = lengths % page
+    if active is not None:
+        pidx = jnp.where(active, pidx, jnp.int32(num_pages))  # drop writes
+    k_pages = k_pages.at[pidx, off].set(
+        k[:, 0].astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[pidx, off].set(
+        v[:, 0].astype(v_pages.dtype), mode="drop")
+    from repro.kernels import ops
+    o = ops.attention_decode_paged(q, k_pages, v_pages, block_tables,
+                                   lengths + 1, rope_theta=cfg.rope_theta)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, (k_pages, v_pages)
+
+
+def _chunk_attend(p: dict, q: Array, k_full: Array, v_full: Array,
+                  positions: Array, cfg: ModelConfig, x_dtype) -> Array:
+    """Chunk-vs-cache causal attention shared by the contiguous and paged
+    prefill paths. q: (B,C,H,hd); k_full/v_full: (B,S,KV,hd); positions:
+    (B,C) absolute position per chunk token."""
+    b, c = q.shape[0], q.shape[1]
+    s = k_full.shape[1]
+    kvh = k_full.shape[2]
+    g = cfg.num_heads // kvh
+    qg = q.reshape(b, c, kvh, g, -1).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bckgd,bskd->bkgcs", qg,
+                        k_full.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr, v_full.astype(jnp.float32))
+    o = o.reshape(b, c, cfg.num_heads, -1).astype(x_dtype)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def attention_prefill_chunk_block_paged(p: dict, x: Array, cfg: ModelConfig,
+                                        k_pages: Array, v_pages: Array,
+                                        block_tables: Array, start_len: Array,
+                                        active: Array | None = None):
+    """Chunked-prefill attention against a PAGED cache: C new tokens are
+    scattered into their rows' pages (positions ``start_len ..
+    start_len+C-1`` resolved through the block table) and attended causally
+    over the gathered padded view. Same semantics as
+    :func:`attention_prefill_chunk_block` with the cache paged."""
+    b, c, _ = x.shape
+    num_pages, page = k_pages.shape[0], k_pages.shape[1]
+    nb = block_tables.shape[1]
+    positions = start_len[:, None] + jnp.arange(c)[None, :]       # (B,C)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    block = jnp.minimum(positions // page, nb - 1)                # (B,C)
+    pidx = jnp.take_along_axis(block_tables, block, axis=1)       # (B,C)
+    off = positions % page
+    if active is not None:
+        pidx = jnp.where(active[:, None], pidx, jnp.int32(num_pages))
+    k_pages = k_pages.at[pidx, off].set(k.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[pidx, off].set(v.astype(v_pages.dtype), mode="drop")
+
+    k_full = k_pages[block_tables].reshape(b, nb * page, *k_pages.shape[2:])
+    v_full = v_pages[block_tables].reshape(b, nb * page, *v_pages.shape[2:])
+    out = _chunk_attend(p, q, k_full, v_full, positions, cfg, x.dtype)
+    return out, (k_pages, v_pages)
+
+
 def attention_prefill_chunk_block(p: dict, x: Array, cfg: ModelConfig,
                                   k_cache: Array, v_cache: Array,
                                   start_len: Array,
@@ -235,18 +323,7 @@ def attention_prefill_chunk_block(p: dict, x: Array, cfg: ModelConfig,
             v.astype(v_cache.dtype), mode="drop")
         k_full, v_full = k_cache, v_cache
 
-    kvh = k_full.shape[2]
-    g = cfg.num_heads // kvh
-    qg = q.reshape(b, c, kvh, g, -1).astype(jnp.float32)
-    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
-    logits = jnp.einsum("bckgd,bskd->bkgcs", qg,
-                        k_full.astype(jnp.float32)) * scale
-    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
-    logits = jnp.where(valid[:, None, None], logits, -1e30)
-    pr = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgcs,bskd->bckgd", pr, v_full.astype(jnp.float32))
-    o = o.reshape(b, c, cfg.num_heads, -1).astype(x.dtype)
-    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    out = _chunk_attend(p, q, k_full, v_full, positions, cfg, x.dtype)
     if int8_kv:
         return out, (k_cache, v_cache, k_scale, v_scale)
     return out, (k_cache, v_cache)
@@ -337,6 +414,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -
     }
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Page-pool KV cache: ``num_pages`` shared pages of ``page_size``
+    tokens per layer; rows address them through engine-side block tables.
+    No int8 variant — the engine keeps the contiguous cache under
+    ``kv_cache_dtype`` hints."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    l = cfg.num_layers
+    return {
+        "k_pages": jnp.zeros((l, num_pages, page_size, kv, hd), dtype),
+        "v_pages": jnp.zeros((l, num_pages, page_size, kv, hd), dtype),
+    }
+
+
 def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_seq: int,
             embeds: Array | None = None):
     """Run the full prompt; return (logits, cache padded to max_seq)."""
@@ -395,6 +486,65 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
     else:
         logits = layers.unembed(x, params["lm_head"], transpose=False)
     return logits[:, 0], new_cache
+
+
+def decode_step_paged(params: dict, cache: dict, tokens: Array,
+                      lengths: Array, block_tables: Array,
+                      cfg: ModelConfig, active: Array | None = None):
+    """One decode step against the paged cache. tokens: (B,1); lengths:
+    (B,); block_tables: (B, nb). Same contract as :func:`decode_step`
+    (logits (B,V), new cache; inactive rows untouched), with K/V written
+    into and gathered from the shared page pool."""
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, kp, vp = inp
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, caches = attention_decode_block_paged(
+            lp["attn"], h, cfg, kp, vp, block_tables, lengths, active=active)
+        x = x + attn_out
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)
+        x = x + ffn_out
+        return x, caches
+
+    x, (k_new, v_new) = layers.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embedding"], transpose=True)
+    else:
+        logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits[:, 0], {"k_pages": k_new, "v_pages": v_new}
+
+
+def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
+                        start_len: Array, block_tables: Array,
+                        cfg: ModelConfig, active: Array | None = None):
+    """Batched chunked prefill against the paged cache; see
+    :func:`prefill_chunk` for the contract."""
+    x = layers.embed(params["embedding"], tokens)
+
+    def body(x, inp):
+        lp, kp, vp = inp
+        h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, caches = attention_prefill_chunk_block_paged(
+            lp["attn"], h, cfg, kp, vp, block_tables, start_len,
+            active=active)
+        x = x + attn_out
+        h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)
+        x = x + ffn_out
+        return x, caches
+
+    x, (k_new, v_new) = layers.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(x, params["embedding"], transpose=True)
+    else:
+        logits = layers.unembed(x, params["lm_head"], transpose=False)
+    return logits, {"k_pages": k_new, "v_pages": v_new}
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,

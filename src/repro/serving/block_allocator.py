@@ -1,0 +1,187 @@
+"""Device KV-page pool: alloc/free, watermarks, LRU victim selection.
+
+The contiguous slot cache reserved ``max_slots x max_seq`` tokens of KV up
+front, so the engine's memory footprint was a config constant and the
+paper's central finding — GenAI apps on end-user devices fail on *shared,
+constrained memory*, not compute (ConsumerBench Section 4.3) — was invisible to
+every Scenario. The paged refactor replaces that reservation with a pool of
+fixed-size pages plus one block table per decode slot:
+
+* **pool** — ``num_pages`` pages of ``page_size`` tokens each. Model-side
+  the pool is a per-layer array ``(P, page_size, KV, hd)``; a page id
+  indexes the same row of every layer's pool (vLLM-style layout).
+* **block table** — ``(max_slots, max_blocks)`` int32 page ids. Unassigned
+  entries hold ``SENTINEL`` (page 0): always safe to *gather* (the data is
+  garbage but sits beyond every row's valid length, so attention masks it);
+  *writes* only ever target the page covering the row's current length,
+  which the engine maps before dispatch.
+* **watermarks** — when ``pages_in_use >= high_watermark * num_pages`` the
+  engine preempts the least-recently-used slot (evict-and-recompute: free
+  its pages, requeue the request, re-prefill on re-admission) until usage
+  falls below ``low_watermark`` or no eligible victim remains.
+
+The allocator is pure host-side bookkeeping (numpy); it never touches
+device memory. The ``tables`` array follows the engine's copy-on-write
+rule: any buffer already handed to a jitted call is never mutated in
+place — every mutation rebinds ``self.tables`` to a fresh array.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Optional
+
+import numpy as np
+
+#: block-table filler for unallocated entries. Page 0 — NOT an out-of-range
+#: id — so gathers through the table are always in bounds; stale contents
+#: sit past the row's valid length and are masked by the attention kernels.
+SENTINEL = 0
+
+
+class PoolExhausted(RuntimeError):
+    """No free page and no eligible eviction victim."""
+
+
+class BlockAllocator:
+    """Page bookkeeping for one engine's KV pool."""
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 max_blocks: int, *, high_watermark: float = 1.0,
+                 low_watermark: Optional[float] = None):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if not 0.0 < high_watermark <= 1.0:
+            raise ValueError(f"high_watermark must be in (0, 1], got "
+                             f"{high_watermark}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_blocks = max_blocks
+        self.high_watermark = high_watermark
+        self.low_watermark = (high_watermark if low_watermark is None
+                              else low_watermark)
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._pages: dict[int, list[int]] = {}       # slot -> page ids
+        self._last_touch: dict[int, int] = {}        # slot -> tick
+        self._tick = 0
+        self.tables = np.full((max_slots, max_blocks), SENTINEL, np.int32)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.page_size))
+
+    def can_admit(self, tokens: int) -> bool:
+        return self.pages_needed(tokens) <= self.free_pages
+
+    def admit_within_watermark(self, tokens: int) -> bool:
+        """Would admitting this request keep the pool under the high
+        watermark? Admission never evicts (two fresh requests could evict
+        each other forever without progressing); it just waits for
+        headroom. An idle pool always admits — a request too big for the
+        watermark alone must still be able to run."""
+        if self.pages_in_use == 0:
+            return True
+        return (self.pages_in_use + self.pages_needed(tokens)
+                <= self.high_watermark * self.num_pages)
+
+    def fits(self, tokens: int) -> bool:
+        """Can this request EVER run on this pool (ignoring current use)?"""
+        return (self.pages_needed(tokens) <= self.num_pages
+                and self.pages_needed(tokens) <= self.max_blocks)
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self._pages.get(slot, ()))
+
+    def over_high_watermark(self) -> bool:
+        return self.pages_in_use >= self.high_watermark * self.num_pages
+
+    def over_low_watermark(self) -> bool:
+        return self.pages_in_use > self.low_watermark * self.num_pages
+
+    # -------------------------------------------------------- alloc / free
+    def _take_page(self) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"KV pool exhausted ({self.num_pages} pages of "
+                f"{self.page_size} tokens) and no eviction victim")
+        return self._free.pop()
+
+    def _map(self, slot: int, block_idx: int, page: int) -> None:
+        tables = self.tables.copy()          # copy-on-write (jit aliasing)
+        tables[slot, block_idx] = page
+        self.tables = tables
+
+    def alloc_slot(self, slot: int, tokens: int) -> None:
+        """Map pages covering ``tokens`` for a freshly admitted slot."""
+        if slot in self._pages:
+            raise ValueError(f"slot {slot} already holds pages")
+        need = self.pages_needed(tokens)
+        if need > self.max_blocks:
+            raise PoolExhausted(
+                f"request needs {need} pages but the block table holds "
+                f"{self.max_blocks}")
+        if need > self.free_pages:
+            raise PoolExhausted(
+                f"request needs {need} pages, {self.free_pages} free")
+        pages = [self._take_page() for _ in range(need)]
+        self._pages[slot] = pages
+        tables = self.tables.copy()
+        tables[slot, :need] = pages
+        self.tables = tables
+        self.touch(slot)
+
+    def grow_to(self, slot: int, tokens: int) -> int:
+        """Ensure the slot's mapping covers ``tokens``; returns pages newly
+        allocated. Raises :class:`PoolExhausted` when the pool is out of
+        pages (the engine evicts a victim and retries)."""
+        pages = self._pages.get(slot)
+        if pages is None:
+            raise ValueError(f"slot {slot} holds no pages")
+        need = self.pages_needed(tokens)
+        if need > self.max_blocks:
+            raise PoolExhausted(
+                f"slot {slot} needs {need} pages but the block table holds "
+                f"{self.max_blocks}")
+        added = 0
+        while len(pages) < need:
+            page = self._take_page()       # may raise PoolExhausted
+            self._map(slot, len(pages), page)
+            pages.append(page)
+            added += 1
+        if added:
+            self.touch(slot)
+        return added
+
+    def free_slot(self, slot: int) -> int:
+        """Release every page the slot holds; returns the count freed."""
+        pages = self._pages.pop(slot, [])
+        self._free.extend(reversed(pages))
+        self._last_touch.pop(slot, None)
+        if pages:
+            tables = self.tables.copy()
+            tables[slot, :] = SENTINEL
+            self.tables = tables
+        return len(pages)
+
+    # ------------------------------------------------------ victim choice
+    def touch(self, slot: int) -> None:
+        """Mark the slot as just used (decode step / prefill advance)."""
+        self._tick += 1
+        self._last_touch[slot] = self._tick
+
+    def lru_victim(self, exclude: Iterable[int] = ()) -> Optional[int]:
+        """Least-recently-touched page-holding slot outside ``exclude``."""
+        skip = set(exclude)
+        cands = [s for s in self._pages if s not in skip]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: self._last_touch.get(s, 0))

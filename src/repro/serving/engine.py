@@ -38,9 +38,31 @@ then advances the clock by the SUM over active rows — shared hardware
 serializes service demand, matching the pod simulator's contention model.
 This is what lets one engine benchmark a whole multi-app Scenario
 (``repro.bench.engine_runner``) deterministically on CPU.
+
+Paged KV cache (the memory refactor)
+------------------------------------
+By default (``paged=None``) every family with attention KV serves from a
+PAGED cache: a device page pool (``kv_pages`` pages of ``page_size``
+tokens, shared across slots) plus per-slot block tables managed by
+:class:`~repro.serving.block_allocator.BlockAllocator`. Admission is gated
+on *free pages*, not just free slots — sized by each request's ACTUAL
+prompt, not the ``max_seq`` worst case, so a constrained pool admits more
+concurrent requests than a contiguous ``max_slots × max_seq`` reservation
+ever could. When the pool hits the high watermark (or a decode step finds
+no free page), the least-recently-used slot is preempted and EVICTED:
+pages freed, request requeued, and its tokens re-prefilled on re-admission
+(``stats.evictions`` / ``stats.recompute_tokens``) — the ConsumerBench
+memory-contention mechanism (Section 4.3) made measurable. Token streams are
+identical to the contiguous path (parity pinned per family in
+tests/test_paged.py), including across evictions: the re-prefill replays
+exactly the cache the slot held. ``paged=False`` keeps the contiguous
+cache; a contiguous engine constructed under a page budget it cannot
+reserve up front REFUSES at construction time — the admission asymmetry
+the OOM regression test pins.
 """
 from __future__ import annotations
 
+import math
 import time as _time
 from dataclasses import dataclass
 from typing import Callable, Optional
@@ -51,6 +73,7 @@ import numpy as np
 
 from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.models.factory import ModelBundle
+from repro.serving.block_allocator import BlockAllocator, PoolExhausted
 from repro.serving.request import Request
 
 
@@ -62,6 +85,9 @@ class EngineStats:
     max_decode_gap_s: float = 0.0
     prefill_dispatches: int = 0   # jitted prefill_chunk calls (≤ ceil(P/C))
     decode_syncs: int = 0         # host-device syncs in the decode loop
+    pages_in_use: int = 0         # PEAK pages held at once (paged cache)
+    evictions: int = 0            # preempt-to-evict events (paged cache)
+    recompute_tokens: int = 0     # cached tokens lost to evictions
 
 
 class InferenceEngine:
@@ -71,7 +97,12 @@ class InferenceEngine:
                  prefill_chunk: int = 16,
                  step_cost_s: Optional[Callable[[str, int], float]] = None,
                  request_cost_s: Optional[
-                     Callable[[Request, str, int], float]] = None):
+                     Callable[[Request, str, int], float]] = None,
+                 paged: Optional[bool] = None,
+                 kv_pages: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 evict_high_watermark: float = 1.0,
+                 evict_low_watermark: Optional[float] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_slots = max_slots
@@ -86,18 +117,76 @@ class InferenceEngine:
         self.stats = EngineStats()
         self._last_decode_t: Optional[float] = None
 
+        # paged by default wherever the family supports it (parity with the
+        # contiguous path is pinned per family, so paging is now the engine
+        # default); explicit paged=True on an SSM family is an error
+        if paged is None:
+            paged = model.cache_pages()
+        elif paged and not model.cache_pages():
+            raise ValueError(
+                f"family {self.cfg.family!r} cannot page its cache "
+                "(no growing KV, or int8 KV hint active)")
+        self.paged = paged
         self.params = None
-        self.cache = self.model.init_cache(max_slots, max_seq)
-        self._fresh_slot = self.model.init_cache(1, max_seq)
+        self.allocator: Optional[BlockAllocator] = None
+        if paged:
+            if page_size is None:
+                from repro.kernels import autotune
+                kv = max(self.cfg.num_kv_heads, 1)
+                page_size = autotune.best_config(
+                    "paged_decode_attention",
+                    {"b": max_slots, "kv": kv,
+                     "g": max(self.cfg.num_heads // kv, 1),
+                     "s": max_seq,
+                     "d": self.cfg.resolved_head_dim})["page_size"]
+            page_size = min(page_size, max_seq)
+            max_blocks = math.ceil(max_seq / page_size)
+            # default pool reproduces the contiguous capacity exactly (one
+            # full block table per slot): no eviction pressure, identical
+            # admission — the drop-in configuration
+            if kv_pages is None:
+                kv_pages = max_slots * max_blocks
+            self.page_size = page_size
+            self.kv_pages = kv_pages
+            self.allocator = BlockAllocator(
+                kv_pages, page_size, max_slots, max_blocks,
+                high_watermark=evict_high_watermark,
+                low_watermark=evict_low_watermark)
+            self.cache = self.model.init_paged_cache(
+                kv_pages, page_size, max_slots, max_seq)
+            # slot-resident leaves only (SSM state / enc-dec cross-KV);
+            # page leaves pass through set_cache_slice untouched, so the
+            # fresh piece can come from a 1-page dummy pool
+            self._fresh_slot = self.model.slice_cache(
+                self.model.init_paged_cache(1, page_size, 1, max_seq), 0)
+        else:
+            if kv_pages is not None:
+                budget_tokens = kv_pages * (page_size or 16)
+                reserved = max_slots * max_seq
+                if reserved > budget_tokens:
+                    raise ValueError(
+                        f"contiguous KV cache reserves max_slots x max_seq "
+                        f"= {reserved} tokens up front, exceeding the page "
+                        f"budget of {budget_tokens} tokens; construct with "
+                        "paged=True to admit by actual demand")
+            self.page_size = page_size or 16
+            self.kv_pages = kv_pages
+            self.cache = self.model.init_cache(max_slots, max_seq)
+            self._fresh_slot = self.model.init_cache(1, max_seq)
         # host mirror: no device sync ever needed to READ a slot's length.
         # COPY-ON-WRITE invariant: jnp.asarray may zero-copy ALIAS this
         # buffer on the CPU backend while dispatch is async, so any buffer
         # already handed to a jitted call must never be mutated in place —
-        # every update below rebinds self.lengths to a fresh array.
+        # every update below rebinds self.lengths to a fresh array. (The
+        # allocator's block tables follow the same rule internally.)
         self.lengths = np.zeros((max_slots,), np.int32)
         self.active: list[Optional[Request]] = [None] * max_slots
         self.waiting: list[Request] = []
         self._partial: dict[int, int] = {}   # slot -> prompt tokens prefilled
+        #: slot -> the token sequence to prefill, FROZEN at admission (an
+        #: evicted request re-admits with its generated tokens replayed;
+        #: recomputing it live would grow with every decode step)
+        self._eff: dict[int, np.ndarray] = {}
         self.done: list[Request] = []
         # jitted fast paths (eager dispatch would compile thousands of tiny
         # executables over a serving session and exhaust the CPU ORC JIT);
@@ -112,12 +201,20 @@ class InferenceEngine:
                 "prefill": jax.jit(
                     lambda p, c, t, st, act: model.prefill_chunk(p, c, t, st,
                                                                  act)),
+                "decode_paged": jax.jit(
+                    lambda p, c, t, ln, bt, act: model.decode_step_paged(
+                        p, c, t, ln, bt, act)),
+                "prefill_paged": jax.jit(
+                    lambda p, c, t, st, bt, act: model.prefill_chunk_paged(
+                        p, c, t, st, bt, act)),
                 "set_slice": jax.jit(model.set_cache_slice,
                                      static_argnums=(1,)),
             }
             model._serving_jit_cache = jits
         self._jit_decode = jits["decode"]
         self._jit_prefill = jits["prefill"]
+        self._jit_decode_paged = jits["decode_paged"]
+        self._jit_prefill_paged = jits["prefill_paged"]
         self._jit_set_slice = jits["set_slice"]
 
     # ------------------------------------------------------------- setup
@@ -155,6 +252,74 @@ class InferenceEngine:
         ready = [r for r in self.waiting if r.arrival_s <= now]
         return self.policy.admit_order(ready, now)
 
+    # ------------------------------------------------------------- paged
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """The token sequence a (re-)admitted request must prefill.
+
+        For a fresh request this is the prompt. For an EVICTED request it
+        replays the exact cache the slot held before eviction: prompt, the
+        duplicated last prompt token (the engine's first decode step feeds
+        ``prompt[-1]`` again), then all but the newest generated token —
+        so the recomputed state is bit-comparable and the continuation
+        token-identical to a never-evicted run."""
+        if not req.tokens_out:
+            return np.asarray(req.prompt, np.int32)
+        replay = [int(req.prompt[-1])] + [int(t) for t in req.tokens_out[:-1]]
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(replay, np.int32)])
+
+    def _note_pages(self) -> None:
+        if self.allocator is not None:
+            self.stats.pages_in_use = max(self.stats.pages_in_use,
+                                          self.allocator.pages_in_use)
+
+    def _evict(self, victim: int) -> None:
+        """Preempt-to-evict: free the victim slot's pages and requeue its
+        request; the tokens it had cached are recomputed on re-admission."""
+        req = self.active[victim]
+        self.stats.evictions += 1
+        self.stats.recompute_tokens += int(self.lengths[victim])
+        self.allocator.free_slot(victim)
+        self.active[victim] = None
+        self._partial.pop(victim, None)
+        self._eff.pop(victim, None)
+        new_lengths = self.lengths.copy()
+        new_lengths[victim] = 0
+        self.lengths = new_lengths
+        self.waiting.insert(0, req)
+
+    def _rebalance(self, protect: set[int]) -> None:
+        """Watermark policy: once the pool hits the high watermark, evict
+        LRU slots until usage falls below the low watermark (no-op at the
+        default high_watermark=1.0, where eviction is purely on-demand)."""
+        alloc = self.allocator
+        if alloc is None or alloc.high_watermark >= 1.0:
+            return
+        if not alloc.over_high_watermark():
+            return
+        while alloc.over_low_watermark():
+            victim = alloc.lru_victim(exclude=protect)
+            if victim is None:
+                break
+            self._evict(victim)
+
+    def _grow_pages(self, slot: int, tokens: int) -> bool:
+        """Ensure the slot's block table covers ``tokens``; evicts LRU
+        victims on demand. False when no page can be found (pool smaller
+        than this one row) — the caller finishes the request cache-full."""
+        alloc = self.allocator
+        while True:
+            try:
+                alloc.grow_to(slot, tokens)
+                self._note_pages()
+                self._rebalance(protect={slot})
+                return True
+            except PoolExhausted:
+                victim = alloc.lru_victim(exclude={slot})
+                if victim is None:
+                    return False
+                self._evict(victim)
+
     # ----------------------------------------------------------- prefill
     def _prefill_slot(self, slot: int, req: Request,
                       chunk: Optional[int]) -> bool:
@@ -168,7 +333,7 @@ class InferenceEngine:
         most ``prefill_chunk`` distinct prefill shapes per model, instead of
         one fresh XLA compile per distinct prompt length in the trace."""
         done_tok = self._partial.get(slot, 0)
-        prompt = req.prompt
+        prompt = self._eff[slot]
         upto = len(prompt) if chunk is None else min(len(prompt),
                                                      done_tok + chunk)
         piece = prompt[done_tok:upto]
@@ -181,9 +346,16 @@ class InferenceEngine:
             tokens[slot] = np.asarray(sub, np.int32)
             mask = np.zeros((self.max_slots,), bool)
             mask[slot] = True
-            _, self.cache = self._jit_prefill(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(self.lengths), jnp.asarray(mask))
+            if self.paged:
+                self.allocator.touch(slot)
+                _, self.cache = self._jit_prefill_paged(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.allocator.tables), jnp.asarray(mask))
+            else:
+                _, self.cache = self._jit_prefill(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(mask))
             new_lengths = self.lengths.copy()
             new_lengths[slot] += c
             self.lengths = new_lengths
@@ -204,15 +376,35 @@ class InferenceEngine:
         self.stats.steps += 1
         emitted: list[tuple[int, int]] = []
 
-        # 1) admit waiting requests into free slots (zeroed state)
+        # 1) admit waiting requests into free slots (zeroed state). Paged
+        #    cache: admission is ALSO gated on free pages — each request
+        #    reserves pages for its actual prompt (not the max_seq worst
+        #    case), so small requests keep flowing while a big one waits.
         for req in self._admit_order():
             free = [i for i, a in enumerate(self.active) if a is None]
             if not free:
                 break
+            if self.paged:
+                need_tok = len(self._effective_prompt(req)) + 1
+                if not self.allocator.fits(need_tok):
+                    raise RuntimeError(
+                        f"request {req.request_id} needs "
+                        f"{self.allocator.pages_needed(need_tok)} pages but "
+                        f"the pool holds {self.allocator.num_pages} "
+                        f"(block table: {self.allocator.max_blocks}); it "
+                        "can never be admitted")
+                if not (self.allocator.can_admit(need_tok) and
+                        self.allocator.admit_within_watermark(need_tok)):
+                    continue   # memory-aware: smaller requests may still fit
             slot = free[0]
             self.active[slot] = req
             self.waiting.remove(req)
+            self.policy.on_admit(req)
             self._partial[slot] = 0
+            self._eff[slot] = self._effective_prompt(req)
+            if self.paged:
+                self.allocator.alloc_slot(slot, need_tok)
+                self._note_pages()
             self.cache = self._jit_set_slice(self.cache, slot,
                                              self._fresh_slot)
             new_lengths = self.lengths.copy()
@@ -221,7 +413,8 @@ class InferenceEngine:
 
         # 2) prefill work
         prefilling = [i for i, r in enumerate(self.active)
-                      if r is not None and self._partial.get(i, 0) < len(r.prompt)]
+                      if r is not None and
+                      self._partial.get(i, 0) < len(self._eff[i])]
         if prefilling:
             slot = prefilling[0]
             chunk = self.policy.prefill_chunk_tokens(self.prefill_chunk)
@@ -232,7 +425,25 @@ class InferenceEngine:
         # 3) decode step for all fully-prefilled slots — one full-batch
         #    dispatch; the active mask isolates mid-prefill/idle rows
         decoding = [i for i, r in enumerate(self.active)
-                    if r is not None and self._partial.get(i, 0) >= len(r.prompt)]
+                    if r is not None and
+                    self._partial.get(i, 0) >= len(self._eff[i])]
+        if self.paged and decoding:
+            # page growth before dispatch: the new token writes at position
+            # lengths[i]; growing may evict LRU victims (possibly other
+            # decoding slots — drop those from this step's batch)
+            for i in list(decoding):
+                if self.active[i] is None:
+                    continue   # evicted by an earlier slot's growth
+                if not self._grow_pages(i, int(self.lengths[i]) + 1):
+                    # pool smaller than this one row: finish cache-full
+                    req = self.active[i]
+                    req.t_done = self.now()
+                    self.done.append(req)
+                    self.allocator.free_slot(i)
+                    self.active[i] = None
+                    self._partial.pop(i, None)
+                    self._eff.pop(i, None)
+            decoding = [i for i in decoding if self.active[i] is not None]
         if decoding:
             mask = np.zeros((self.max_slots,), bool)
             tokens = np.zeros((self.max_slots, 1), np.int32)
@@ -241,9 +452,17 @@ class InferenceEngine:
                 req = self.active[i]
                 tokens[i, 0] = (req.tokens_out[-1] if req.tokens_out
                                 else int(req.prompt[-1]))
-            logits, self.cache = self._jit_decode(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(self.lengths), jnp.asarray(mask))
+            if self.paged:
+                for i in decoding:
+                    self.allocator.touch(i)
+                logits, self.cache = self._jit_decode_paged(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths),
+                    jnp.asarray(self.allocator.tables), jnp.asarray(mask))
+            else:
+                logits, self.cache = self._jit_decode(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(mask))
             if self._req_cost is not None:
                 # shared hardware serializes service demand: the step costs
                 # the sum of every active row's per-token decode cost
@@ -272,8 +491,11 @@ class InferenceEngine:
                 if len(req.tokens_out) >= req.max_new_tokens or full:
                     req.t_done = t
                     self.done.append(req)
+                    if self.paged:
+                        self.allocator.free_slot(i)
                     self.active[i] = None
                     self._partial.pop(i, None)
+                    self._eff.pop(i, None)
             self.stats.decode_tokens += len(decoding)
         return emitted
 

@@ -1,0 +1,108 @@
+"""BlockAllocator: alloc/free bookkeeping, watermarks, LRU victims."""
+import numpy as np
+import pytest
+
+from repro.serving.block_allocator import (BlockAllocator, PoolExhausted,
+                                           SENTINEL)
+
+
+def make(num_pages=8, page_size=4, max_slots=3, max_blocks=4, **kw):
+    return BlockAllocator(num_pages, page_size, max_slots, max_blocks, **kw)
+
+
+def test_alloc_maps_pages_and_tracks_usage():
+    a = make()
+    assert a.free_pages == 8 and a.pages_in_use == 0
+    a.alloc_slot(0, tokens=9)            # ceil(9/4) = 3 pages
+    assert a.slot_pages(0) == 3
+    assert a.pages_in_use == 3 and a.free_pages == 5
+    # the block table holds the mapped ids, sentinel elsewhere
+    assert all(a.tables[0, :3] >= 0)
+    assert len(set(a.tables[0, :3])) == 3
+    assert a.tables[0, 3] == SENTINEL
+    assert np.all(a.tables[1:] == SENTINEL)
+
+
+def test_grow_and_free_round_trip():
+    a = make()
+    a.alloc_slot(0, tokens=4)            # 1 page
+    assert a.grow_to(0, tokens=5) == 1   # needs a 2nd page
+    assert a.grow_to(0, tokens=8) == 0   # still covered
+    freed = a.free_slot(0)
+    assert freed == 2
+    assert a.pages_in_use == 0 and a.free_pages == 8
+    assert np.all(a.tables[0] == SENTINEL)
+
+
+def test_freed_pages_are_reusable():
+    a = make(num_pages=2, max_blocks=2)
+    a.alloc_slot(0, tokens=8)            # whole pool
+    with pytest.raises(PoolExhausted):
+        a.alloc_slot(1, tokens=1)
+    a.free_slot(0)
+    a.alloc_slot(1, tokens=8)
+    assert a.slot_pages(1) == 2
+
+
+def test_pages_needed_and_admission_queries():
+    a = make()
+    assert a.pages_needed(0) == 1        # at least one page
+    assert a.pages_needed(4) == 1 and a.pages_needed(5) == 2
+    assert a.can_admit(32)               # 8 pages
+    assert not a.can_admit(33)
+    assert a.fits(16) and not a.fits(17)  # block table caps at 4 pages
+
+
+def test_grow_beyond_pool_raises():
+    a = make(num_pages=2, max_blocks=4)
+    a.alloc_slot(0, tokens=8)
+    with pytest.raises(PoolExhausted):
+        a.grow_to(0, tokens=9)
+
+
+def test_lru_victim_prefers_stalest_slot():
+    a = make()
+    a.alloc_slot(0, tokens=4)
+    a.alloc_slot(1, tokens=4)
+    a.alloc_slot(2, tokens=4)
+    a.touch(0)                            # 0 is now the most recent
+    assert a.lru_victim() == 1
+    assert a.lru_victim(exclude={1}) == 2
+    assert a.lru_victim(exclude={0, 1, 2}) is None
+
+
+def test_watermarks():
+    a = make(num_pages=10, max_slots=4, max_blocks=8,
+             high_watermark=0.8, low_watermark=0.5)
+    a.alloc_slot(0, tokens=4 * 7)         # 7 pages: below high (8)
+    assert not a.over_high_watermark()
+    assert a.over_low_watermark()         # above low (5)
+    a.grow_to(0, tokens=4 * 8)            # 8 pages: at high
+    assert a.over_high_watermark()
+    # admission respects the high watermark, except on an idle pool
+    assert not a.admit_within_watermark(4)
+    a.free_slot(0)
+    assert a.admit_within_watermark(4 * 10)
+
+
+def test_copy_on_write_tables():
+    """Mutations must rebind `tables`, never edit the handed-out array
+    (the engine's jit-aliasing invariant)."""
+    a = make()
+    before = a.tables
+    a.alloc_slot(0, tokens=9)
+    assert a.tables is not before
+    assert np.all(before == SENTINEL)     # old snapshot untouched
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        make(num_pages=0)
+    with pytest.raises(ValueError):
+        make(high_watermark=1.5)
+    a = make()
+    a.alloc_slot(0, 4)
+    with pytest.raises(ValueError):
+        a.alloc_slot(0, 4)               # double alloc
+    with pytest.raises(ValueError):
+        a.grow_to(1, 4)                  # never allocated

@@ -1,0 +1,197 @@
+"""Scenario-level memory model (schema 1.2): budgets, eviction-driven
+degradation, sweep(), and the plot_results consumer."""
+import json
+
+import pytest
+
+from repro.bench import Scenario, ScenarioApp
+from repro.bench.scenario import SCHEMA_VERSION
+
+
+def _mem_scenario(budget, *, policy="slo_aware", substrate="simulator"):
+    return Scenario(
+        name=f"mem-{budget}", mode="concurrent", policy=policy,
+        total_chips=64, substrate=substrate,
+        kv_page_budget=budget, page_size=16,
+        apps=[ScenarioApp("live_captions", num_requests=10),
+              ScenarioApp("chatbot", num_requests=4),
+              ScenarioApp("deep_research", num_requests=1)])
+
+
+def test_schema_version_is_1_2():
+    assert SCHEMA_VERSION == "1.2"
+
+
+def test_memory_block_only_with_budget():
+    free = Scenario(name="free", mode="concurrent", policy="greedy",
+                    total_chips=64,
+                    apps=[ScenarioApp("chatbot", num_requests=2)])
+    doc = free.run().to_json()
+    assert doc["schema_version"] == "1.2"
+    assert "memory" not in doc["results"]["concurrent"]
+    assert "kv_page_budget" not in doc["scenario"]
+
+    capped = _mem_scenario(200_000)
+    doc = capped.run().to_json()
+    mem = doc["results"]["concurrent"]["memory"]
+    assert set(mem) == {"kv_token_budget", "page_size", "pages_total",
+                        "pages_in_use", "page_utilization", "evictions",
+                        "recompute_tokens"}
+    assert doc["scenario"]["kv_page_budget"] == 200_000
+    assert doc["scenario"]["page_size"] == 16
+    # embedded spec re-runs to the same document (deterministic)
+    assert Scenario.from_dict(doc["scenario"]).run().to_json() == doc
+
+
+def test_eviction_driven_degradation():
+    """The acceptance pin on the simulator substrate: tightening the page
+    budget produces evictions, recomputed tokens, and a worse makespan —
+    the paper's §4.3 degradation as PAGES become the bottleneck."""
+    ample = _mem_scenario(200_000).run().sim
+    tight = _mem_scenario(131_100).run().sim
+    assert ample.evictions == 0
+    assert tight.evictions > 0
+    assert tight.recompute_tokens > 0
+    assert tight.makespan_s > ample.makespan_s
+    m = tight.summary()["memory"]
+    assert m["page_utilization"] > 0.9
+    assert m["evictions"] == tight.evictions
+
+
+def test_mutual_eviction_terminates():
+    """Anti-livelock regression: two requests whose footprints cannot
+    co-reside must serialize (an evicted request loses its eviction
+    rights), not ping-pong evicting each other forever."""
+    from repro.core.costs import WorkItem
+    from repro.core.simulator import AppTrace, PodSimulator, SimRequest
+    from repro.core.slo import SLO
+
+    def trace(name):
+        items = [WorkItem(name, 0, "prefill", 1e12, 1e10, 0, tokens=10),
+                 WorkItem(name, 0, "decode", 1e12, 1e10, 0, tokens=10)]
+        return AppTrace(name, SLO(), [SimRequest(name, 0, 0.0, items,
+                                                 kv_tokens=100)])
+
+    sim = PodSimulator(64, policy="greedy", kv_token_budget=100)
+    res = sim.run([trace("a"), trace("b")])     # must terminate
+    for n in ("a", "b"):
+        assert len(res.reports[n].records) == 1
+    assert res.evictions <= 2                   # bounded, not thrashing
+
+
+def test_memory_unconstrained_run_is_unchanged():
+    """kv_page_budget=None must reproduce the pre-paging simulator output
+    bit for bit (the knob is strictly additive)."""
+    a = _mem_scenario(None).run().sim.summary()
+    free = Scenario(name="mem-None", mode="concurrent", policy="slo_aware",
+                    total_chips=64,
+                    apps=[ScenarioApp("live_captions", num_requests=10),
+                          ScenarioApp("chatbot", num_requests=4),
+                          ScenarioApp("deep_research", num_requests=1)])
+    assert a == free.run().sim.summary()
+
+
+def test_memory_mb_converts_to_tokens():
+    sc = _mem_scenario(None)
+    sc.memory_mb = 4096.0
+    budget = sc.kv_token_budget()
+    assert budget is not None and budget > 0
+    sc2 = _mem_scenario(123)
+    assert sc2.kv_token_budget() == 123 * 16
+
+
+def test_platform_budgets_size_the_pool():
+    """kv_budget_bytes/kv_pool_pages: UMA platforms (the paper's consumer
+    devices) keep half their capacity for co-tenants; HBM keeps ~10%."""
+    from repro.roofline.hw import (HOST_CPU, TPU_V5E, kv_bytes_per_token,
+                                   kv_pool_pages)
+    from repro.configs.registry import CONFIGS
+
+    assert HOST_CPU.uma and not TPU_V5E.uma
+    assert TPU_V5E.kv_budget_bytes() == pytest.approx(
+        TPU_V5E.hbm_bytes * 0.9)
+    assert HOST_CPU.kv_budget_bytes(model_bytes=1e9) == pytest.approx(
+        (HOST_CPU.hbm_bytes - 1e9) * 0.5)
+
+    per_tok = kv_bytes_per_token(CONFIGS["tinyllama-1.1b"].reduced())
+    assert per_tok > 0
+    # chip-capacity path (no memory_mb): the per-platform pool
+    pages = kv_pool_pages(TPU_V5E, per_tok, 16, model_bytes=1e9)
+    assert pages == int(TPU_V5E.kv_budget_bytes(1e9) // (per_tok * 16))
+    # explicit budget path: what Scenario.memory_mb routes through
+    assert kv_pool_pages(TPU_V5E, per_tok, 16, memory_mb=1.0) == \
+        int(1024**2 // (per_tok * 16))
+    # ssm holds no KV: no pool
+    assert kv_pool_pages(TPU_V5E, 0, 16) == 0
+
+
+def test_engine_substrate_memory_block():
+    sc = Scenario(name="mem-eng", mode="engine", policy="chunked",
+                  total_chips=1, kv_page_budget=48, page_size=8,
+                  apps=[ScenarioApp("live_captions", num_requests=3),
+                        ScenarioApp("chatbot", num_requests=2)])
+    doc = sc.run().to_json()
+    mem = doc["results"]["concurrent"]["memory"]
+    assert mem["pages_total"] == 48
+    assert 0 < mem["pages_in_use"] <= 48
+    assert doc["substrate"] == "engine"
+
+
+# ----------------------------------------------------------------- sweep
+def test_sweep_emits_one_result_per_rate():
+    sc = Scenario(name="sw", mode="concurrent", policy="greedy",
+                  total_chips=64, sweep_rates=[0.5, 2.0],
+                  apps=[ScenarioApp("live_captions", num_requests=4),
+                        ScenarioApp("chatbot", num_requests=2)])
+    results = sc.sweep()
+    assert len(results) == 2
+    for rate, res in zip((0.5, 2.0), results):
+        spec = res.to_json()["scenario"]
+        assert spec["name"] == f"sw@{rate}"
+        for app in spec["apps"]:
+            assert app["arrival"] == {"kind": "poisson", "rate_per_s": rate}
+    # explicit rates override the spec's list; app filter respected
+    only = sc.sweep([1.0], apps=["chatbot"])[0].to_json()["scenario"]
+    arrivals = {a["app"]: a.get("arrival") for a in only["apps"]}
+    assert arrivals["chatbot"] == {"kind": "poisson", "rate_per_s": 1.0}
+    assert arrivals["live_captions"] is None
+
+
+def test_sweep_without_rates_raises():
+    sc = Scenario(name="sw", mode="concurrent", policy="greedy",
+                  apps=[ScenarioApp("chatbot", num_requests=1)])
+    with pytest.raises(ValueError, match="sweep"):
+        sc.sweep()
+
+
+def test_sweep_rates_round_trip_yaml():
+    sc = Scenario(name="sw", mode="concurrent", policy="greedy",
+                  total_chips=8, sweep_rates=[0.5, 2.0],
+                  apps=[ScenarioApp("chatbot", num_requests=1)])
+    rt = Scenario.from_yaml(sc.to_yaml())
+    assert rt.sweep_rates == [0.5, 2.0]
+
+
+# ---------------------------------------------------------- plot_results
+def test_plot_results_markdown(tmp_path):
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks import plot_results
+
+    docs = [r.to_json() for r in Scenario(
+        name="sw", mode="concurrent", policy="greedy", total_chips=64,
+        sweep_rates=[0.5, 2.0],
+        apps=[ScenarioApp("live_captions", num_requests=3)]).sweep()]
+    docs.append(_mem_scenario(131_100).run().to_json())
+    path = tmp_path / "docs.json"
+    path.write_text(json.dumps(docs))
+    rows = [r for d in plot_results.load_docs([str(path)])
+            for r in plot_results.flatten(d)]
+    md = plot_results.to_markdown(rows)
+    assert "page_utilization" in md and "live_captions" in md
+    rates = [r["rate_per_s"] for r in rows if r["scenario"].startswith("sw@")]
+    assert set(rates) == {0.5, 2.0}
+    with pytest.raises(ValueError, match="diff_results"):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"version": 1, "entries": []}))
+        plot_results.load_docs([str(bad)])

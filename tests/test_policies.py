@@ -196,3 +196,77 @@ def test_closed_loop_rerun_is_reproducible():
     assert [r.arrival_s for r in trace.requests] == arrivals_before
     second = PodSimulator(16, policy="greedy").run([trace]).summary()
     assert first == second
+
+
+# -------------------------------------------------- deficit round robin
+def test_drr_registered_with_alias():
+    from repro.bench.policy import DeficitRoundRobinPolicy
+    assert isinstance(get_policy("deficit_round_robin"),
+                      DeficitRoundRobinPolicy)
+    assert isinstance(get_policy("drr"), DeficitRoundRobinPolicy)
+    assert get_policy("drr").name == "deficit_round_robin"
+
+
+def test_drr_interleaves_simultaneous_bursts():
+    """Equal apps bursting at t=0 must alternate by rounds, not FIFO (the
+    quantum is sized to the 1-token test items so every item spends one
+    round's deficit)."""
+    from repro.bench.policy import DeficitRoundRobinPolicy
+    res = PodSimulator(64, policy=DeficitRoundRobinPolicy(quantum_tokens=1)).run(
+        [_trace("a", 6, spacing=0.0), _trace("b", 6, spacing=0.0)])
+    for n in ("a", "b"):
+        assert len(res.reports[n].records) == 6
+    fin = {n: sorted(r.arrival_s + r.e2e_s
+                     for r in res.reports[n].records) for n in ("a", "b")}
+    assert abs(fin["a"][0] - fin["b"][0]) < fin["a"][-1] - fin["a"][0]
+
+
+def test_drr_token_deficits_throttle_token_hungry_app():
+    """The app spending many TOKENS per item overdraws its quantum and
+    falls behind in rounds; the light app's queue drains first."""
+    from repro.bench.policy import DeficitRoundRobinPolicy
+
+    def trace(name, tokens):
+        reqs = []
+        for i in range(6):
+            items = [WorkItem(name, i, "decode", 1e12, 1e10, 0,
+                              tokens=tokens) for _ in range(2)]
+            reqs.append(SimRequest(name, i, 0.0, items))
+        return AppTrace(name, SLO(e2e=1e6), reqs)
+
+    p = DeficitRoundRobinPolicy(quantum_tokens=64)
+    res = PodSimulator(64, policy=p).run(
+        [trace("hungry", 512), trace("light", 8)])
+    fin_h = max(r.arrival_s + r.e2e_s for r in res.reports["hungry"].records)
+    fin_l = max(r.arrival_s + r.e2e_s for r in res.reports["light"].records)
+    assert fin_l < fin_h                  # light app never waits on rounds
+
+
+def test_drr_engine_hooks_round_order_and_on_admit():
+    """Engine side: admit_order sorts by round; on_admit charges the
+    admitted request's token demand and advances its app's round."""
+    from repro.bench.policy import DeficitRoundRobinPolicy
+    from repro.serving.request import Request
+    import numpy as np
+
+    p = DeficitRoundRobinPolicy(quantum_tokens=32)
+    ra = Request(0, np.zeros(40, np.int32), 24, arrival_s=0.0, app="a")
+    rb = Request(1, np.zeros(4, np.int32), 4, arrival_s=1.0, app="b")
+    assert [r.app for r in p.admit_order([ra, rb], 0.0)] == ["a", "b"]
+    p.on_admit(ra)                        # 64 tokens on a 32-token quantum
+    assert [r.app for r in p.admit_order([ra, rb], 0.0)] == ["b", "a"]
+    p.reset()
+    assert [r.app for r in p.admit_order([ra, rb], 0.0)] == ["a", "b"]
+
+
+def test_drr_runs_on_both_substrates_from_one_yaml():
+    from repro.bench import Scenario, ScenarioApp
+    for substrate in ("simulator", "engine"):
+        sc = Scenario(name=f"drr-{substrate}", mode="concurrent",
+                      policy="deficit_round_robin", total_chips=8,
+                      substrate=substrate,
+                      apps=[ScenarioApp("live_captions", num_requests=3),
+                            ScenarioApp("chatbot", num_requests=2)])
+        res = sc.run()
+        assert res.report("live_captions").records
+        assert res.report("chatbot").records
