@@ -1,32 +1,40 @@
 """Paper Fig. 4: per-app accelerator utilization running exclusively.
 TPU translation: SMACT ≙ reserved-chip fraction, SMOCC ≙ reserved ×
-roofline-achievement; plus the power model (paper Fig. 8)."""
+roofline achievement computed from each dispatch's ACTUAL FLOPs/bytes
+(repro.telemetry — the hard-coded occupancy constant is gone); plus the
+memory-bandwidth timeline and the power model (paper Fig. 8). The rows
+come from the same telemetry timeline either substrate records, so
+``benchmarks/run.py --substrate engine`` measures the real
+InferenceEngine's utilization with identical code."""
 from __future__ import annotations
 
 from benchmarks.common import (NUM_REQUESTS, STANDARD_APPS, TOTAL_CHIPS,
                                current_substrate, row)
 from repro.bench import Scenario, ScenarioApp
-from repro.monitor.metrics import UtilizationTimeline
+from repro.telemetry import UtilizationTimeline
+
+
+def scenario(substrate: str) -> Scenario:
+    return Scenario(
+        name="fig4-utilization", mode="exclusive", policy="greedy",
+        total_chips=TOTAL_CHIPS, substrate=substrate, telemetry=True,
+        apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
+              for t in STANDARD_APPS])
 
 
 def run() -> list[str]:
-    scenario = Scenario(
-        name="fig4-utilization", mode="exclusive", policy="greedy",
-        total_chips=TOTAL_CHIPS, substrate=current_substrate(),
-        apps=[ScenarioApp(app_type=t, num_requests=NUM_REQUESTS[t])
-              for t in STANDARD_APPS])
-    res = scenario.run()
+    substrate = current_substrate()
+    res = scenario(substrate).run()
     rows = []
     for app_type in STANDARD_APPS:
         sim = res.sims[app_type]
         tl = UtilizationTimeline.from_sim(sim, bins=100)
-        smact = sum(tl.smact) / len(tl.smact)
-        smocc = sum(tl.smocc) / len(tl.smocc)
-        mean_pw = sum(tl.power_w) / len(tl.power_w)
         rows.append(row(
             f"fig4_utilization_{app_type}",
             sim.makespan_s * 1e6,
-            f"smact={smact:.3f};smocc={smocc:.3f};mean_power_w={mean_pw:.0f};"
+            f"smact={tl.smact_mean:.3f};smocc={tl.smocc_mean:.3f};"
+            f"mean_power_w={tl.power_w_mean:.0f};"
+            f"mean_bw_gbs={tl.bandwidth_gbs_mean:.1f};"
             f"energy_kj={sim.energy_j() / 1e3:.1f}"))
     return rows
 

@@ -1,13 +1,16 @@
 """Paper Fig. 6 / §4.2.1: static model sharing via one inference server —
 Chatbot vs Chatbot-KVCache-CPU while DeepResearch shares the model. The
 shared-server pair is declared as a Scenario: DeepResearch rides on the
-chatbot's architecture, and kv_cache=host moves attention to the host."""
+chatbot's architecture, and kv_cache=host moves attention to the host.
+Telemetry is on: the derived column carries the HBM-bandwidth and SMOCC
+means, showing the host-KV variant starving device bandwidth."""
 from __future__ import annotations
 
 from benchmarks.common import (TOTAL_CHIPS, current_substrate, row,
                                smoke_requests)
 from repro.bench import Scenario, ScenarioApp
 from repro.core.apps import DEFAULT_ARCH
+from repro.telemetry import UtilizationTimeline
 
 
 def scenario(kv: str) -> Scenario:
@@ -17,6 +20,7 @@ def scenario(kv: str) -> Scenario:
     return Scenario(
         name=f"fig6-sharing-kv-{kv}", mode="concurrent", policy="greedy",
         total_chips=TOTAL_CHIPS, substrate=current_substrate(),
+        telemetry=True,
         apps=[ScenarioApp("chatbot", name=chat, kv_cache_on_host=host,
                           num_requests=smoke_requests(10)),
               ScenarioApp("deep_research", name="DeepResearch",
@@ -32,12 +36,15 @@ def run() -> list[str]:
         chat = next(a.name for a in sc.apps if "Chatbot" in a.name)
         rep = res.report(chat)
         st = rep.latency_stats()
+        tl = UtilizationTimeline.from_sim(res.sim, bins=100)
         rows.append(row(
             f"fig6_sharing_kv_{kv}_{chat}",
             st.get("mean", 0.0) * 1e6,
             f"slo={rep.attainment:.3f};"
             f"norm_lat={rep.normalized_latency():.3f};"
-            f"util={res.sim.utilization():.3f}"))
+            f"util={res.sim.utilization():.3f};"
+            f"smocc={tl.smocc_mean:.3f};"
+            f"mean_bw_gbs={tl.bandwidth_gbs_mean:.1f}"))
     return rows
 
 

@@ -4,8 +4,10 @@ dashboard (``diff_results.py`` is the regression-diff half).
 
 Input: any mix of files, each holding one document or a JSON array of
 documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
-1.0–1.2; the 1.2 ``memory`` block (page utilization, evictions, recompute)
-is surfaced when present.
+1.0–1.3; the 1.2 ``memory`` block (page utilization, evictions, recompute)
+and the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
+spans) are surfaced when present — a telemetry-enabled document renders a
+per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines.
 
     python benchmarks/plot_results.py results/*.json            # markdown
     python benchmarks/plot_results.py sweep.json --png out.png  # + charts
@@ -71,6 +73,7 @@ def flatten(doc: dict) -> list[dict]:
         if not isinstance(summary, dict) or "apps" not in summary:
             continue
         mem = summary.get("memory", {})
+        tel = summary.get("telemetry", {})
         for app, stats in summary["apps"].items():
             rows.append({
                 "scenario": name, "substrate": substrate, "label": label,
@@ -81,8 +84,22 @@ def flatten(doc: dict) -> list[dict]:
                 "page_utilization": mem.get("page_utilization"),
                 "evictions": mem.get("evictions"),
                 "recompute_tokens": mem.get("recompute_tokens"),
+                "smact_mean": tel.get("smact_mean"),
+                "smocc_mean": tel.get("smocc_mean"),
+                "bandwidth_gbs_mean": tel.get("bandwidth_gbs_mean"),
             })
     return rows
+
+
+def telemetry_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
+    """Every (scenario, label, telemetry block) across the documents."""
+    out = []
+    for doc in docs:
+        name = doc.get("scenario", {}).get("name", "scenario")
+        for label, summary in doc.get("results", {}).items():
+            if isinstance(summary, dict) and "telemetry" in summary:
+                out.append((name, label, summary["telemetry"]))
+    return out
 
 
 # ---------------------------------------------------------------- markdown
@@ -96,7 +113,8 @@ def _fmt(v: Any) -> str:
 
 def to_markdown(rows: list[dict]) -> str:
     cols = ["scenario", "substrate", "app", "rate_per_s", "attainment",
-            "p99_s", "page_utilization", "evictions", "recompute_tokens"]
+            "p99_s", "page_utilization", "evictions", "recompute_tokens",
+            "smact_mean", "smocc_mean", "bandwidth_gbs_mean"]
     # drop all-empty optional columns (memory block absent on <1.2 docs)
     cols = [c for c in cols
             if c in ("scenario", "substrate", "app")
@@ -109,7 +127,8 @@ def to_markdown(rows: list[dict]) -> str:
 
 
 # ------------------------------------------------------------------- plots
-def render_png(rows: list[dict], path: str) -> bool:
+def render_png(rows: list[dict], path: str,
+               docs: Optional[list] = None) -> bool:
     try:
         import matplotlib
         matplotlib.use("Agg")
@@ -125,10 +144,14 @@ def render_png(rows: list[dict], path: str) -> bool:
     for r in rows:
         if r["evictions"] is not None:
             mem.setdefault((r["scenario"], r["label"]), r)
-    panels = (1 if sweep else 0) + (2 if mem else 0)
+    tel = telemetry_blocks(docs or [])
+    if len(tel) > 1:
+        print(f"# rendering first of {len(tel)} telemetry blocks "
+              f"({tel[0][0]}/{tel[0][1]})", file=sys.stderr)
+    panels = (1 if sweep else 0) + (2 if mem else 0) + (3 if tel else 0)
     if not panels:
-        print("# nothing to plot: no sweep points and no memory blocks",
-              file=sys.stderr)
+        print("# nothing to plot: no sweep points, memory blocks or "
+              "telemetry blocks", file=sys.stderr)
         return False
 
     fig, axes = plt.subplots(1, panels, figsize=(5.2 * panels, 3.6))
@@ -174,6 +197,42 @@ def render_png(rows: list[dict], path: str) -> bool:
         ax.set_title("attainment vs Poisson rate", color=TEXT_PRIMARY,
                      fontsize=10)
 
+    if tel:
+        name, label, blk = tel[0]
+        dt = blk.get("dt_s", 0.0) or 1.0
+        ts = [(b + 0.5) * dt for b in range(len(blk["smact"]))]
+        # utilization timeline: SMACT + roofline-achieved SMOCC
+        ax = axes.pop(0)
+        ax.plot(ts, blk["smact"], color=SERIES[0], linewidth=1.5,
+                label="SMACT")
+        ax.plot(ts, blk["smocc"], color=SERIES[1], linewidth=1.5,
+                label="SMOCC")
+        ax.set_ylim(-0.02, 1.05)
+        ax.set_xlabel("time (s)", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_ylabel("fraction of pod", color=TEXT_SECONDARY, fontsize=9)
+        ax.legend(fontsize=8, frameon=False, labelcolor=TEXT_PRIMARY)
+        ax.set_title(f"utilization — {name}/{label}", color=TEXT_PRIMARY,
+                     fontsize=10)
+        # memory-bandwidth timeline (its own axis: different unit)
+        ax = axes.pop(0)
+        ax.plot(ts, blk["bandwidth_gbs"], color=SERIES[2], linewidth=1.5)
+        ax.set_xlabel("time (s)", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_ylabel("HBM GB/s", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_title("memory bandwidth", color=TEXT_PRIMARY, fontsize=10)
+        # per-app Gantt: one lane per app, spans colored by slot order
+        ax = axes.pop(0)
+        apps = list(blk.get("spans", {}))
+        for lane, app in enumerate(apps):
+            color = SERIES[lane % MAX_SERIES]
+            for t0, t1, _kind in blk["spans"][app]:
+                ax.barh(lane, max(t1 - t0, dt / 4), left=t0, height=0.6,
+                        color=color, edgecolor="none")
+        ax.set_yticks(range(len(apps)))
+        ax.set_yticklabels(apps, fontsize=8, color=TEXT_SECONDARY)
+        ax.invert_yaxis()
+        ax.set_xlabel("time (s)", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_title("per-app Gantt", color=TEXT_PRIMARY, fontsize=10)
+
     if mem:
         labels = [f"{s}\n{l}" if l != "concurrent" else s
                   for s, l in mem]
@@ -207,13 +266,14 @@ def main(argv=None) -> int:
                     help="also render charts to this PNG (needs matplotlib)")
     args = ap.parse_args(argv)
 
-    rows = [r for doc in load_docs(args.paths) for r in flatten(doc)]
+    docs = load_docs(args.paths)
+    rows = [r for doc in docs for r in flatten(doc)]
     if not rows:
         print("no app results found", file=sys.stderr)
         return 1
     print(to_markdown(rows))
     if args.png:
-        render_png(rows, args.png)
+        render_png(rows, args.png, docs)
     return 0
 
 

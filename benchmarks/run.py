@@ -64,7 +64,7 @@ def main(argv=None) -> None:
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
                             fig7_workflow, fig_memory, kernel_bench,
-                            roofline_table)
+                            roofline_table, telemetry_bench)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
@@ -74,6 +74,7 @@ def main(argv=None) -> None:
         ("fig_memory", fig_memory.run),
         ("appendix_platforms", appendix_platforms.run),
         ("engine_bench", engine_bench.run),
+        ("telemetry_bench", telemetry_bench.run),
         ("kernel_bench", kernel_bench.run),
         ("roofline_table", roofline_table.run),
     ]

@@ -1,0 +1,46 @@
+"""Telemetry regression rows (``BENCH_telemetry.json`` in CI): one
+telemetry-enabled concurrent scenario runs on BOTH substrates; the rows
+pin the utilization/bandwidth means and event counts the
+``repro.telemetry`` subsystem derives. Everything is virtual-clock
+deterministic, so the rows diff through ``bench-diff`` like the kernel
+and engine documents — a drift in SMACT/SMOCC/bandwidth accounting (or a
+substrate diverging from its twin) trips the gate.
+
+Row contract: value = makespan (µs) for the scenario rows; the
+``*_smact_pct`` rows carry mean SMACT ×1e4 as the value so the 10%
+relative gate applies to the utilization metric itself.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_requests
+from repro.bench import Scenario, ScenarioApp
+
+
+def scenario(substrate: str) -> Scenario:
+    return Scenario(
+        name=f"telemetry-{substrate}", mode="concurrent", policy="slo_aware",
+        total_chips=64, substrate=substrate, telemetry=True, seed=1,
+        apps=[ScenarioApp("chatbot", num_requests=smoke_requests(4)),
+              ScenarioApp("live_captions", num_requests=smoke_requests(8))])
+
+
+def run() -> list[str]:
+    rows = []
+    for substrate in ("simulator", "engine"):
+        res = scenario(substrate).run()
+        summary = res.to_json()["results"]["concurrent"]
+        blk = summary["telemetry"]
+        n_events = sum(blk["events"].values())
+        rows.append(row(
+            f"telemetry_{substrate}", summary["makespan_s"] * 1e6,
+            f"smact={blk['smact_mean']:.4f};smocc={blk['smocc_mean']:.4f};"
+            f"bw_gbs={blk['bandwidth_gbs_mean']:.1f};events={n_events};"
+            f"spans={sum(len(s) for s in blk['spans'].values())}"))
+        rows.append(row(
+            f"telemetry_{substrate}_smact_pct", blk["smact_mean"] * 1e4,
+            f"bins={blk['bins']};power_w={blk['power_w_mean']:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

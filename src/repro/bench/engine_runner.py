@@ -112,11 +112,27 @@ class CostedRequest(Request):
     decode_tok_s: float = 0.0
     decode_tokens_full: int = 0      # full-scale decode tokens (tpot norm)
     prefill_items: int = 0           # source chain items (step-SLO bounds)
+    # per-token WORK (full-scale analytic FLOPs / HBM bytes from the source
+    # work items, incl. KV traffic) — the telemetry numerators behind the
+    # engine substrate's SMOCC and bandwidth timelines
+    prefill_flops_tok: float = 0.0
+    prefill_hbm_tok: float = 0.0
+    decode_flops_tok: float = 0.0
+    decode_hbm_tok: float = 0.0
 
 
 def _request_cost(req: CostedRequest, kind: str, tokens: int) -> float:
     rate = req.prefill_tok_s if kind == "prefill" else req.decode_tok_s
     return rate * tokens
+
+
+def _request_work(req: CostedRequest, kind: str,
+                  tokens: int) -> tuple[float, float]:
+    """(flops, hbm_bytes) a telemetry span of ``tokens`` actually moved —
+    the :class:`InferenceEngine` ``request_work`` hook."""
+    if kind == "prefill":
+        return req.prefill_flops_tok * tokens, req.prefill_hbm_tok * tokens
+    return req.decode_flops_tok * tokens, req.decode_hbm_tok * tokens
 
 
 # ----------------------------------------------------------------- driver
@@ -145,7 +161,8 @@ class _EngineRun:
 
 
 def _drive(runs: list[_EngineRun], pending: list[_Pending],
-           total_chips: int) -> tuple[dict, list[UtilSample]]:
+           total_chips: int,
+           recorder=None) -> tuple[dict, list[UtilSample]]:
     """Event loop over one or more engines (one per chip partition) sharing
     a single virtual timeline. Always steps the laggard engine among those
     with runnable work so cross-partition dependency releases stay causal;
@@ -173,6 +190,12 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                 p.request.arrival_s = arr
                 if not p.background:
                     p.request.deadline_s = arr + p.deadline_hint_s
+                if recorder is not None and p.dep_gates:
+                    # workflow dependency release (per-request granularity);
+                    # request_id, not trace_idx: every event of one engine
+                    # trace keys requests the same way (Chrome tid)
+                    recorder.instant("release", p.request.app,
+                                     p.request.request_id, arr)
                 runs[p.run_idx].engine.submit(p.request)
             else:
                 still.append(p)
@@ -232,7 +255,11 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
             prefill_tok_s=prefill_s / prompt_tokens,
             decode_tok_s=decode_s / n_steps,
             decode_tokens_full=full,
-            prefill_items=len(pre))
+            prefill_items=len(pre),
+            prefill_flops_tok=sum(it.flops for it in pre) / prompt_tokens,
+            prefill_hbm_tok=sum(it.hbm_bytes for it in pre) / prompt_tokens,
+            decode_flops_tok=sum(it.flops for it in dec) / n_steps,
+            decode_hbm_tok=sum(it.hbm_bytes for it in dec) / n_steps)
         out.append(_Pending(
             run_idx=run_idx, request=req, offset_s=sim_req.arrival_s,
             setup_s=setup_s, deadline_hint_s=sim_req.deadline_hint_s,
@@ -327,6 +354,14 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                                     sc.page_size,
                                     memory_mb=sc.memory_mb) or None
 
+    # telemetry: one shared recorder across partition engines — their
+    # virtual clocks are windows onto the same scenario timeline (exactly
+    # how the UtilSamples merge), so events interleave by timestamp
+    recorder = None
+    if getattr(sc, "telemetry", False):
+        from repro.telemetry import TraceRecorder
+        recorder = TraceRecorder()
+
     runs = []
     for p_i, part in enumerate(parts):
         mine = [p for p in pending if p.run_idx == p_i]
@@ -345,11 +380,15 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                               request_cost_s=_request_cost,
                               kv_pages=kv_pages,
                               page_size=(sc.page_size
-                                         if pages_total is not None else None))
+                                         if pages_total is not None else None),
+                              recorder=recorder,
+                              recorder_chips=chips_of[part],
+                              recorder_label=str(part),
+                              request_work=_request_work)
         eng.load_params(params)
         runs.append(_EngineRun(engine=eng, chips=chips_of[part]))
 
-    completed, util = _drive(runs, pending, total_chips)
+    completed, util = _drive(runs, pending, total_chips, recorder)
     recs = _records(runs, {t.name: t for t in traces})
     reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
     paged = [r.engine for r in runs if r.engine.paged]
@@ -372,7 +411,7 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             evictions=sum(e.stats.evictions for e in paged),
             recompute_tokens=sum(e.stats.recompute_tokens for e in paged))
     sim = SimResult(reports=reports, util=util, total_chips=total_chips,
-                    chip=chip, strategy=policy.name, **mem)
+                    chip=chip, strategy=policy.name, trace=recorder, **mem)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed
 

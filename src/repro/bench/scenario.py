@@ -53,10 +53,14 @@ from repro.core.slo import SLO
 from repro.core.workflow import WorkflowSpec, parse_workflow
 from repro.roofline.hw import ChipSpec, get_chip
 
-SCHEMA_VERSION = "1.2"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.3"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
+                         # 1.3: + per-sim "telemetry" block (utilization/
+                         #      bandwidth timelines, event counts, Gantt
+                         #      spans — repro.telemetry) when the scenario
+                         #      sets telemetry: true
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
@@ -131,7 +135,8 @@ class Scenario:
     chunk_target_s: float = 0.05
     seed: int = 0
     substrate: str = "simulator"       # simulator | engine
-    workflow_release: str = "request"  # engine substrate: request | node
+    workflow_release: str = "request"  # workflow deps release per request
+                                       # or per node (BOTH substrates)
     #: memory-pressure knobs (schema 1.2). ``kv_page_budget`` caps the KV
     #: pool in PAGES of ``page_size`` tokens; ``memory_mb`` derives the
     #: budget from bytes instead (substrate-native: full-scale KV bytes on
@@ -140,6 +145,10 @@ class Scenario:
     memory_mb: Optional[float] = None
     kv_page_budget: Optional[int] = None
     page_size: int = 16
+    #: attach the versioned ``telemetry`` block (schema 1.3) to every sim
+    #: in ``to_json()``: utilization/bandwidth timelines, event counts,
+    #: Gantt spans — schema-identical across substrates (repro.telemetry)
+    telemetry: bool = False
     #: arrival rates for :meth:`sweep` (one ScenarioResult per rate);
     #: serialized so a sweep is one YAML document
     sweep_rates: list = field(default_factory=list)
@@ -231,6 +240,8 @@ class Scenario:
             d["kv_page_budget"] = self.kv_page_budget
         if self.memory_mb is not None or self.kv_page_budget is not None:
             d["page_size"] = self.page_size
+        if self.telemetry:
+            d["telemetry"] = True
         if self.sweep_rates:
             d["sweep_rates"] = list(self.sweep_rates)
         if self.apps:
@@ -327,7 +338,8 @@ class Scenario:
         sim, finish, e2e = run_workflow_spec(
             self.workflow_spec(), total_chips=self.total_chips,
             policy=self.policy, chip=self.chip_spec,
-            chunk_target_s=self.chunk_target_s, max_rounds=max_rounds)
+            chunk_target_s=self.chunk_target_s, max_rounds=max_rounds,
+            release=self.workflow_release)
         return ScenarioResult(scenario=self, sims={"workflow": sim},
                               node_finish_s=finish, e2e_s=e2e)
 
@@ -360,7 +372,13 @@ class ScenarioResult:
         raise KeyError(app_name)
 
     def summary(self) -> dict:
-        out = {label: sim.summary() for label, sim in self.sims.items()}
+        out = {}
+        for label, sim in self.sims.items():
+            s = sim.summary()
+            if self.scenario.telemetry and sim.trace is not None:
+                from repro.telemetry import telemetry_block
+                s["telemetry"] = telemetry_block(sim)
+            out[label] = s
         if self.e2e_s is not None:
             out["e2e_s"] = self.e2e_s
             out["node_finish_s"] = dict(sorted(self.node_finish_s.items()))
@@ -387,29 +405,50 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
                       policy: Union[str, SchedulingPolicy] = "greedy",
                       chip: Optional[ChipSpec] = None,
                       chunk_target_s: float = 0.05,
-                      max_rounds: int = 12
+                      max_rounds: int = 12,
+                      release: str = "node"
                       ) -> tuple[SimResult, dict[str, float], float]:
     """Execute a workflow DAG on the pod: the DAG scheduler releases each
     node's trace when its dependencies complete; the simulator runs ONCE
     over the merged stream so cross-app contention is faithful. Release
     times depend on dependency finish times, which depend on contention —
-    fixed-point iterate until stable."""
+    fixed-point iterate until stable.
+
+    ``release`` sets the dependency-release granularity (mirroring the
+    engine substrate): ``"node"`` (the legacy fixed point — every request
+    of a node waits for ALL requests of its dependencies) or
+    ``"request"`` — request *j* waits only for request *j* of each
+    dependency (clamped to its length), so downstream nodes pipeline
+    behind upstream completions. The fixed point then iterates PER-REQUEST
+    release floors instead of one scalar per node."""
+    if release not in RELEASES:
+        raise ValueError(f"unknown workflow release {release!r}; "
+                         f"expected one of {RELEASES}")
     from repro.roofline.hw import TPU_V5E
     chip = chip or TPU_V5E
     policy = get_policy(policy)
     dag = build_dag(spec)
     exec_nodes = {n.node: n for n in dag.nodes.values()
                   if n.phase == Phase.EXEC}
-    release = {name: 0.0 for name in exec_nodes}
-    finish = {name: 0.0 for name in exec_nodes}
+    deps_of = {name: [d.split(":")[0] for d in node.deps
+                      if d.endswith(":exec")]
+               for name, node in exec_nodes.items()}
+    n_req = {name: node.task.num_requests
+             for name, node in exec_nodes.items()}
+    # per-request release floors (node mode keeps them identical per node)
+    rel = {name: [0.0] * n_req[name] for name in exec_nodes}
+    fin = dict(rel)
+    offsets = {name: [] for name in exec_nodes}
     result: Optional[SimResult] = None
 
     for _ in range(max_rounds):
         traces = []
         for name, node in exec_nodes.items():
             app = dataclasses.replace(app_from_task(node.task), name=name)
-            trace = app.sim_trace(node.task.num_requests,
-                                  start_s=release[name] + SETUP_S)
+            trace = app.sim_trace(node.task.num_requests, start_s=0.0)
+            offsets[name] = [r.arrival_s for r in trace.requests]
+            for j, r in enumerate(trace.requests):
+                r.arrival_s = rel[name][j] + SETUP_S + offsets[name][j]
             trace = AppTrace(name=name, slo=trace.slo,
                              requests=trace.requests,
                              background=trace.background or node.background,
@@ -418,21 +457,40 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
         sim = PodSimulator(total_chips, policy=policy, chip=chip,
                            chunk_target_s=chunk_target_s)
         result = sim.run(traces)
-        new_finish = {}
+        new_fin = {}
         for name in exec_nodes:
-            recs = result.reports[name].records
-            new_finish[name] = max((r.arrival_s + (r.e2e_s or 0.0)
-                                    for r in recs), default=release[name])
-        new_release = {}
-        for name, node in exec_nodes.items():
-            deps = [d.split(":")[0] for d in node.deps
-                    if d.endswith(":exec")]
-            new_release[name] = max([new_finish[d] for d in deps],
-                                    default=0.0)
-        if all(abs(new_release[n] - release[n]) < 1e-6 for n in release):
-            finish = new_finish
+            done = {r.request_id: r.arrival_s + (r.e2e_s or 0.0)
+                    for r in result.reports[name].records}
+            new_fin[name] = [done.get(j, rel[name][j])
+                             for j in range(n_req[name])]
+        new_rel = {}
+        for name in exec_nodes:
+            deps = [d for d in deps_of[name] if n_req[d] > 0]
+            if release == "request":
+                new_rel[name] = [
+                    max((new_fin[d][min(j, n_req[d] - 1)] for d in deps),
+                        default=0.0)
+                    for j in range(n_req[name])]
+            else:
+                node_rel = max((max(new_fin[d], default=0.0) for d in deps),
+                               default=0.0)
+                new_rel[name] = [node_rel] * n_req[name]
+        if all(abs(a - b) < 1e-6
+               for name in rel for a, b in zip(new_rel[name], rel[name])):
+            fin = new_fin
             break
-        release, finish = new_release, new_finish
+        rel, fin = new_rel, new_fin
 
+    # telemetry: dependency-release instants into the final round's trace
+    if result is not None and result.trace is not None:
+        for name in exec_nodes:
+            if deps_of[name]:
+                for j in range(n_req[name]):
+                    result.trace.instant(
+                        "release", name, j,
+                        rel[name][j] + SETUP_S + (offsets[name][j]
+                                                  if j < len(offsets[name])
+                                                  else 0.0))
+    finish = {name: max(fin[name], default=0.0) for name in exec_nodes}
     e2e = max(finish.values(), default=0.0)
     return result, finish, e2e

@@ -28,6 +28,7 @@ from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.core.costs import WorkItem
 from repro.core.slo import SLO, RequestRecord, SLOReport
 from repro.roofline.hw import ChipSpec, TPU_V5E
+from repro.telemetry.recorder import TraceRecorder
 
 
 @dataclass
@@ -99,6 +100,10 @@ class PodSimulator:
     def run(self, traces: list[AppTrace]) -> "SimResult":
         policy = self.policy
         policy.reset()
+        # telemetry: the simulator ALWAYS records its event trace (one
+        # span per dispatch — same cost class as the UtilSample it already
+        # appends); SimResult.trace feeds repro.telemetry's derived views
+        telem = TraceRecorder()
         apps = {t.name: t for t in traces}
         partition_of, chips_of = policy.partition(traces, self.total_chips)
 
@@ -146,6 +151,13 @@ class PodSimulator:
                             chunk_frac,
                             epoch.get((req.app, req.request_id), 0)))
 
+        def note_kv(now: float):
+            """KV-occupancy counter sample (pages, matching the engine's
+            pool accounting) — only meaningful under a budget."""
+            if budget is not None:
+                telem.counter("kv_pages", now,
+                              math.ceil(mem["resident"] / self.page_size))
+
         def evict(k: tuple, now: float):
             """Evict-and-recompute: drop the victim's residency and restart
             its chain from item 0 (its queued entry goes stale)."""
@@ -154,6 +166,9 @@ class PodSimulator:
             mem["evictions"] += 1
             st = state[k]
             mem["recompute"] += int(st.get("tokens_done", 0))
+            telem.instant("evict", req.app, req.request_id, now,
+                          tokens=int(st.get("tokens_done", 0)))
+            note_kv(now)
             st["tokens_done"] = 0
             st["decode_done"] = 0
             st["decode_t0"] = None
@@ -161,12 +176,21 @@ class PodSimulator:
             evicted_ever.add(k)
             enqueue(partition_of[req.app], now, req, 0, 1.0)
 
+        #: requests whose first admission was already traced — the
+        #: unbudgeted path admits trivially but must still emit ONE
+        #: "admit" instant per request (budgeted re-admissions after an
+        #: eviction emit again, matching the engine's slot admission)
+        admitted: set[tuple] = set()
+
         def admit(req: SimRequest, now: float) -> bool:
             """Make the request resident, LRU-evicting idle residents to
             fit; False = no room right now (an in-flight request holds the
             pool — retry after its completion)."""
             k = (req.app, req.request_id)
             if budget is None or req.kv_tokens <= 0 or k in resident:
+                if k not in admitted:
+                    admitted.add(k)
+                    telem.instant("admit", req.app, req.request_id, now)
                 return True
             need = min(req.kv_tokens, budget)   # clamp: must be runnable
             while mem["resident"] + need > budget:
@@ -188,6 +212,9 @@ class PodSimulator:
             resident[k] = (req, need)
             mem["resident"] += need
             mem["peak"] = max(mem["peak"], mem["resident"])
+            admitted.add(k)
+            telem.instant("admit", req.app, req.request_id, now, tokens=need)
+            note_kv(now)
             return True
 
         def try_dispatch(partition: str, now: float):
@@ -221,6 +248,10 @@ class PodSimulator:
                 end = now + dur
                 busy_until[partition] = end
                 util.append(UtilSample(now, end, chips, self.total_chips))
+                telem.span(item.kind, req.app, req.request_id, now, end,
+                           chips=chips, flops=item.flops * run_frac,
+                           hbm_bytes=item.hbm_bytes * run_frac,
+                           tokens=item.tokens * run_frac)
                 policy.on_dispatch(apps[req.app], req, item, now, end, chips)
                 executing.add(k)
                 last_use[k] = now
@@ -251,6 +282,7 @@ class PodSimulator:
                 # eviction mid-prefill loses real work
                 st["tokens_done"] += req.items[idx].tokens * run_frac
                 if rem > 1e-9:  # chunk remainder goes back to the queue
+                    telem.instant("preempt", req.app, req.request_id, now)
                     enqueue(partition, now, req, idx, rem)
                 else:
                     item = req.items[idx]
@@ -268,6 +300,7 @@ class PodSimulator:
                     else:
                         if k in resident:    # release the KV footprint
                             mem["resident"] -= resident.pop(k)[1]
+                            note_kv(now)
                         rec.e2e_s = now - rec.arrival_s
                         if st["decode_done"] > 1 and st["decode_t0"] is not None:
                             rec.tpot_s = ((now - st["decode_t0"]) /
@@ -300,7 +333,8 @@ class PodSimulator:
                          kv_token_budget=budget, page_size=self.page_size,
                          peak_kv_tokens=mem["peak"],
                          evictions=mem["evictions"],
-                         recompute_tokens=mem["recompute"])
+                         recompute_tokens=mem["recompute"],
+                         trace=telem)
 
 
 @dataclass
@@ -316,6 +350,10 @@ class SimResult:
     peak_kv_tokens: int = 0
     evictions: int = 0
     recompute_tokens: int = 0
+    #: recorded event trace (repro.telemetry) — always present for
+    #: simulator runs; engine runs carry one when telemetry is enabled.
+    #: NOT part of summary()/to_json() unless the scenario opts in.
+    trace: Union[TraceRecorder, None] = None
 
     @property
     def policy_name(self) -> str:

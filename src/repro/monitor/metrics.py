@@ -1,98 +1,24 @@
-"""System monitor (paper §3.2): the TPU-honest translations of SMACT/SMOCC
-plus host-side sampling for real CPU runs.
+"""DEPRECATED shim over :mod:`repro.telemetry` (mirrors the Orchestrator
+shim pattern): the system monitor grew into a full observability
+subsystem — event traces, roofline-achieved SMOCC, bandwidth/occupancy
+timelines, Chrome-trace export — and lives in ``repro.telemetry`` now.
 
-  SMACT ↔ reserved-chips fraction (orchestrator allocation / total)
-  SMOCC ↔ roofline fraction actually achieved on the reserved chips
-  power ↔ analytic chip power model (idle + util·dynamic)
+This module keeps the old import path working::
 
-``HostMonitor`` samples the real process (psutil) during real-mode runs —
-the container analogue of the paper's `stat`/`pcm-memory` sampling.
+    from repro.monitor.metrics import UtilizationTimeline, HostMonitor
+
+New code should import from :mod:`repro.telemetry` (see
+docs/telemetry.md); this shim will be removed once nothing imports it.
 """
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Optional
+import warnings
 
-from repro.core.simulator import SimResult
-from repro.roofline.hw import ChipSpec, TPU_V5E
+from repro.telemetry import HostMonitor, UtilizationTimeline
 
+warnings.warn(
+    "repro.monitor.metrics is deprecated; import UtilizationTimeline/"
+    "HostMonitor from repro.telemetry instead (see docs/telemetry.md)",
+    DeprecationWarning, stacklevel=2)
 
-@dataclass
-class UtilizationTimeline:
-    """Binned chips-busy timeline from a SimResult (Fig. 4/5 analogue)."""
-    t: list[float]
-    smact: list[float]     # fraction of chips reserved
-    smocc: list[float]     # reserved × roofline-achievement
-    power_w: list[float]
-
-    @staticmethod
-    def from_sim(result: SimResult, *, bins: int = 200,
-                 occupancy: float = 0.55) -> "UtilizationTimeline":
-        span = result.makespan_s or 1.0
-        dt = span / bins
-        act = [0.0] * bins
-        for u in result.util:
-            b0 = min(int(u.t0 / dt), bins - 1)
-            b1 = min(int(u.t1 / dt), bins - 1)
-            frac = u.busy_chips / u.total_chips
-            for b in range(b0, b1 + 1):
-                lo = max(u.t0, b * dt)
-                hi = min(u.t1, (b + 1) * dt)
-                if hi > lo:
-                    act[b] += frac * (hi - lo) / dt
-        chip = result.chip
-        smocc = [a * occupancy for a in act]
-        power = [chip.idle_power_w + (chip.peak_power_w - chip.idle_power_w) * a
-                 for a in act]
-        return UtilizationTimeline(
-            t=[(b + 0.5) * dt for b in range(bins)],
-            smact=[min(a, 1.0) for a in act], smocc=smocc, power_w=power)
-
-
-class HostMonitor:
-    """Background sampler of host CPU/memory for real-mode runs."""
-
-    def __init__(self, interval_s: float = 0.2):
-        self.interval_s = interval_s
-        self.samples: list[dict] = []
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-
-    def __enter__(self):
-        try:
-            import psutil
-        except ImportError:  # pragma: no cover
-            psutil = None
-        self._t0 = time.monotonic()
-
-        def loop():
-            import psutil
-            proc = psutil.Process()
-            while not self._stop.is_set():
-                self.samples.append({
-                    "t": time.monotonic() - self._t0,
-                    "cpu_pct": psutil.cpu_percent(interval=None),
-                    "rss_mb": proc.memory_info().rss / 1e6,
-                })
-                time.sleep(self.interval_s)
-
-        if psutil is not None:
-            self._thread = threading.Thread(target=loop, daemon=True)
-            self._thread.start()
-        return self
-
-    def __exit__(self, *exc):
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=1.0)
-        return False
-
-    def peak(self) -> dict:
-        if not self.samples:
-            return {"cpu_pct": 0.0, "rss_mb": 0.0}
-        return {
-            "cpu_pct": max(s["cpu_pct"] for s in self.samples),
-            "rss_mb": max(s["rss_mb"] for s in self.samples),
-        }
+__all__ = ["HostMonitor", "UtilizationTimeline"]

@@ -75,6 +75,7 @@ from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.models.factory import ModelBundle
 from repro.serving.block_allocator import BlockAllocator, PoolExhausted
 from repro.serving.request import Request
+from repro.telemetry.recorder import TraceRecorder
 
 
 @dataclass
@@ -102,7 +103,25 @@ class InferenceEngine:
                  kv_pages: Optional[int] = None,
                  page_size: Optional[int] = None,
                  evict_high_watermark: float = 1.0,
-                 evict_low_watermark: Optional[float] = None):
+                 evict_low_watermark: Optional[float] = None,
+                 recorder: Optional[TraceRecorder] = None,
+                 recorder_chips: int = 1,
+                 recorder_label: str = "",
+                 request_work: Optional[
+                     Callable[[Request, str, int],
+                              "tuple[float, float]"]] = None):
+        #: telemetry (repro.telemetry): when a recorder is attached the
+        #: engine emits admit/evict instants, one span per prefill-chunk
+        #: dispatch and per decoded row, and a per-pool KV-occupancy
+        #: counter (``kv_pages@<label>``). ``request_work(req, kind,
+        #: tokens) -> (flops, hbm_bytes)`` resolves the actual work each
+        #: span moved (the SMOCC/bandwidth numerators) — the telemetry
+        #: mirror of ``request_cost_s``. recorder=None (default) keeps
+        #: every emit site a single None check: no hot-path cost.
+        self._recorder = recorder
+        self._recorder_chips = recorder_chips
+        self._recorder_label = recorder_label
+        self._req_work = request_work
         self.model = model
         self.cfg = model.cfg
         self.max_slots = max_slots
@@ -252,6 +271,24 @@ class InferenceEngine:
         ready = [r for r in self.waiting if r.arrival_s <= now]
         return self.policy.admit_order(ready, now)
 
+    # --------------------------------------------------------- telemetry
+    def _emit_span(self, kind: str, req: Request, tokens: int,
+                   t0: float, t1: float) -> None:
+        r = self._recorder
+        if r is None:
+            return
+        fl = by = 0.0
+        if self._req_work is not None:
+            fl, by = self._req_work(req, kind, tokens)
+        r.span(kind, req.app, req.request_id, t0, t1,
+               chips=self._recorder_chips, flops=fl, hbm_bytes=by,
+               tokens=tokens)
+
+    def _emit_kv(self) -> None:
+        if self._recorder is not None and self.allocator is not None:
+            self._recorder.counter(f"kv_pages@{self._recorder_label}",
+                                   self.now(), self.allocator.pages_in_use)
+
     # ------------------------------------------------------------- paged
     def _effective_prompt(self, req: Request) -> np.ndarray:
         """The token sequence a (re-)admitted request must prefill.
@@ -279,6 +316,10 @@ class InferenceEngine:
         req = self.active[victim]
         self.stats.evictions += 1
         self.stats.recompute_tokens += int(self.lengths[victim])
+        if self._recorder is not None:
+            self._recorder.instant("evict", req.app, req.request_id,
+                                   self.now(),
+                                   tokens=int(self.lengths[victim]))
         self.allocator.free_slot(victim)
         self.active[victim] = None
         self._partial.pop(victim, None)
@@ -287,6 +328,7 @@ class InferenceEngine:
         new_lengths[victim] = 0
         self.lengths = new_lengths
         self.waiting.insert(0, req)
+        self._emit_kv()
 
     def _rebalance(self, protect: set[int]) -> None:
         """Watermark policy: once the pool hits the high watermark, evict
@@ -312,6 +354,7 @@ class InferenceEngine:
             try:
                 alloc.grow_to(slot, tokens)
                 self._note_pages()
+                self._emit_kv()
                 self._rebalance(protect={slot})
                 return True
             except PoolExhausted:
@@ -365,8 +408,10 @@ class InferenceEngine:
             # totals for token-linear cost functions), so whole-prompt
             # policies still expose intra-prompt boundaries to step-SLO
             # accounting (Request.t_prefill)
+            t0 = self.now()
             self._advance("prefill", c, req)
             req.t_prefill.append(self.now())
+            self._emit_span("prefill", req, c, t0, self.now())
         self._partial[slot] = upto
         return upto >= len(prompt)
 
@@ -400,11 +445,15 @@ class InferenceEngine:
             self.active[slot] = req
             self.waiting.remove(req)
             self.policy.on_admit(req)
+            if self._recorder is not None:
+                self._recorder.instant("admit", req.app, req.request_id,
+                                       self.now())
             self._partial[slot] = 0
             self._eff[slot] = self._effective_prompt(req)
             if self.paged:
                 self.allocator.alloc_slot(slot, need_tok)
                 self._note_pages()
+                self._emit_kv()
             self.cache = self._jit_set_slice(self.cache, slot,
                                              self._fresh_slot)
             new_lengths = self.lengths.copy()
@@ -418,7 +467,13 @@ class InferenceEngine:
         if prefilling:
             slot = prefilling[0]
             chunk = self.policy.prefill_chunk_tokens(self.prefill_chunk)
-            self._prefill_slot(slot, self.active[slot], chunk)
+            done = self._prefill_slot(slot, self.active[slot], chunk)
+            if not done and chunk is not None and self._recorder is not None:
+                # chunk-boundary preemption: the prompt yields the engine
+                # mid-prefill (the simulator's chunk-remainder requeue)
+                req = self.active[slot]
+                self._recorder.instant("preempt", req.app, req.request_id,
+                                       self.now())
             if self.policy.exclusive_prefill:
                 return emitted  # greedy: prefill consumed the whole step
 
@@ -440,6 +495,7 @@ class InferenceEngine:
                     req.t_done = self.now()
                     self.done.append(req)
                     self.allocator.free_slot(i)
+                    self._emit_kv()
                     self.active[i] = None
                     self._partial.pop(i, None)
                     self._eff.pop(i, None)
@@ -463,13 +519,27 @@ class InferenceEngine:
                 logits, self.cache = self._jit_decode(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(self.lengths), jnp.asarray(mask))
+            t_step0 = self.now()
             if self._req_cost is not None:
                 # shared hardware serializes service demand: the step costs
-                # the sum of every active row's per-token decode cost
+                # the sum of every active row's per-token decode cost; each
+                # row's telemetry span covers its own serialized slice
                 for i in decoding:
+                    s0 = self.now()
                     self._advance("decode", 1, self.active[i])
+                    self._emit_span("decode", self.active[i], 1, s0,
+                                    self.now())
             else:
                 self._advance("decode", len(decoding))
+                if self._recorder is not None:
+                    # one batched dispatch: split the step interval across
+                    # rows so busy time is conserved (N overlapping spans
+                    # each claiming the full engine would overstate SMACT)
+                    dt = (self.now() - t_step0) / len(decoding)
+                    for j, i in enumerate(decoding):
+                        self._emit_span("decode", self.active[i], 1,
+                                        t_step0 + j * dt,
+                                        t_step0 + (j + 1) * dt)
             t = self.now()
             if self._last_decode_t is not None:
                 self.stats.max_decode_gap_s = max(
@@ -493,6 +563,7 @@ class InferenceEngine:
                     self.done.append(req)
                     if self.paged:
                         self.allocator.free_slot(i)
+                        self._emit_kv()
                     self.active[i] = None
                     self._partial.pop(i, None)
                     self._eff.pop(i, None)

@@ -1,0 +1,38 @@
+"""repro.telemetry — system-level observability shared by both substrates.
+
+The paper's differentiator (§3.2) is capturing SYSTEM metrics — GPU
+utilization (SMACT/SMOCC), memory bandwidth, memory occupancy — alongside
+app-level SLOs. This package is that capability for the repro:
+
+* :mod:`repro.telemetry.recorder` — :class:`TraceRecorder`, the
+  low-overhead event bus both the :class:`PodSimulator` (always) and the
+  :class:`InferenceEngine` (opt-in, wired by ``bench.engine_runner``)
+  emit dispatch/admission/eviction/release events into.
+* :mod:`repro.telemetry.timeline` — derived views:
+  :class:`UtilizationTimeline` (SMACT, roofline-achieved SMOCC, power,
+  memory bandwidth), :func:`counter_timeline` (KV-pool occupancy), and
+  :func:`gantt_spans` (per-app Gantt).
+* :mod:`repro.telemetry.export` — :func:`telemetry_block` (the versioned
+  ``telemetry`` block in result schema 1.3) and :func:`chrome_trace` /
+  :func:`write_chrome_trace` (Chrome ``trace_event`` JSON).
+* :mod:`repro.telemetry.host` — :class:`HostMonitor`, psutil sampling for
+  wall-clock runs.
+
+``repro.monitor.metrics`` remains as a deprecated shim over this package.
+See docs/telemetry.md for the event model and timeline math.
+"""
+from repro.telemetry.export import (TELEMETRY_BINS, TELEMETRY_VERSION,
+                                    chrome_trace, telemetry_block,
+                                    write_chrome_trace)
+from repro.telemetry.host import HostMonitor
+from repro.telemetry.recorder import (EVENT_KINDS, WORK_KINDS, TraceEvent,
+                                      TraceRecorder)
+from repro.telemetry.timeline import (UtilizationTimeline, counter_timeline,
+                                      gantt_spans)
+
+__all__ = [
+    "EVENT_KINDS", "WORK_KINDS", "TELEMETRY_BINS", "TELEMETRY_VERSION",
+    "HostMonitor", "TraceEvent", "TraceRecorder", "UtilizationTimeline",
+    "chrome_trace", "counter_timeline", "gantt_spans", "telemetry_block",
+    "write_chrome_trace",
+]

@@ -1,0 +1,57 @@
+"""Host-side sampling for real (wall-clock) runs — the container analogue
+of the paper's ``stat``/``pcm-memory`` sampling (§3.2). Virtual-clock runs
+use the :class:`~repro.telemetry.recorder.TraceRecorder` event bus
+instead; this sampler covers real CPU executions where wall time is the
+clock."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+
+class HostMonitor:
+    """Background sampler of host CPU/memory for real-mode runs."""
+
+    def __init__(self, interval_s: float = 0.2):
+        self.interval_s = interval_s
+        self.samples: list[dict] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def __enter__(self):
+        try:
+            import psutil
+        except ImportError:  # pragma: no cover
+            psutil = None
+        self._t0 = time.monotonic()
+
+        def loop():
+            import psutil
+            proc = psutil.Process()
+            while not self._stop.is_set():
+                self.samples.append({
+                    "t": time.monotonic() - self._t0,
+                    "cpu_pct": psutil.cpu_percent(interval=None),
+                    "rss_mb": proc.memory_info().rss / 1e6,
+                })
+                time.sleep(self.interval_s)
+
+        if psutil is not None:
+            self._thread = threading.Thread(target=loop, daemon=True)
+            self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)
+        return False
+
+    def peak(self) -> dict:
+        if not self.samples:
+            return {"cpu_pct": 0.0, "rss_mb": 0.0}
+        return {
+            "cpu_pct": max(s["cpu_pct"] for s in self.samples),
+            "rss_mb": max(s["rss_mb"] for s in self.samples),
+        }

@@ -1,0 +1,107 @@
+"""Low-overhead trace-event bus shared by both execution substrates.
+
+The paper's system-level observability (§3.2: SMACT/SMOCC, memory
+bandwidth, memory occupancy sampled alongside app-level SLOs) needs one
+primitive: a timestamped event stream from the execution engine. Both
+substrates emit into a :class:`TraceRecorder` —
+
+* the :class:`~repro.core.simulator.PodSimulator` from its discrete-event
+  schedule (one span per dispatched work item, at the item's analytic
+  FLOPs/bytes), and
+* the real :class:`~repro.serving.engine.InferenceEngine` /
+  ``bench.engine_runner`` from the virtual cost clock (one span per
+  prefill-chunk dispatch and per decoded row, with per-token FLOPs/bytes
+  resolved through the engine's ``request_work`` hook).
+
+Derived views (:mod:`repro.telemetry.timeline`) and exporters
+(:mod:`repro.telemetry.export`) consume the recorder; the recorder itself
+is deliberately dumb — list appends only, no locking (both substrates are
+single-threaded event loops), no derived state. When no recorder is
+attached the emit sites are a single ``is None`` check, so the serving hot
+path pays nothing by default.
+
+Event vocabulary
+----------------
+Span events (``phase == "X"``, ``t1 >= t0``) are work dispatches named by
+work-item kind: ``prefill``, ``decode``, ``encode``, ``denoise``,
+``train``. Instant events (``phase == "i"``) mark scheduler decisions:
+``admit`` (request became memory-resident / claimed a slot), ``evict``
+(preempt-to-evict; ``tokens`` carries the cached tokens lost, i.e. the
+recompute bill), ``preempt`` (chunk-boundary preemption), ``release``
+(workflow dependency release). Counters are named step series — both
+substrates emit ``kv_pages`` (suffix ``@<partition>`` on the engine) for
+the KV-pool occupancy timeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+#: canonical event kinds — always present (zero-filled) in count maps so
+#: the two substrates emit schema-identical telemetry blocks even when one
+#: never produces a given kind
+EVENT_KINDS = ("prefill", "decode", "encode", "denoise", "train",
+               "admit", "evict", "preempt", "release")
+#: span-event kinds that represent chip-occupying work
+WORK_KINDS = ("prefill", "decode", "encode", "denoise", "train")
+
+
+@dataclass
+class TraceEvent:
+    kind: str
+    app: str
+    request_id: int
+    t0: float
+    t1: float                    # == t0 for instant events
+    phase: str = "X"             # "X" complete span | "i" instant
+    chips: int = 0               # chips the span occupied (SMACT numerator)
+    flops: float = 0.0           # actual work moved in [t0, t1] (SMOCC /
+    hbm_bytes: float = 0.0       # bandwidth-timeline numerators)
+    tokens: float = 0.0
+    meta: Optional[dict] = None
+
+
+@dataclass
+class TraceRecorder:
+    """Append-only event/counter store; one per run."""
+    events: list = field(default_factory=list)
+    #: counter name -> [(t, value)] step series (value holds until next)
+    counters: dict = field(default_factory=dict)
+
+    # ------------------------------------------------------------- emit
+    def span(self, kind: str, app: str, request_id: int,
+             t0: float, t1: float, *, chips: int = 0, flops: float = 0.0,
+             hbm_bytes: float = 0.0, tokens: float = 0.0,
+             meta: Optional[dict] = None) -> None:
+        self.events.append(TraceEvent(kind, app, request_id, t0, t1, "X",
+                                      chips, flops, hbm_bytes, tokens, meta))
+
+    def instant(self, kind: str, app: str, request_id: int, t: float, *,
+                tokens: float = 0.0, meta: Optional[dict] = None) -> None:
+        self.events.append(TraceEvent(kind, app, request_id, t, t, "i",
+                                      0, 0.0, 0.0, tokens, meta))
+
+    def counter(self, name: str, t: float, value: float) -> None:
+        self.counters.setdefault(name, []).append((t, float(value)))
+
+    # ---------------------------------------------------------- derived
+    @property
+    def makespan_s(self) -> float:
+        span = max((e.t1 for e in self.events), default=0.0)
+        for pts in self.counters.values():
+            if pts:
+                span = max(span, pts[-1][0])
+        return span
+
+    def counts(self) -> dict:
+        """Events per kind — every canonical kind present (0 default), so
+        count maps are schema-identical across substrates."""
+        out = {k: 0 for k in EVENT_KINDS}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def token_total(self, kind: str) -> float:
+        """Sum of ``tokens`` over events of ``kind`` (e.g. the recompute
+        bill = ``token_total("evict")``)."""
+        return sum(e.tokens for e in self.events if e.kind == kind)

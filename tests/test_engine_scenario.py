@@ -238,5 +238,6 @@ def test_engine_workflow_node_release_matches_simulator_e2e():
                    total_chips=256, substrate="engine",
                    workflow_release="node", workflow=_wf_spec()).run()
     sim = Scenario(name="wf", mode="workflow", policy="slo_aware",
-                   total_chips=256, workflow=_wf_spec()).run()
+                   total_chips=256, workflow_release="node",
+                   workflow=_wf_spec()).run()
     assert eng.e2e_s == pytest.approx(sim.e2e_s, rel=0.01)

@@ -18,8 +18,8 @@ def _mem_scenario(budget, *, policy="slo_aware", substrate="simulator"):
               ScenarioApp("deep_research", num_requests=1)])
 
 
-def test_schema_version_is_1_2():
-    assert SCHEMA_VERSION == "1.2"
+def test_schema_version_is_1_3():
+    assert SCHEMA_VERSION == "1.3"
 
 
 def test_memory_block_only_with_budget():
@@ -27,7 +27,7 @@ def test_memory_block_only_with_budget():
                     total_chips=64,
                     apps=[ScenarioApp("chatbot", num_requests=2)])
     doc = free.run().to_json()
-    assert doc["schema_version"] == "1.2"
+    assert doc["schema_version"] == SCHEMA_VERSION
     assert "memory" not in doc["results"]["concurrent"]
     assert "kv_page_budget" not in doc["scenario"]
 

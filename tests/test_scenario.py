@@ -82,9 +82,10 @@ def test_concurrent_mode_matches_orchestrator_shim():
 
 
 def test_workflow_mode_matches_orchestrator_shim():
+    # the Orchestrator predates per-request release: node granularity
     wf = parse_workflow(CONTENT_CREATION_YAML)
     res = Scenario(mode="workflow", policy="static", workflow=wf,
-                   total_chips=256).run()
+                   workflow_release="node", total_chips=256).run()
     legacy = Orchestrator(total_chips=256, strategy="static").run_workflow(wf)
     assert res.e2e_s == pytest.approx(legacy.e2e_s, rel=1e-9)
     assert res.node_finish_s == legacy.node_finish_s

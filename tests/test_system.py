@@ -53,7 +53,7 @@ def test_report_renders(wf):
 
 def test_utilization_timeline():
     from repro.core.apps import make_app
-    from repro.monitor.metrics import UtilizationTimeline
+    from repro.telemetry import UtilizationTimeline
     apps = [make_app("imagegen")]
     res = Orchestrator(total_chips=256, strategy="greedy").run_concurrent(
         apps, {"imagegen": 3})

@@ -1,0 +1,323 @@
+"""repro.telemetry: trace recording on both substrates, timeline binning
+edge cases, KV-occupancy/eviction accounting against EngineStats, Chrome
+trace export, the schema-1.3 telemetry block, per-request workflow release
+on the simulator, and the repro.monitor.metrics deprecation shim."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.bench import SCHEMA_VERSION, Scenario, ScenarioApp
+from repro.core.workflow import CONTENT_CREATION_YAML, parse_workflow
+from repro.roofline.analysis import achieved_fraction
+from repro.roofline.hw import TPU_V5E
+from repro.telemetry import (TraceRecorder, UtilizationTimeline,
+                             chrome_trace, counter_timeline, gantt_spans)
+
+
+def _concurrent(substrate, *, telemetry=True, budget=None, **kw):
+    return Scenario(
+        name="tel", mode="concurrent", policy="slo_aware", total_chips=64,
+        substrate=substrate, telemetry=telemetry, seed=1,
+        kv_page_budget=budget, **kw,
+        apps=[ScenarioApp("chatbot", num_requests=2),
+              ScenarioApp("live_captions", num_requests=4)])
+
+
+# --------------------------------------------------------------- recorder
+def test_simulator_always_records_a_trace():
+    res = _concurrent("simulator", telemetry=False).run()
+    tr = res.sim.trace
+    assert tr is not None and tr.events
+    counts = tr.counts()
+    assert counts["decode"] > 0 and counts["prefill"] > 0
+    # every request admits exactly once, budget or not (engine parity)
+    assert counts["admit"] == 2 + 4
+    # canonical kinds always present (schema identity across substrates)
+    assert set(counts) >= {"prefill", "decode", "encode", "denoise",
+                           "train", "admit", "evict", "preempt", "release"}
+    # spans carry the dispatch's actual work
+    e = next(e for e in tr.events if e.kind == "prefill")
+    assert e.flops > 0 and e.hbm_bytes > 0 and e.chips > 0
+    assert e.t1 > e.t0
+
+
+def test_engine_records_only_when_telemetry_enabled():
+    assert _concurrent("engine", telemetry=False).run().sim.trace is None
+    tr = _concurrent("engine", telemetry=True).run().sim.trace
+    assert tr is not None
+    c = tr.counts()
+    assert c["decode"] > 0 and c["prefill"] > 0 and c["admit"] > 0
+
+
+def test_engine_chunked_prefill_traces_preemptions():
+    """Chunk-boundary preemption is a canonical kind on the engine too: a
+    multi-chunk prompt yielding the engine mid-prefill emits 'preempt'
+    (the simulator's chunk-remainder requeue)."""
+    sc = Scenario(name="pre", mode="engine", policy="chunked",
+                  total_chips=64, telemetry=True, seed=1,
+                  apps=[ScenarioApp("imagegen", num_requests=2),
+                        ScenarioApp("live_captions", num_requests=3)])
+    c = sc.run().sim.trace.counts()
+    assert c["preempt"] > 0
+    assert c["prefill"] > c["preempt"]   # final chunk of a prompt ends it
+
+
+def test_engine_batched_decode_spans_conserve_busy_time():
+    """A step-cost (non-per-request) engine emits one batched decode
+    dispatch per step; its per-row spans must PARTITION the step interval,
+    not each claim all of it — N overlapping full-width spans would
+    overstate SMACT by Nx."""
+    import numpy as np
+    from repro.bench.engine_runner import engine_model
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.request import Request
+
+    model, params, cfg = engine_model()
+    rec = TraceRecorder()
+    eng = InferenceEngine(model, max_slots=4, max_seq=64, policy="chunked",
+                          step_cost_s=lambda kind, tokens: 0.01 * tokens,
+                          recorder=rec, recorder_chips=4)
+    eng.load_params(params)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 4)
+                           .astype(np.int32), 4, app="a"))
+    eng.run()
+    spans = sorted((e.t0, e.t1) for e in rec.events if e.kind == "decode")
+    busy = sum(t1 - t0 for t0, t1 in spans)
+    assert busy == pytest.approx(0.01 * eng.stats.decode_tokens)
+    for (_, a1), (b0, _) in zip(spans, spans[1:]):
+        assert b0 >= a1 - 1e-12       # no overlap
+
+
+# -------------------------------------------------------- timeline binning
+def _rec(spans, chips=32, total=64):
+    tr = TraceRecorder()
+    for t0, t1 in spans:
+        tr.span("decode", "a", 0, t0, t1, chips=chips, flops=1e12,
+                hbm_bytes=1e10, tokens=1)
+    return tr
+
+
+def test_timeline_interval_spanning_bin_boundaries():
+    # one span covering [0.25, 0.75] of a 1 s / 2-bin window: half of the
+    # span falls in each bin -> each bin is 25% busy at 32/64 chips = 0.25
+    tr = _rec([(0.25, 0.75)])
+    tl = UtilizationTimeline.from_trace(tr, chip=TPU_V5E, total_chips=64,
+                                        bins=2, span_s=1.0)
+    assert tl.smact == pytest.approx([0.25, 0.25])
+    # bytes split evenly across the two bins
+    assert tl.bandwidth_gbs[0] == pytest.approx(tl.bandwidth_gbs[1])
+
+
+def test_timeline_zero_length_interval():
+    tr = _rec([(0.5, 0.5)])
+    tl = UtilizationTimeline.from_trace(tr, chip=TPU_V5E, total_chips=64,
+                                        bins=4, span_s=1.0)
+    assert all(v == 0.0 for v in tl.smact)       # no busy time
+    assert all(v == 0.0 for v in tl.smocc)
+    assert tl.bandwidth_gbs[2] > 0               # but the bytes still moved
+    assert sum(1 for v in tl.bandwidth_gbs if v > 0) == 1
+
+
+def test_timeline_zero_makespan():
+    tl = UtilizationTimeline.from_trace(TraceRecorder(), chip=TPU_V5E,
+                                        total_chips=64, bins=3)
+    assert tl.dt_s == 0.0
+    assert tl.smact == [0.0] * 3 and tl.smocc == [0.0] * 3
+    assert tl.power_w == [TPU_V5E.idle_power_w] * 3
+    # events at t=0 with zero span must not divide by zero either
+    tl = UtilizationTimeline.from_trace(_rec([(0.0, 0.0)]), chip=TPU_V5E,
+                                        total_chips=64, bins=3, span_s=0.0)
+    assert tl.smact == [0.0] * 3
+
+
+def test_timeline_single_bin():
+    tr = _rec([(0.0, 0.5), (0.5, 1.0)], chips=64)
+    tl = UtilizationTimeline.from_trace(tr, chip=TPU_V5E, total_chips=64,
+                                        bins=1, span_s=1.0)
+    assert tl.smact == pytest.approx([1.0])
+    assert tl.power_w[0] == pytest.approx(TPU_V5E.peak_power_w)
+    with pytest.raises(ValueError, match="bins"):
+        UtilizationTimeline.from_trace(tr, chip=TPU_V5E, total_chips=64,
+                                       bins=0)
+
+
+def test_timeline_event_ending_at_makespan_is_counted():
+    tr = _rec([(0.75, 1.0)])
+    tl = UtilizationTimeline.from_trace(tr, chip=TPU_V5E, total_chips=64,
+                                        bins=4, span_s=1.0)
+    assert tl.smact[3] == pytest.approx(0.5)
+
+
+def test_achieved_fraction_roofline_terms():
+    chip = TPU_V5E
+    # compute-bound: exactly the peak for one second on one chip
+    assert achieved_fraction(chip.peak_flops_bf16, 0.0, 1.0, 1, chip) \
+        == pytest.approx(1.0)
+    # memory-bound: half the bandwidth
+    assert achieved_fraction(0.0, chip.hbm_bandwidth / 2, 1.0, 1, chip) \
+        == pytest.approx(0.5)
+    assert achieved_fraction(1e30, 1e30, 1.0, 1, chip) == 1.0  # clamped
+    assert achieved_fraction(1e12, 1e12, 0.0, 1, chip) == 0.0  # degenerate
+
+
+def test_counter_timeline_per_bin_max_and_multiseries():
+    tr = TraceRecorder()
+    tr.counter("kv_pages@a", 0.0, 2)
+    tr.counter("kv_pages@a", 0.45, 10)     # short-lived peak inside bin 0
+    tr.counter("kv_pages@a", 0.48, 3)
+    tr.counter("kv_pages@b", 0.6, 4)       # second pool adds
+    kv = counter_timeline(tr, "kv_pages", bins=2, span_s=1.0)
+    assert kv[0] == 10                     # per-bin MAX keeps the watermark
+    assert kv[1] == 7                      # 3 + 4 across pools
+    assert max(kv) == 10
+
+
+def test_gantt_spans_merge_and_order():
+    tr = TraceRecorder()
+    tr.span("decode", "a", 0, 0.0, 0.1)
+    tr.span("decode", "a", 0, 0.1, 0.2)    # contiguous: merges
+    tr.span("prefill", "a", 1, 0.3, 0.4)   # kind change: new span
+    tr.span("decode", "b", 0, 0.0, 0.2)
+    spans = gantt_spans(tr, merge_gap_s=0.01)
+    assert spans["a"] == [(0.0, 0.2, "decode"), (0.3, 0.4, "prefill")]
+    assert spans["b"] == [(0.0, 0.2, "decode")]
+
+
+# ------------------------------------------------------ schema 1.3 block
+def test_telemetry_block_schema_identical_across_substrates():
+    """Acceptance: same YAML, telemetry: true, both substrates ->
+    schema-identical telemetry blocks; mean SMACT within 10%."""
+    eng = _concurrent("engine").run().to_json()
+    sim = _concurrent("simulator").run().to_json()
+    assert eng["schema_version"] == SCHEMA_VERSION
+
+    def key_tree(doc):
+        if isinstance(doc, dict):
+            return {k: key_tree(v) for k, v in doc.items()}
+        return None
+
+    assert key_tree(eng["results"]) == key_tree(sim["results"])
+    be = eng["results"]["concurrent"]["telemetry"]
+    bs = sim["results"]["concurrent"]["telemetry"]
+    assert be["smact_mean"] == pytest.approx(bs["smact_mean"], rel=0.10)
+    assert be["smocc_mean"] == pytest.approx(bs["smocc_mean"], rel=0.10)
+    assert len(be["smact"]) == be["bins"] == len(bs["smact"])
+    # no telemetry flag -> no block, and the spec round-trips it
+    plain = _concurrent("simulator", telemetry=False).run().to_json()
+    assert "telemetry" not in plain["results"]["concurrent"]
+    assert "telemetry" not in plain["scenario"]
+    assert eng["scenario"]["telemetry"] is True
+
+
+def test_telemetry_document_reruns_identically():
+    doc = _concurrent("simulator").run().to_json()
+    assert Scenario.from_dict(doc["scenario"]).run().to_json() == doc
+
+
+def test_engine_eviction_trace_matches_stats_and_watermark():
+    """Acceptance: under a constrained kv_page_budget the engine trace's
+    evict events equal EngineStats.evictions/recompute_tokens and the
+    KV-occupancy timeline peaks at the page-pool watermark."""
+    sc = Scenario(name="mem", mode="engine", policy="chunked", total_chips=1,
+                  kv_page_budget=10, page_size=8, telemetry=True,
+                  apps=[ScenarioApp("live_captions", num_requests=4),
+                        ScenarioApp("chatbot", num_requests=2)])
+    res = sc.run()
+    st = next(iter(res.engine_stats.values()))
+    tr = res.sim.trace
+    evicts = [e for e in tr.events if e.kind == "evict"]
+    assert st.evictions > 0
+    assert len(evicts) == st.evictions
+    assert sum(e.tokens for e in evicts) == st.recompute_tokens
+    blk = res.to_json()["results"]["concurrent"]["telemetry"]
+    assert blk["kv_pages_peak"] == st.pages_in_use
+    assert max(blk["kv_pages"]) == st.pages_in_use
+    assert blk["events"]["evict"] == st.evictions
+    assert blk["recompute_tokens"] == st.recompute_tokens
+
+
+def test_simulator_memory_run_has_kv_timeline():
+    res = _concurrent("simulator", budget=140_000).run()
+    blk = res.to_json()["results"]["concurrent"]["telemetry"]
+    mem = res.to_json()["results"]["concurrent"]["memory"]
+    assert max(blk["kv_pages"]) == blk["kv_pages_peak"] > 0
+    assert blk["kv_pages_peak"] == mem["pages_in_use"]
+
+
+# ----------------------------------------------------------- chrome trace
+def test_chrome_trace_valid_json_with_spans_per_app():
+    """Acceptance: the export of a concurrent scenario is valid JSON with
+    at least one complete-event ("X") span per app."""
+    res = _concurrent("simulator").run()
+    doc = json.loads(json.dumps(chrome_trace(res.sim.trace)))
+    events = doc["traceEvents"]
+    names = {e["args"]["name"]: e["pid"] for e in events
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"chatbot", "live_captions"} <= set(names)
+    for app in ("chatbot", "live_captions"):
+        spans = [e for e in events
+                 if e.get("ph") == "X" and e["pid"] == names[app]]
+        assert spans, f"no complete-event span for {app}"
+        assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in spans)
+
+
+# ------------------------------------- simulator per-request release
+def _wf(n=3):
+    wf = parse_workflow(CONTENT_CREATION_YAML)
+    wf.tasks = {name: dataclasses.replace(t,
+                                          num_requests=min(t.num_requests, n))
+                for name, t in wf.tasks.items()}
+    return wf
+
+
+def _wf_run(substrate, release):
+    return Scenario(name="wf", mode="workflow", policy="slo_aware",
+                    total_chips=256, substrate=substrate,
+                    workflow_release=release, workflow=_wf(),
+                    telemetry=True).run()
+
+
+def test_simulator_request_release_beats_node_release():
+    """ROADMAP item: per-request workflow release on the SIMULATOR
+    substrate — pipelining must strictly shorten the workflow."""
+    req = _wf_run("simulator", "request")
+    node = _wf_run("simulator", "node")
+    assert req.e2e_s < node.e2e_s
+    assert set(req.node_finish_s) == set(node.node_finish_s)
+    # dependency releases are traced on the final fixed-point round
+    assert any(e.kind == "release" for e in req.sim.trace.events)
+
+
+def test_simulator_request_release_parity_with_engine():
+    """The engine substrate pioneered per-request release; the simulator's
+    fixed point must reproduce its end-to-end time."""
+    sim = _wf_run("simulator", "request")
+    eng = _wf_run("engine", "request")
+    assert sim.e2e_s == pytest.approx(eng.e2e_s, rel=0.01)
+
+
+# ------------------------------------------------------ deprecation shim
+def test_monitor_metrics_shim_warns_and_reexports(recwarn):
+    import importlib
+    import sys
+    sys.modules.pop("repro.monitor.metrics", None)
+    with pytest.warns(DeprecationWarning, match="repro.telemetry"):
+        mod = importlib.import_module("repro.monitor.metrics")
+    import repro.telemetry as tel
+    assert mod.UtilizationTimeline is tel.UtilizationTimeline
+    assert mod.HostMonitor is tel.HostMonitor
+
+
+def test_from_sim_legacy_path_without_trace():
+    """Hand-built SimResults (no trace) keep working: constant-occupancy
+    fallback now defaults to the roofline MXU efficiency."""
+    from repro.core.costs import MXU_EFF
+    from repro.core.simulator import SimResult, UtilSample
+    res = SimResult(reports={}, util=[UtilSample(0.0, 1.0, 64, 64)],
+                    total_chips=64, chip=TPU_V5E, strategy="greedy")
+    tl = UtilizationTimeline.from_sim(res, bins=4)
+    assert tl.smact == pytest.approx([1.0] * 4)
+    assert tl.smocc == pytest.approx([MXU_EFF] * 4)
