@@ -1,0 +1,135 @@
+"""Prefix-sharing scenario family: users-per-pool and prefill work vs.
+shared-prefix fraction, on BOTH substrates.
+
+Four concurrent chat sessions share a system prompt and re-send their full
+history every turn (the ``conversation`` workload). Sweeping the system
+block's size sweeps the SHARED FRACTION of each prompt; with the radix
+prefix cache on (``prefix_cache: true``), both substrates should show, as
+the shared fraction rises:
+
+* **prefill_frac** (= 1 − hit_rate: the fraction of prompt tokens that
+  still pay prefill FLOPs) strictly decreasing, and
+* **pages_per_user** (peak KV footprint normalized by users × the
+  per-user context a private cache would hold) strictly decreasing —
+  equivalently ``users_per_pool`` pulling further ahead of
+  ``users_per_pool_private`` (the no-sharing bound ``budget // context``
+  at the same geometry): more concurrent users fit one page pool when
+  their common prefix is stored once.
+
+The engine rows come from the REAL trie + copy-on-write pages; the
+simulator rows from the analytic mirror. Every block size is a multiple
+of lcm(page_size=16, prefill_chunk=8), so the two substrates floor hits
+onto the same grid — the ``sim_hit_rate`` field in each engine row's
+derived column is the parity check (must agree within 5%; see
+tests/test_conversation.py for the enforced version). All rows are
+virtual-clock deterministic and diff in CI (``BENCH_prefix.json``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_enabled
+from repro.bench import Scenario, ScenarioApp
+from repro.bench.conversation import ConversationSpec
+
+#: system-prompt sizes (tokens, multiples of 16): the shared-fraction axis
+SYS_SWEEP = (64, 128, 256)
+SYS_SWEEP_SMOKE = (64, 256)
+USERS = 4
+TURNS = 3
+USER_TOKENS = 64
+ASSISTANT_TOKENS = 64
+#: simulator budget: full-scale tokens (pages of 16) — ample, no eviction
+SIM_BUDGET_PAGES = 8192
+#: engine budget: execution-vehicle pages — ample, no eviction
+ENGINE_BUDGET_PAGES = 1024
+
+
+def spec(sys_tokens: int) -> ConversationSpec:
+    return ConversationSpec(turns=TURNS, system_tokens=sys_tokens,
+                            user_tokens=USER_TOKENS,
+                            assistant_tokens=ASSISTANT_TOKENS,
+                            think_time_s=2.0)
+
+
+def scenario(sys_tokens: int, *, substrate: str = "simulator",
+             prefix_cache: bool = True) -> Scenario:
+    return Scenario(
+        name=f"prefix-sys{sys_tokens}-{'on' if prefix_cache else 'off'}"
+             f"-{substrate}",
+        mode="concurrent", policy="chunked", total_chips=8,
+        substrate=substrate, prefix_cache=prefix_cache,
+        kv_page_budget=(SIM_BUDGET_PAGES if substrate == "simulator"
+                        else ENGINE_BUDGET_PAGES),
+        page_size=16,
+        apps=[ScenarioApp("conversation", name="chat", num_requests=USERS,
+                          conversation=spec(sys_tokens))])
+
+
+def _point_metrics(summary: dict, sys_tokens: int) -> dict:
+    """Derived metrics for one sweep point from the schema-1.4 blocks."""
+    sp = spec(sys_tokens)
+    # per-user context a PRIVATE cache would hold at session end (tokens)
+    foot = sp.max_prompt_tokens() + sp.assistant_tokens
+    pfx = summary.get("prefix") or {}
+    mem = summary.get("memory") or {}
+    hit_rate = pfx.get("hit_rate", 0.0)
+    # 'pages_in_use' in the schema-1.4 memory block is the PEAK page count
+    peak = mem.get("pages_in_use", 0) * mem.get("page_size", 16)
+    budget = mem.get("kv_token_budget", 0)
+    per_user = peak / USERS if peak else float(USERS * foot)
+    return {
+        "shared_frac": sys_tokens / foot,
+        "hit_rate": hit_rate,
+        "prefill_frac": 1.0 - hit_rate,
+        "pages_per_user": per_user / foot,      # normalized KV per user
+        "users_per_pool": int(budget / per_user) if per_user else 0,
+        "users_per_pool_private": int(budget / foot),
+        "shared_pages": pfx.get("shared_pages", 0),
+        "cow_forks": pfx.get("cow_forks", 0),
+    }
+
+
+def _derived(m: dict, extra: str = "") -> str:
+    s = (f"shared_frac={m['shared_frac']:.3f};"
+         f"hit_rate={m['hit_rate']:.3f};"
+         f"prefill_frac={m['prefill_frac']:.3f};"
+         f"pages_per_user={m['pages_per_user']:.3f};"
+         f"users_per_pool={m['users_per_pool']};"
+         f"users_per_pool_private={m['users_per_pool_private']};"
+         f"shared_pages={m['shared_pages']};"
+         f"cow_forks={m['cow_forks']}")
+    return s + (";" + extra if extra else "")
+
+
+def run() -> list[str]:
+    sweep = SYS_SWEEP_SMOKE if smoke_enabled() else SYS_SWEEP
+    rows = []
+    sim_hit = {}
+    for sys_tokens in sweep:
+        s = scenario(sys_tokens).run().sim.summary()
+        m = _point_metrics(s, sys_tokens)
+        sim_hit[sys_tokens] = m["hit_rate"]
+        rows.append(row(f"prefix_sim_sys{sys_tokens}",
+                        s["makespan_s"] * 1e6, _derived(m)))
+    # sharing-off simulator baseline at the largest point: the denominator
+    # story (full prefill, full per-user footprint)
+    s = scenario(sweep[-1], prefix_cache=False).run().sim.summary()
+    m = _point_metrics(s, sweep[-1])
+    rows.append(row(f"prefix_sim_off_sys{sweep[-1]}",
+                    s["makespan_s"] * 1e6, _derived(m)))
+    for sys_tokens in sweep:
+        s = scenario(sys_tokens, substrate="engine").run().sim.summary()
+        m = _point_metrics(s, sys_tokens)
+        parity = (f"sim_hit_rate={sim_hit[sys_tokens]:.3f};"
+                  f"parity_gap={abs(m['hit_rate'] - sim_hit[sys_tokens]):.4f}")
+        rows.append(row(f"prefix_engine_sys{sys_tokens}",
+                        s["makespan_s"] * 1e6, _derived(m, parity)))
+    s = scenario(sweep[-1], substrate="engine",
+                 prefix_cache=False).run().sim.summary()
+    m = _point_metrics(s, sweep[-1])
+    rows.append(row(f"prefix_engine_off_sys{sweep[-1]}",
+                    s["makespan_s"] * 1e6, _derived(m)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

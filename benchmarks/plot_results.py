@@ -4,10 +4,13 @@ dashboard (``diff_results.py`` is the regression-diff half).
 
 Input: any mix of files, each holding one document or a JSON array of
 documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
-1.0–1.3; the 1.2 ``memory`` block (page utilization, evictions, recompute)
-and the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
-spans) are surfaced when present — a telemetry-enabled document renders a
-per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines.
+1.0–1.4; the 1.2 ``memory`` block (page utilization, evictions, recompute),
+the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
+spans) and the 1.4 ``prefix`` block (radix-cache hit rate, shared pages,
+CoW forks) are surfaced when present — a telemetry-enabled document
+renders a per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines,
+and prefix-enabled documents add a hit-rate-vs-shared-fraction curve
+(shared fraction read off each document's conversation spec).
 
     python benchmarks/plot_results.py results/*.json            # markdown
     python benchmarks/plot_results.py sweep.json --png out.png  # + charts
@@ -74,6 +77,7 @@ def flatten(doc: dict) -> list[dict]:
             continue
         mem = summary.get("memory", {})
         tel = summary.get("telemetry", {})
+        pfx = summary.get("prefix", {})
         for app, stats in summary["apps"].items():
             rows.append({
                 "scenario": name, "substrate": substrate, "label": label,
@@ -87,6 +91,9 @@ def flatten(doc: dict) -> list[dict]:
                 "smact_mean": tel.get("smact_mean"),
                 "smocc_mean": tel.get("smocc_mean"),
                 "bandwidth_gbs_mean": tel.get("bandwidth_gbs_mean"),
+                "prefix_hit_rate": pfx.get("hit_rate"),
+                "shared_pages": pfx.get("shared_pages"),
+                "cow_forks": pfx.get("cow_forks"),
             })
     return rows
 
@@ -102,6 +109,37 @@ def telemetry_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
     return out
 
 
+def _shared_frac(doc: dict) -> Optional[float]:
+    """System-prompt share of the final-turn context, read off the
+    scenario's conversation spec (None without a conversation app)."""
+    for app in doc.get("scenario", {}).get("apps", []):
+        conv = app.get("conversation") or {}
+        if conv:
+            sys_t = conv.get("system_tokens", 0)
+            turns = conv.get("turns", 1)
+            foot = sys_t + turns * (conv.get("user_tokens", 0)
+                                    + conv.get("assistant_tokens", 0))
+            return sys_t / foot if foot else None
+    return None
+
+
+def prefix_points(docs: list[dict]) -> list[tuple[float, float, str]]:
+    """(shared fraction, hit rate, scenario name) per prefix-enabled
+    result; documents without a conversation spec use their load order
+    as the x position so the curve still renders."""
+    pts = []
+    for i, doc in enumerate(docs):
+        frac = _shared_frac(doc)
+        name = doc.get("scenario", {}).get("name", "scenario")
+        for _label, summary in doc.get("results", {}).items():
+            pfx = (summary.get("prefix")
+                   if isinstance(summary, dict) else None)
+            if pfx and pfx.get("enabled"):
+                pts.append((float(i) if frac is None else frac,
+                            pfx["hit_rate"], name))
+    return pts
+
+
 # ---------------------------------------------------------------- markdown
 def _fmt(v: Any) -> str:
     if v is None:
@@ -114,7 +152,8 @@ def _fmt(v: Any) -> str:
 def to_markdown(rows: list[dict]) -> str:
     cols = ["scenario", "substrate", "app", "rate_per_s", "attainment",
             "p99_s", "page_utilization", "evictions", "recompute_tokens",
-            "smact_mean", "smocc_mean", "bandwidth_gbs_mean"]
+            "smact_mean", "smocc_mean", "bandwidth_gbs_mean",
+            "prefix_hit_rate", "shared_pages", "cow_forks"]
     # drop all-empty optional columns (memory block absent on <1.2 docs)
     cols = [c for c in cols
             if c in ("scenario", "substrate", "app")
@@ -148,7 +187,9 @@ def render_png(rows: list[dict], path: str,
     if len(tel) > 1:
         print(f"# rendering first of {len(tel)} telemetry blocks "
               f"({tel[0][0]}/{tel[0][1]})", file=sys.stderr)
-    panels = (1 if sweep else 0) + (2 if mem else 0) + (3 if tel else 0)
+    pfx_pts = prefix_points(docs or [])
+    panels = ((1 if sweep else 0) + (2 if mem else 0) + (3 if tel else 0)
+              + (1 if pfx_pts else 0))
     if not panels:
         print("# nothing to plot: no sweep points, memory blocks or "
               "telemetry blocks", file=sys.stderr)
@@ -232,6 +273,25 @@ def render_png(rows: list[dict], path: str,
         ax.invert_yaxis()
         ax.set_xlabel("time (s)", color=TEXT_SECONDARY, fontsize=9)
         ax.set_title("per-app Gantt", color=TEXT_PRIMARY, fontsize=10)
+
+    if pfx_pts:
+        # shared-fraction curve: hit rate rises, residual prefill falls
+        ax = axes.pop(0)
+        pts = sorted(pfx_pts)
+        xs = [p[0] for p in pts]
+        hits = [p[1] for p in pts]
+        ax.plot(xs, hits, color=SERIES[0], linewidth=2, marker="o",
+                markersize=4, label="hit rate")
+        ax.plot(xs, [1.0 - h for h in hits], color=SERIES[1], linewidth=2,
+                marker="o", markersize=4, label="prefill fraction")
+        ax.set_ylim(-0.02, 1.05)
+        ax.set_xlabel("shared prefix fraction", color=TEXT_SECONDARY,
+                      fontsize=9)
+        ax.set_ylabel("fraction of prompt tokens", color=TEXT_SECONDARY,
+                      fontsize=9)
+        ax.legend(fontsize=8, frameon=False, labelcolor=TEXT_PRIMARY)
+        ax.set_title("prefix cache vs shared fraction", color=TEXT_PRIMARY,
+                     fontsize=10)
 
     if mem:
         labels = [f"{s}\n{l}" if l != "concurrent" else s

@@ -63,8 +63,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
-                            fig7_workflow, fig_memory, kernel_bench,
-                            roofline_table, telemetry_bench)
+                            fig7_workflow, fig_memory, fig_prefix,
+                            kernel_bench, roofline_table, telemetry_bench)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
@@ -72,6 +72,7 @@ def main(argv=None) -> None:
         ("fig6_sharing", fig6_sharing.run),
         ("fig7_workflow", fig7_workflow.run),
         ("fig_memory", fig_memory.run),
+        ("fig_prefix", fig_prefix.run),
         ("appendix_platforms", appendix_platforms.run),
         ("engine_bench", engine_bench.run),
         ("telemetry_bench", telemetry_bench.run),

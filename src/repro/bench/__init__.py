@@ -25,6 +25,8 @@ _EXPORTS = {
                "SchedulingPolicy", "SloAwarePolicy", "StaticPartitionPolicy",
                "WeightedFairPolicy", "available_policies", "get_policy",
                "register_policy"],
+    "conversation": ["ConversationSpec", "conversation_prompt",
+                     "conversation_trace"],
     "scenario": ["SCHEMA_VERSION", "SUBSTRATES", "Scenario", "ScenarioApp",
                  "ScenarioResult", "run_workflow_spec"],
     "engine_runner": ["CostedRequest", "engine_model",

@@ -54,6 +54,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.bench.conversation import (ConversationSpec, conversation_prompt,
+                                      session_turn)
 from repro.bench.policy import get_policy
 from repro.bench.scenario import SETUP_S, Scenario, ScenarioResult
 from repro.core.dag import Phase, build_dag
@@ -119,9 +121,16 @@ class CostedRequest(Request):
     prefill_hbm_tok: float = 0.0
     decode_flops_tok: float = 0.0
     decode_hbm_tok: float = 0.0
+    # prefix-cache hits skip prefill COMPUTE but still pay a memory-bound
+    # gather over the shared pages' KV rows: one full-scale KV read per
+    # hit token at the partition's aggregate HBM bandwidth, zero FLOPs
+    gather_tok_s: float = 0.0
+    gather_hbm_tok: float = 0.0
 
 
 def _request_cost(req: CostedRequest, kind: str, tokens: int) -> float:
+    if kind == "prefix_gather":
+        return req.gather_tok_s * tokens
     rate = req.prefill_tok_s if kind == "prefill" else req.decode_tok_s
     return rate * tokens
 
@@ -130,6 +139,8 @@ def _request_work(req: CostedRequest, kind: str,
                   tokens: int) -> tuple[float, float]:
     """(flops, hbm_bytes) a telemetry span of ``tokens`` actually moved —
     the :class:`InferenceEngine` ``request_work`` hook."""
+    if kind == "prefix_gather":
+        return 0.0, req.gather_hbm_tok * tokens
     if kind == "prefill":
         return req.prefill_flops_tok * tokens, req.prefill_hbm_tok * tokens
     return req.decode_flops_tok * tokens, req.decode_hbm_tok * tokens
@@ -232,22 +243,41 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
                    chips: int, chip, vocab: int, seed: int, rid,
                    chunk_target_s: float = 0.05, setup_s: float = 0.0,
                    dep_gates_for: Optional[Callable[[int], list]] = None,
-                   priority: int = 0) -> list[_Pending]:
+                   priority: int = 0,
+                   conv: Optional[ConversationSpec] = None,
+                   kv_tok_bytes: float = 0.0) -> list[_Pending]:
+    if conv is not None and conv.max_prompt_tokens() > PROMPT_MAX_TOKENS:
+        raise ValueError(
+            f"conversation prompts grow to {conv.max_prompt_tokens()} "
+            f"tokens; the engine substrate caps prompts at "
+            f"{PROMPT_MAX_TOKENS} — use smaller blocks or fewer turns")
     rng = np.random.default_rng(seed)
+    gather_tok_s = kv_tok_bytes / (chips * chip.hbm_bandwidth) \
+        if kv_tok_bytes else 0.0
     out = []
     for j, sim_req in enumerate(trace.requests):
         pre = [it for it in sim_req.items if it.kind not in DECODE_KINDS]
         dec = [it for it in sim_req.items if it.kind in DECODE_KINDS]
         prefill_s = sum(it.duration_s(chips, chip) for it in pre)
         decode_s = sum(it.duration_s(chips, chip) for it in dec)
-        n_chunks = math.ceil(prefill_s / max(chunk_target_s, 1e-9))
-        prompt_tokens = min(max(ENGINE_PREFILL_CHUNK * n_chunks,
-                                PROMPT_MIN_TOKENS), PROMPT_MAX_TOKENS)
+        if conv is not None:
+            # LITERAL shared token blocks (system prompt + session
+            # history), not synthetic sizing: the radix trie matches on
+            # content, so the prompt must BE the conversation
+            s, t = session_turn(conv, j)
+            prompt_arr = conversation_prompt(conv, s, t, vocab, seed=seed)
+            prompt_tokens = len(prompt_arr)
+        else:
+            n_chunks = math.ceil(prefill_s / max(chunk_target_s, 1e-9))
+            prompt_tokens = min(max(ENGINE_PREFILL_CHUNK * n_chunks,
+                                    PROMPT_MIN_TOKENS), PROMPT_MAX_TOKENS)
+            prompt_arr = rng.integers(0, vocab,
+                                      size=prompt_tokens).astype(np.int32)
         n_steps = max(len(dec), 1)
         full = sum(it.tokens for it in dec)
         req = CostedRequest(
             request_id=next(rid),
-            prompt=rng.integers(0, vocab, size=prompt_tokens).astype(np.int32),
+            prompt=prompt_arr,
             max_new_tokens=n_steps,
             app=trace.name,
             priority=priority,
@@ -259,7 +289,9 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
             prefill_flops_tok=sum(it.flops for it in pre) / prompt_tokens,
             prefill_hbm_tok=sum(it.hbm_bytes for it in pre) / prompt_tokens,
             decode_flops_tok=sum(it.flops for it in dec) / n_steps,
-            decode_hbm_tok=sum(it.hbm_bytes for it in dec) / n_steps)
+            decode_hbm_tok=sum(it.hbm_bytes for it in dec) / n_steps,
+            gather_tok_s=gather_tok_s,
+            gather_hbm_tok=kv_tok_bytes)
         out.append(_Pending(
             run_idx=run_idx, request=req, offset_s=sim_req.arrival_s,
             setup_s=setup_s, deadline_hint_s=sim_req.deadline_hint_s,
@@ -310,9 +342,14 @@ def _records(runs: list[_EngineRun],
 def _run_traces(sc: Scenario, traces: list[AppTrace],
                 total_chips: int, *, setup_s: float = 0.0,
                 dep_map: Optional[dict[str, list[tuple[str, int]]]] = None,
-                release: str = "request"):
+                release: str = "request",
+                conv_of: Optional[dict[str, ConversationSpec]] = None,
+                kv_tok_of: Optional[dict[str, float]] = None):
     """Run a set of app traces on per-partition engines; returns the merged
-    SimResult, per-partition EngineStats, and the completion-time map."""
+    SimResult, per-partition EngineStats, and the completion-time map.
+    ``conv_of``/``kv_tok_of`` (trace name keyed) carry each app's
+    conversation shape and full-scale per-token KV bytes — the literal
+    prompt builder and the prefix-gather roofline rate."""
     model, params, ecfg = engine_model()
     chip = sc.chip_spec
     policy = get_policy(sc.policy)
@@ -342,7 +379,9 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             trace, run_idx_of[part], chips=chips_of[part],
             chip=chip, vocab=ecfg.vocab_size, seed=sc.seed + t_i, rid=rid,
             chunk_target_s=sc.chunk_target_s, setup_s=setup_s,
-            dep_gates_for=dep_fn, priority=prio)
+            dep_gates_for=dep_fn, priority=prio,
+            conv=(conv_of or {}).get(trace.name),
+            kv_tok_bytes=(kv_tok_of or {}).get(trace.name, 0.0))
 
     # memory knobs -> a page budget for the (reduced) execution vehicle,
     # via the shared pool-sizing helper; partitions own their chips, so
@@ -381,6 +420,7 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                               kv_pages=kv_pages,
                               page_size=(sc.page_size
                                          if pages_total is not None else None),
+                              prefix_cache=sc.prefix_cache,
                               recorder=recorder,
                               recorder_chips=chips_of[part],
                               recorder_label=str(part),
@@ -410,8 +450,27 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             peak_kv_tokens=round(pool_util * budget) * page,
             evictions=sum(e.stats.evictions for e in paged),
             recompute_tokens=sum(e.stats.recompute_tokens for e in paged))
+    pfx = {}
+    if sc.prefix_cache:
+        # schema 1.4 "prefix" block, from the REAL trie's counters. The
+        # denominator mirrors the simulator's "prompt tokens seen": what
+        # was actually prefilled plus what the trie served instead.
+        engines = [r.engine for r in runs]
+        hit = sum(e.stats.prefix_hit_tokens for e in engines)
+        pfx = dict(
+            prefix_enabled=True,
+            prefix_hit_tokens=hit,
+            prefix_prompt_tokens=sum(e.stats.prefill_tokens
+                                     for e in engines) + hit,
+            prefix_shared_pages=sum(e.stats.shared_pages for e in engines),
+            prefix_hits=sum(e.prefix.stats.hits for e in engines
+                            if e.prefix is not None),
+            prefix_lookups=sum(e.prefix.stats.lookups for e in engines
+                               if e.prefix is not None),
+            prefix_cow_forks=sum(e.stats.cow_forks for e in engines))
     sim = SimResult(reports=reports, util=util, total_chips=total_chips,
-                    chip=chip, strategy=policy.name, trace=recorder, **mem)
+                    chip=chip, strategy=policy.name, trace=recorder,
+                    **mem, **pfx)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed
 
@@ -427,19 +486,37 @@ def run_scenario_on_engine(sc: Scenario) -> ScenarioResult:
     return _run_workflow(sc)
 
 
+def _app_maps(sc: Scenario):
+    """(conv_of, kv_tok_of): per-app conversation shapes and full-scale
+    per-token KV bytes (the prefix-gather roofline rate), by app name."""
+    from repro.roofline.hw import kv_bytes_per_token
+    conv_of, kv_tok_of = {}, {}
+    for sa in sc.apps:
+        app = sa.build()
+        if sa.conversation is not None:
+            conv_of[app.name] = sa.conversation
+        if sc.prefix_cache:
+            kv_tok_of[app.name] = float(kv_bytes_per_token(app.cfg))
+    return conv_of, kv_tok_of
+
+
 def _run_concurrent(sc: Scenario) -> ScenarioResult:
     traces = [sc._trace(i, sa, sa.build()) for i, sa in enumerate(sc.apps)]
-    sim, stats, _ = _run_traces(sc, traces, sc.total_chips)
+    conv_of, kv_tok_of = _app_maps(sc)
+    sim, stats, _ = _run_traces(sc, traces, sc.total_chips,
+                                conv_of=conv_of, kv_tok_of=kv_tok_of)
     return ScenarioResult(scenario=sc, sims={"concurrent": sim},
                           substrate="engine", engine_stats=stats)
 
 
 def _run_exclusive(sc: Scenario) -> ScenarioResult:
     chips = sc.total_chips if sc.chip_spec.name != "host-cpu" else 1
+    conv_of, kv_tok_of = _app_maps(sc)
     sims, stats = {}, {}
     for i, sa in enumerate(sc.apps):
         app = sa.build()
-        sim, st, _ = _run_traces(sc, [sc._trace(i, sa, app)], chips)
+        sim, st, _ = _run_traces(sc, [sc._trace(i, sa, app)], chips,
+                                 conv_of=conv_of, kv_tok_of=kv_tok_of)
         sims[app.name] = sim
         stats[app.name] = next(iter(st.values()))
     return ScenarioResult(scenario=sc, sims=sims, substrate="engine",

@@ -189,15 +189,51 @@ class ChunkedPolicy(SchedulingPolicy):
 
 @register_policy("static")
 class StaticPartitionPolicy(SchedulingPolicy):
-    """Chips split equally among apps at start (≙ MPS 33%); per-partition
-    FIFO queues; idle partitions stay idle (paper Fig. 5a right)."""
+    """Chips split among apps at start (≙ MPS 33%); per-partition FIFO
+    queues; idle partitions stay idle (paper Fig. 5a right).
+
+    ``weights`` makes the split heterogeneous: each app's chip count is
+    proportional to its weight (default 1.0), rounded down with every
+    partition keeping at least one chip; leftover chips go to the largest
+    fractional remainders (largest-remainder apportionment, ties by trace
+    order). ``StaticPartitionPolicy(weights={"chat": 3})`` gives chat 3×
+    the chips of each unweighted app."""
+
+    def __init__(self, weights: Optional[dict[str, float]] = None):
+        self.weights = dict(weights or {})
 
     def partition(self, traces: Iterable["AppTrace"],
                   total_chips: int) -> tuple[dict[str, str], dict[str, int]]:
         traces = list(traces)
-        per = max(total_chips // max(len(traces), 1), 1)
-        return ({t.name: t.name for t in traces},
-                {t.name: per for t in traces})
+        if not traces:
+            return {}, {}
+        part = {t.name: t.name for t in traces}
+        if not self.weights:
+            # unweighted: the historical equal split (remainder chips idle
+            # — pinned by the Fig. 5 seed-parity numbers)
+            per = max(total_chips // len(traces), 1)
+            return part, {t.name: per for t in traces}
+        w = {t.name: float(self.weights.get(t.name, 1.0)) for t in traces}
+        if any(v <= 0 for v in w.values()):
+            raise ValueError("static partition weights must be positive")
+        total_w = sum(w.values())
+        share = {n: total_chips * v / total_w for n, v in w.items()}
+        chips = {n: max(int(s), 1) for n, s in share.items()}
+        # the at-least-one-chip floor can oversubscribe a tiny pod: shave
+        # the largest partitions back until the split fits
+        while sum(chips.values()) > total_chips:
+            n = max(chips, key=lambda x: chips[x])
+            if chips[n] == 1:
+                break
+            chips[n] -= 1
+        left = total_chips - sum(chips.values())
+        if left > 0:
+            # largest fractional remainder first; stable for ties
+            order = sorted(w, key=lambda n: share[n] - int(share[n]),
+                           reverse=True)
+            for i in range(left):
+                chips[order[i % len(order)]] += 1
+        return part, chips
 
 
 @register_policy("slo_aware")

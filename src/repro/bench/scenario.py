@@ -19,6 +19,18 @@ versioned ``to_json()`` schema. Scenarios round-trip through YAML::
         num_requests: 50
         arrival: {kind: poisson, rate_per_s: 0.5}
 
+Multi-turn chat sessions (schema 1.4) declare a ``conversation`` shape —
+``num_requests`` then counts sessions — and ``prefix_cache: true`` turns
+on radix prefix sharing (real trie + copy-on-write on the engine
+substrate, the analytic mirror on the simulator)::
+
+    prefix_cache: true
+    apps:
+      - app: conversation
+        num_requests: 4      # concurrent user sessions
+        conversation: {turns: 4, system_tokens: 256, user_tokens: 64,
+                       assistant_tokens: 64, think_time_s: 2.0}
+
 Workflow mode embeds the existing workflow YAML (paper Fig. 23) under a
 ``workflow:`` key and honours its DAG dependencies via the same fixed-point
 release-time iteration the Orchestrator used. ``Orchestrator`` remains as a
@@ -45,6 +57,7 @@ from typing import Optional, Union
 import yaml
 
 from repro.bench.arrival import ArrivalProcess, make_arrival
+from repro.bench.conversation import ConversationSpec, conversation_trace
 from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.core.apps import AppDef, DEFAULT_ARCH, app_from_task, make_app
 from repro.core.dag import Phase, build_dag
@@ -53,7 +66,7 @@ from repro.core.slo import SLO
 from repro.core.workflow import WorkflowSpec, parse_workflow
 from repro.roofline.hw import ChipSpec, get_chip
 
-SCHEMA_VERSION = "1.3"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.4"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
@@ -61,6 +74,10 @@ SCHEMA_VERSION = "1.3"   # 1.1: + top-level "substrate", scenario.substrate
                          #      bandwidth timelines, event counts, Gantt
                          #      spans — repro.telemetry) when the scenario
                          #      sets telemetry: true
+                         # 1.4: + per-sim "prefix" block (hit rate, shared
+                         #      pages, CoW forks) when the scenario sets
+                         #      prefix_cache: true; + "conversation" app
+                         #      key (multi-turn sessions) in the spec
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
@@ -80,10 +97,22 @@ class ScenarioApp:
     background: bool = False
     kv_cache_on_host: bool = False
     arrival: Optional[ArrivalProcess] = None   # None = app default cadence
+    #: multi-turn session shape (schema 1.4). Set — or use ``app:
+    #: conversation`` — and ``num_requests`` counts SESSIONS, each issuing
+    #: ``conversation.turns`` requests on the think-time cadence (the
+    #: ``arrival`` override is ignored: turn timing is intrinsic).
+    conversation: Optional[ConversationSpec] = None
+
+    def __post_init__(self):
+        if self.app_type == "conversation" and self.conversation is None:
+            self.conversation = ConversationSpec()
 
     def build(self) -> AppDef:
-        return make_app(self.app_type,
-                        name=self.name or None,
+        # `conversation` is chatbot-shaped (arch + SLO defaults); the trace
+        # itself comes from repro.bench.conversation, not AppDef
+        base = "chatbot" if self.app_type == "conversation" else self.app_type
+        return make_app(base,
+                        name=self.name or self.app_type,
                         arch=self.arch or None,
                         slo=self.slo,
                         background=self.background,
@@ -99,9 +128,12 @@ class ScenarioApp:
         kv = d.pop("kv_cache", None)
         if kv is not None:
             d["kv_cache_on_host"] = str(kv) in ("host", "cpu", "True", "true")
+        conv = d.pop("conversation", None)
+        if conv is not None and not isinstance(conv, ConversationSpec):
+            conv = ConversationSpec.from_dict(conv)
         return cls(app_type=app_type,
                    slo=SLO.parse(slo) if slo is not None else None,
-                   arrival=make_arrival(arrival), **d)
+                   arrival=make_arrival(arrival), conversation=conv, **d)
 
     def to_dict(self) -> dict:
         d: dict = {"app": self.app_type}
@@ -119,6 +151,8 @@ class ScenarioApp:
             d["kv_cache"] = "host"
         if self.arrival is not None:
             d["arrival"] = self.arrival.to_dict()
+        if self.conversation is not None:
+            d["conversation"] = self.conversation.to_dict()
         return d
 
 
@@ -145,6 +179,10 @@ class Scenario:
     memory_mb: Optional[float] = None
     kv_page_budget: Optional[int] = None
     page_size: int = 16
+    #: radix prefix sharing (schema 1.4): the engine substrate runs its
+    #: paged pool with the real trie + copy-on-write; the simulator mirrors
+    #: it analytically. Every sim gains a versioned ``prefix`` block.
+    prefix_cache: bool = False
     #: attach the versioned ``telemetry`` block (schema 1.3) to every sim
     #: in ``to_json()``: utilization/bandwidth timelines, event counts,
     #: Gantt spans — schema-identical across substrates (repro.telemetry)
@@ -242,6 +280,8 @@ class Scenario:
             d["page_size"] = self.page_size
         if self.telemetry:
             d["telemetry"] = True
+        if self.prefix_cache:
+            d["prefix_cache"] = True
         if self.sweep_rates:
             d["sweep_rates"] = list(self.sweep_rates)
         if self.apps:
@@ -265,10 +305,16 @@ class Scenario:
                             chip=self.chip_spec,
                             chunk_target_s=self.chunk_target_s,
                             kv_token_budget=self.kv_token_budget(),
-                            page_size=self.page_size)
+                            page_size=self.page_size,
+                            prefix_cache=self.prefix_cache)
 
     def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
                start_s: float = 0.0) -> AppTrace:
+        if sa.conversation is not None:
+            return conversation_trace(app.name, app.cfg, sa.conversation,
+                                      app.slo, sa.num_requests,
+                                      start_s=start_s,
+                                      background=app.background)
         return app.sim_trace(sa.num_requests, start_s=start_s,
                              seed=self.seed + idx, arrival=sa.arrival)
 

@@ -44,6 +44,20 @@ class SimRequest:
     #: accounting for the analytic memory model; 0 = no resident footprint,
     #: e.g. diffusion denoising)
     kv_tokens: int = 0
+    #: prefix sharing (analytic mirror of the engine's radix trie):
+    #: requests with the same ``prefix_key`` share the leading
+    #: ``prefix_tokens`` of their prompt — a conversation session's
+    #: accumulated history, or a fleet-wide system prompt. 0 / None keeps
+    #: the request out of the prefix model entirely.
+    prefix_key: Union[str, None] = None
+    prefix_tokens: int = 0
+    #: optional shared ANCESTOR prefix (e.g. a fleet-wide system prompt):
+    #: when ``prefix_key`` misses, the lookup falls back to this key for
+    #: the leading ``prefix_sys_tokens`` — the two-level analogue of the
+    #: radix trie's nesting (session paths descend from the system-prompt
+    #: path, so any session's publish seeds every other session's turn 0).
+    prefix_sys_key: Union[str, None] = None
+    prefix_sys_tokens: int = 0
 
 
 @dataclass
@@ -77,6 +91,7 @@ class PodSimulator:
                  chip: ChipSpec = TPU_V5E, chunk_target_s: float = 0.05,
                  kv_token_budget: Union[int, None] = None,
                  page_size: int = 16,
+                 prefix_cache: bool = False,
                  strategy: Union[str, None] = None):
         if strategy is not None:
             warnings.warn("PodSimulator(strategy=...) is deprecated; use "
@@ -89,6 +104,7 @@ class PodSimulator:
         self.chunk_target_s = chunk_target_s
         self.kv_token_budget = kv_token_budget
         self.page_size = page_size
+        self.prefix_cache = prefix_cache
         self._seq = itertools.count()
 
     @property
@@ -142,6 +158,21 @@ class PodSimulator:
         evicted_ever: set[tuple] = set()
         mem = {"resident": 0, "peak": 0, "evictions": 0, "recompute": 0}
 
+        # ---- analytic prefix model (the engine's radix trie, mirrored) --
+        # Page-granular: a key's published tokens are what a trie at this
+        # page_size could serve, and hits floor to whole pages — CoW forks
+        # (a mid-page divergence) are an engine-level effect the analytic
+        # model never produces, so it reports 0 forks in the same schema
+        # block. Published prefixes cost persistent residency under a
+        # budget and are reclaimed cold-first (no in-flight sharer) before
+        # any live request is evicted, matching the engine's order.
+        prefix_cached: dict[str, int] = {}     # key -> published tokens
+        prefix_sharers: dict[str, int] = {}    # key -> in-flight readers
+        prefix_res: dict[str, int] = {}        # key -> resident tokens
+        prefix_use: dict[str, float] = {}      # key -> last hit time
+        pf = {"lookups": 0, "hits": 0, "hit_tokens": 0, "shared_pages": 0,
+              "prompt_tokens": 0}
+
         def enqueue(partition: str, ready_t: float, req: SimRequest,
                     item_idx: int, chunk_frac: float):
             prio = policy.priority(apps[req.app], req, req.items[item_idx],
@@ -192,8 +223,20 @@ class PodSimulator:
                     admitted.add(k)
                     telem.instant("admit", req.app, req.request_id, now)
                 return True
-            need = min(req.kv_tokens, budget)   # clamp: must be runnable
+            # shared prefix pages are already resident under their key:
+            # the request only needs its INCREMENTAL footprint
+            hit = state[k].get("prefix_hit", 0)
+            need = min(max(req.kv_tokens - hit, 0), budget)
             while mem["resident"] + need > budget:
+                cold = [kk for kk, tok in prefix_res.items()
+                        if tok > 0 and prefix_sharers.get(kk, 0) == 0]
+                if cold:
+                    # cold cached prefixes go before any live request
+                    kk = min(cold, key=lambda x: prefix_use.get(x, 0.0))
+                    mem["resident"] -= prefix_res.pop(kk)
+                    prefix_cached.pop(kk, None)  # pages gone: future misses
+                    note_kv(now)
+                    continue
                 cands = [kk for kk in resident
                          if kk not in executing and kk != k]
                 # previously-evicted requests have no eviction rights, but
@@ -241,7 +284,14 @@ class PodSimulator:
                     continue
                 item = req.items[idx]
                 chips = chips_of[partition]
-                full_dur = item.duration_s(chips, self.chip)
+                # prefix sharing: fully-hit prompt tokens skip their
+                # prefill share of work (the engine's skipped chunks)
+                scale = 1.0
+                st_d = state[k]
+                if item.kind == "prefill" and st_d.get("prefill_total", 0):
+                    scale = 1.0 - (st_d.get("prefix_hit", 0)
+                                   / st_d["prefill_total"])
+                full_dur = item.duration_s(chips, self.chip) * scale
                 run_frac = min(frac, policy.chunk_fraction(
                     item, full_dur, frac, self.chunk_target_s))
                 dur = full_dur * run_frac
@@ -249,9 +299,9 @@ class PodSimulator:
                 busy_until[partition] = end
                 util.append(UtilSample(now, end, chips, self.total_chips))
                 telem.span(item.kind, req.app, req.request_id, now, end,
-                           chips=chips, flops=item.flops * run_frac,
-                           hbm_bytes=item.hbm_bytes * run_frac,
-                           tokens=item.tokens * run_frac)
+                           chips=chips, flops=item.flops * run_frac * scale,
+                           hbm_bytes=item.hbm_bytes * run_frac * scale,
+                           tokens=item.tokens * run_frac * scale)
                 policy.on_dispatch(apps[req.app], req, item, now, end, chips)
                 executing.add(k)
                 last_use[k] = now
@@ -270,6 +320,37 @@ class PodSimulator:
                     "t_start": now, "decode_done": 0, "decode_t0": None,
                     "tokens_done": 0,
                 }
+                if self.prefix_cache:
+                    ptoks = sum(it.tokens for it in req.items
+                                if it.kind == "prefill")
+                    pf["prompt_tokens"] += ptoks
+                    st["prefill_total"] = ptoks
+                    hit, held = 0, None
+                    if req.prefix_key and req.prefix_tokens > 0:
+                        pf["lookups"] += 1
+                        hit = min(prefix_cached.get(req.prefix_key, 0),
+                                  req.prefix_tokens, ptoks)
+                        held = req.prefix_key
+                        if req.prefix_sys_key:
+                            # ancestor fallback: the session path descends
+                            # from the shared system-prompt path in the trie
+                            sys_hit = min(
+                                prefix_cached.get(req.prefix_sys_key, 0),
+                                req.prefix_sys_tokens, ptoks)
+                            if sys_hit > hit:
+                                hit, held = sys_hit, req.prefix_sys_key
+                        hit = (hit // self.page_size) * self.page_size
+                    if hit > 0:
+                        pf["hits"] += 1
+                        pf["hit_tokens"] += hit
+                        pf["shared_pages"] += hit // self.page_size
+                        prefix_sharers[held] = (
+                            prefix_sharers.get(held, 0) + 1)
+                        prefix_use[held] = now
+                        st["prefix_held"] = held
+                        telem.instant("prefix_hit", req.app, req.request_id,
+                                      now, tokens=hit)
+                    st["prefix_hit"] = hit
                 enqueue(partition_of[req.app], now, req, 0, 1.0)
             elif kind == "complete":
                 partition, req, idx, rem, started, run_frac = payload
@@ -280,7 +361,12 @@ class PodSimulator:
                 st = state[k]
                 # partial chunks count toward the recompute bill too: an
                 # eviction mid-prefill loses real work
-                st["tokens_done"] += req.items[idx].tokens * run_frac
+                done_scale = 1.0
+                if (req.items[idx].kind == "prefill"
+                        and st.get("prefill_total", 0)):
+                    done_scale = 1.0 - (st.get("prefix_hit", 0)
+                                        / st["prefill_total"])
+                st["tokens_done"] += req.items[idx].tokens * run_frac * done_scale
                 if rem > 1e-9:  # chunk remainder goes back to the queue
                     telem.instant("preempt", req.app, req.request_id, now)
                     enqueue(partition, now, req, idx, rem)
@@ -301,6 +387,44 @@ class PodSimulator:
                         if k in resident:    # release the KV footprint
                             mem["resident"] -= resident.pop(k)[1]
                             note_kv(now)
+                        key = req.prefix_key
+                        if self.prefix_cache and key and req.prefix_tokens > 0:
+                            # publish: the prompt's shareable prefix stays
+                            # behind for the next arrival under this key;
+                            # the shared-ancestor portion is published (and
+                            # charged) once under the sys key, the session
+                            # key carries only its increment beyond it
+                            sysk, syst = req.prefix_sys_key, 0
+                            if sysk:
+                                syst = min(req.prefix_sys_tokens,
+                                           req.prefix_tokens)
+                                prefix_cached[sysk] = max(
+                                    prefix_cached.get(sysk, 0), syst)
+                                prefix_use.setdefault(sysk, now)
+                            prefix_cached[key] = max(
+                                prefix_cached.get(key, 0), req.prefix_tokens)
+                            if budget is not None:
+                                grow = 0
+                                if sysk:
+                                    want = min(syst, budget)
+                                    g = want - prefix_res.get(sysk, 0)
+                                    if g > 0:
+                                        prefix_res[sysk] = want
+                                        grow += g
+                                want = max(0, min(prefix_cached[key], budget)
+                                           - syst)
+                                g = want - prefix_res.get(key, 0)
+                                if g > 0:
+                                    prefix_res[key] = want
+                                    grow += g
+                                if grow > 0:
+                                    mem["resident"] += grow
+                                    mem["peak"] = max(mem["peak"],
+                                                      mem["resident"])
+                                    note_kv(now)
+                            prefix_use.setdefault(key, now)
+                        if st.get("prefix_held"):
+                            prefix_sharers[st["prefix_held"]] -= 1
                         rec.e2e_s = now - rec.arrival_s
                         if st["decode_done"] > 1 and st["decode_t0"] is not None:
                             rec.tpot_s = ((now - st["decode_t0"]) /
@@ -334,6 +458,12 @@ class PodSimulator:
                          peak_kv_tokens=mem["peak"],
                          evictions=mem["evictions"],
                          recompute_tokens=mem["recompute"],
+                         prefix_enabled=self.prefix_cache,
+                         prefix_hit_tokens=pf["hit_tokens"],
+                         prefix_prompt_tokens=pf["prompt_tokens"],
+                         prefix_shared_pages=pf["shared_pages"],
+                         prefix_hits=pf["hits"],
+                         prefix_lookups=pf["lookups"],
                          trace=telem)
 
 
@@ -350,6 +480,14 @@ class SimResult:
     peak_kv_tokens: int = 0
     evictions: int = 0
     recompute_tokens: int = 0
+    # ---- prefix sharing (schema 1.4's "prefix" block; disabled = absent)
+    prefix_enabled: bool = False
+    prefix_hit_tokens: int = 0
+    prefix_prompt_tokens: int = 0
+    prefix_shared_pages: int = 0
+    prefix_hits: int = 0
+    prefix_lookups: int = 0
+    prefix_cow_forks: int = 0     # engine-only effect; analytic model: 0
     #: recorded event trace (repro.telemetry) — always present for
     #: simulator runs; engine runs carry one when telemetry is enabled.
     #: NOT part of summary()/to_json() unless the scenario opts in.
@@ -395,14 +533,33 @@ class SimResult:
             "recompute_tokens": self.recompute_tokens,
         }
 
+    def prefix_summary(self) -> Union[dict, None]:
+        """Schema 1.4 "prefix" block — identical keys on both substrates
+        (the engine runner assembles the same dict from EngineStats)."""
+        if not self.prefix_enabled:
+            return None
+        return {
+            "enabled": True,
+            "hit_tokens": self.prefix_hit_tokens,
+            "prompt_tokens": self.prefix_prompt_tokens,
+            "hit_rate": (self.prefix_hit_tokens / self.prefix_prompt_tokens
+                         if self.prefix_prompt_tokens else 0.0),
+            "shared_pages": self.prefix_shared_pages,
+            "hits": self.prefix_hits,
+            "lookups": self.prefix_lookups,
+            "cow_forks": self.prefix_cow_forks,
+        }
+
     def summary(self) -> dict:
         mem = self.memory_summary()
+        pfx = self.prefix_summary()
         return {
             "strategy": self.strategy,
             "makespan_s": self.makespan_s,
             "utilization": self.utilization(),
             "energy_kj": self.energy_j() / 1e3,
             **({"memory": mem} if mem is not None else {}),
+            **({"prefix": pfx} if pfx is not None else {}),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,

@@ -88,6 +88,29 @@ class ModelBundle:
             return False
         return self.cfg.family != "ssm"
 
+    def prefix_shareable(self) -> bool:
+        """Can finished requests' prompt KV be reused across requests
+        (radix prefix cache)? Requires the ENTIRE prefill state to live in
+        the page pool, so mapping a donor's pages reproduces the donor's
+        state bit-exactly: true for pure dense transformers (incl. VLM
+        text stacks). Hybrid keeps slot-resident SSM state and enc-dec
+        keeps slot-resident cross-KV — pages alone don't carry their
+        prefill state; MoE routing is batch-coupled (capacity drops), so
+        a donor's KV is not what a fresh prefill would compute."""
+        return (self.cache_pages()
+                and self.cfg.family in ("dense", "vlm")
+                and not self.cfg.is_moe)
+
+    def copy_page(self, cache: Cache, src, dst) -> Cache:
+        """Device copy of one pool row across every paged layer — the CoW
+        fork that backs :meth:`BlockAllocator.fork_table`. ``src``/``dst``
+        are page ids (traced scalars: one executable serves every fork)."""
+        def one(path, leaf):
+            if self._leaf_key(path) in self.PAGE_KEYS:
+                return leaf.at[:, dst].set(leaf[:, src])
+            return leaf
+        return jax.tree_util.tree_map_with_path(one, cache)
+
     def init_paged_cache(self, num_pages: int, page_size: int, batch: int,
                          max_seq: int, dtype=jnp.bfloat16) -> Cache:
         """Page-pool cache: ``num_pages`` pages of ``page_size`` tokens per

@@ -14,11 +14,18 @@ from __future__ import annotations
 
 import warnings
 
+import repro.telemetry as _telemetry
 from repro.telemetry import HostMonitor, UtilizationTimeline
 
-warnings.warn(
-    "repro.monitor.metrics is deprecated; import UtilizationTimeline/"
-    "HostMonitor from repro.telemetry instead (see docs/telemetry.md)",
-    DeprecationWarning, stacklevel=2)
+# warn exactly once per PROCESS, not per import: test harnesses (and any
+# importlib.reload dance) pop this module from sys.modules and re-import,
+# which would re-execute a module-level warn. The flag lives on the
+# repro.telemetry module object — it survives this module's re-imports.
+if not getattr(_telemetry, "_monitor_metrics_shim_warned", False):
+    _telemetry._monitor_metrics_shim_warned = True
+    warnings.warn(
+        "repro.monitor.metrics is deprecated; import UtilizationTimeline/"
+        "HostMonitor from repro.telemetry instead (see docs/telemetry.md)",
+        DeprecationWarning, stacklevel=2)
 
 __all__ = ["HostMonitor", "UtilizationTimeline"]

@@ -24,11 +24,26 @@ The allocator is pure host-side bookkeeping (numpy); it never touches
 device memory. The ``tables`` array follows the engine's copy-on-write
 rule: any buffer already handed to a jitted call is never mutated in
 place — every mutation rebinds ``self.tables`` to a fresh array.
+
+Refcounted sharing (prefix cache)
+---------------------------------
+Every allocated page carries a reference count. A normal private page has
+refcount 1 (its owning slot); the prefix cache
+(:mod:`repro.serving.prefix_cache`) retains published pages with its own
+reference, and admission maps cached pages into a new slot's block table
+via ``alloc_slot(..., shared=pages)`` — each holder is one reference.
+``ref_decr`` frees the page only when the LAST reference drops; a page
+with refcount > 1 can therefore never reach the free list through any
+single holder's release (eviction safety), and decrementing an
+unallocated page raises (double-free detection). The first WRITE into a
+shared page must fork it first (``fork_table``): the slot swaps the
+shared id for a fresh private page and the engine device-copies the pool
+row (copy-on-write).
 """
 from __future__ import annotations
 
 import math
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -63,6 +78,7 @@ class BlockAllocator:
                               else low_watermark)
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._pages: dict[int, list[int]] = {}       # slot -> page ids
+        self._ref: dict[int, int] = {}               # page -> refcount
         self._last_touch: dict[int, int] = {}        # slot -> tick
         self._tick = 0
         self.tables = np.full((max_slots, max_blocks), SENTINEL, np.int32)
@@ -101,6 +117,15 @@ class BlockAllocator:
     def slot_pages(self, slot: int) -> int:
         return len(self._pages.get(slot, ()))
 
+    def slot_page_ids(self, slot: int) -> list[int]:
+        """The page ids a slot maps, in block order (prefix-cache publish
+        reads the prompt-covering prefix of this list)."""
+        return list(self._pages.get(slot, ()))
+
+    def ref_count(self, page: int) -> int:
+        """Current reference count of a page (0 = free / never allocated)."""
+        return self._ref.get(page, 0)
+
     def over_high_watermark(self) -> bool:
         return self.pages_in_use >= self.high_watermark * self.num_pages
 
@@ -113,26 +138,85 @@ class BlockAllocator:
             raise PoolExhausted(
                 f"KV pool exhausted ({self.num_pages} pages of "
                 f"{self.page_size} tokens) and no eviction victim")
-        return self._free.pop()
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
+    # ------------------------------------------------------- refcounting
+    def ref_incr(self, page: int) -> int:
+        """Add a reference to an ALLOCATED page (prefix-cache retain /
+        shared mapping). Returns the new count."""
+        n = self._ref.get(page, 0)
+        if n < 1:
+            raise ValueError(f"page {page} is not allocated; cannot share")
+        self._ref[page] = n + 1
+        return n + 1
+
+    def ref_decr(self, page: int) -> bool:
+        """Drop one reference; the page returns to the free list only when
+        the LAST reference drops (returns True then). Decrementing a page
+        with no live references is a double free and raises."""
+        n = self._ref.get(page, 0)
+        if n < 1:
+            raise ValueError(f"double free: page {page} has no live "
+                             "references")
+        if n == 1:
+            del self._ref[page]
+            self._free.append(page)
+            return True
+        self._ref[page] = n - 1
+        return False
+
+    def fork_table(self, slot: int, block_idx: int) -> tuple[int, int]:
+        """Copy-on-write fork: if the slot's ``block_idx`` page is SHARED
+        (refcount > 1), swap in a fresh private page and drop the slot's
+        reference to the old one. Returns ``(old_page, new_page)`` — equal
+        when the page was already private (no-op). The caller owns the
+        device copy of the pool row (``ModelBundle.copy_page``)."""
+        pages = self._pages.get(slot)
+        if pages is None or not 0 <= block_idx < len(pages):
+            raise ValueError(f"slot {slot} has no block {block_idx}")
+        old = pages[block_idx]
+        if self._ref.get(old, 0) <= 1:
+            return old, old
+        new = self._take_page()            # may raise PoolExhausted
+        self.ref_decr(old)
+        pages[block_idx] = new
+        self._map(slot, block_idx, new)
+        return old, new
 
     def _map(self, slot: int, block_idx: int, page: int) -> None:
         tables = self.tables.copy()          # copy-on-write (jit aliasing)
         tables[slot, block_idx] = page
         self.tables = tables
 
-    def alloc_slot(self, slot: int, tokens: int) -> None:
-        """Map pages covering ``tokens`` for a freshly admitted slot."""
+    def alloc_slot(self, slot: int, tokens: int,
+                   shared: Sequence[int] = ()) -> None:
+        """Map pages covering ``tokens`` for a freshly admitted slot.
+
+        ``shared`` maps already-allocated (prefix-cache) pages as the
+        slot's LEADING blocks — each gains a reference instead of costing
+        a fresh page; only the remainder draws from the free list."""
         if slot in self._pages:
             raise ValueError(f"slot {slot} already holds pages")
         need = self.pages_needed(tokens)
+        shared = list(shared)
+        if len(shared) > need:
+            raise ValueError(
+                f"{len(shared)} shared pages exceed the {need} the request "
+                "needs")
         if need > self.max_blocks:
             raise PoolExhausted(
                 f"request needs {need} pages but the block table holds "
                 f"{self.max_blocks}")
-        if need > self.free_pages:
+        if need - len(shared) > self.free_pages:
             raise PoolExhausted(
-                f"request needs {need} pages, {self.free_pages} free")
-        pages = [self._take_page() for _ in range(need)]
+                f"request needs {need - len(shared)} fresh pages, "
+                f"{self.free_pages} free")
+        for p in shared:
+            self.ref_incr(p)
+        pages = shared + [self._take_page()
+                          for _ in range(need - len(shared))]
         self._pages[slot] = pages
         tables = self.tables.copy()
         tables[slot, :need] = pages
@@ -162,15 +246,17 @@ class BlockAllocator:
         return added
 
     def free_slot(self, slot: int) -> int:
-        """Release every page the slot holds; returns the count freed."""
+        """Drop the slot's reference on every page it maps; returns how
+        many actually reached the free list (shared pages survive under
+        their remaining holders' references)."""
         pages = self._pages.pop(slot, [])
-        self._free.extend(reversed(pages))
+        freed = sum(1 for p in reversed(pages) if self.ref_decr(p))
         self._last_touch.pop(slot, None)
         if pages:
             tables = self.tables.copy()
             tables[slot, :] = SENTINEL
             self.tables = tables
-        return len(pages)
+        return freed
 
     # ------------------------------------------------------ victim choice
     def touch(self, slot: int) -> None:

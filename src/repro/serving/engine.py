@@ -59,6 +59,22 @@ exactly the cache the slot held. ``paged=False`` keeps the contiguous
 cache; a contiguous engine constructed under a page budget it cannot
 reserve up front REFUSES at construction time — the admission asymmetry
 the OOM regression test pins.
+
+Prefix sharing (``prefix_cache=True``)
+--------------------------------------
+On release, a finished request's prompt pages are PUBLISHED into a
+:class:`~repro.serving.prefix_cache.PrefixCache` (radix trie keyed on
+token content) instead of freed; admission looks up the longest cached
+prefix of the effective prompt, floors it to the prefill-chunk grid
+(resumed prefill re-dispatches on exactly the boundaries a cold prefill
+would — token streams stay bit-identical, pinned in
+tests/test_prefix_cache.py), maps the matching pages into the new slot's
+block table by reference, and skips their prefill entirely — charging a
+memory-bound ``prefix_gather`` cost instead of prefill FLOPs. The first
+write into a still-shared page copy-on-write forks it
+(``stats.cow_forks``); pool pressure reclaims cold cached prefixes
+before ever preempting a live slot. Requires a family whose entire
+prefill state is page-resident (``ModelBundle.prefix_shareable``).
 """
 from __future__ import annotations
 
@@ -74,6 +90,7 @@ import numpy as np
 from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.models.factory import ModelBundle
 from repro.serving.block_allocator import BlockAllocator, PoolExhausted
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
 from repro.telemetry.recorder import TraceRecorder
 
@@ -89,6 +106,9 @@ class EngineStats:
     pages_in_use: int = 0         # PEAK pages held at once (paged cache)
     evictions: int = 0            # preempt-to-evict events (paged cache)
     recompute_tokens: int = 0     # cached tokens lost to evictions
+    prefix_hit_tokens: int = 0    # prefill tokens served from the trie
+    shared_pages: int = 0         # cached pages mapped into admitted slots
+    cow_forks: int = 0            # shared pages forked on first write
 
 
 class InferenceEngine:
@@ -100,6 +120,7 @@ class InferenceEngine:
                  request_cost_s: Optional[
                      Callable[[Request, str, int], float]] = None,
                  paged: Optional[bool] = None,
+                 prefix_cache: bool = False,
                  kv_pages: Optional[int] = None,
                  page_size: Optional[int] = None,
                  evict_high_watermark: float = 1.0,
@@ -171,6 +192,13 @@ class InferenceEngine:
                 kv_pages, page_size, max_slots, max_blocks,
                 high_watermark=evict_high_watermark,
                 low_watermark=evict_low_watermark)
+            if prefix_cache and not model.prefix_shareable():
+                raise ValueError(
+                    f"family {self.cfg.family!r} cannot share prefixes: "
+                    "its prefill state is not fully page-resident "
+                    "(slot-resident SSM state / cross-KV) or its numerics "
+                    "are batch-coupled (MoE capacity)")
+            self.prefix = PrefixCache(self.allocator) if prefix_cache else None
             self.cache = self.model.init_paged_cache(
                 kv_pages, page_size, max_slots, max_seq)
             # slot-resident leaves only (SSM state / enc-dec cross-KV);
@@ -179,6 +207,10 @@ class InferenceEngine:
             self._fresh_slot = self.model.slice_cache(
                 self.model.init_paged_cache(1, page_size, 1, max_seq), 0)
         else:
+            if prefix_cache:
+                raise ValueError("prefix sharing needs the paged cache "
+                                 "(pages are the unit of sharing)")
+            self.prefix = None
             if kv_pages is not None:
                 budget_tokens = kv_pages * (page_size or 16)
                 reserved = max_slots * max_seq
@@ -228,6 +260,10 @@ class InferenceEngine:
                         p, c, t, st, bt, act)),
                 "set_slice": jax.jit(model.set_cache_slice,
                                      static_argnums=(1,)),
+                # CoW fork: page ids stay traced — ONE executable serves
+                # every fork of this model's pool
+                "copy_page": jax.jit(
+                    lambda c, s, d: model.copy_page(c, s, d)),
             }
             model._serving_jit_cache = jits
         self._jit_decode = jits["decode"]
@@ -235,6 +271,7 @@ class InferenceEngine:
         self._jit_decode_paged = jits["decode_paged"]
         self._jit_prefill_paged = jits["prefill_paged"]
         self._jit_set_slice = jits["set_slice"]
+        self._jit_copy_page = jits["copy_page"]
 
     # ------------------------------------------------------------- setup
     def load_params(self, params):
@@ -339,6 +376,12 @@ class InferenceEngine:
             return
         if not alloc.over_high_watermark():
             return
+        if self.prefix is not None:
+            # cold cached prefixes are the cheapest pages on the pool:
+            # reclaim them before preempting any live slot
+            excess = alloc.pages_in_use - int(
+                alloc.low_watermark * alloc.num_pages)
+            self.prefix.evict_cold(excess)
         while alloc.over_low_watermark():
             victim = alloc.lru_victim(exclude=protect)
             if victim is None:
@@ -346,9 +389,10 @@ class InferenceEngine:
             self._evict(victim)
 
     def _grow_pages(self, slot: int, tokens: int) -> bool:
-        """Ensure the slot's block table covers ``tokens``; evicts LRU
-        victims on demand. False when no page can be found (pool smaller
-        than this one row) — the caller finishes the request cache-full."""
+        """Ensure the slot's block table covers ``tokens``; reclaims cold
+        prefix pages first, then evicts LRU victims. False when no page
+        can be found (pool smaller than this one row) — the caller
+        finishes the request cache-full."""
         alloc = self.allocator
         while True:
             try:
@@ -358,10 +402,76 @@ class InferenceEngine:
                 self._rebalance(protect={slot})
                 return True
             except PoolExhausted:
+                if self.prefix is not None and self.prefix.evict_cold(1):
+                    continue       # cold cached history goes before live state
                 victim = alloc.lru_victim(exclude={slot})
                 if victim is None:
                     return False
                 self._evict(victim)
+
+    # ------------------------------------------------------ prefix sharing
+    def _cow_guard(self, slot: int, start: int, n: int) -> None:
+        """Copy-on-write barrier: fork every SHARED page the next dispatch
+        writes into (positions ``start .. start+n-1``). Private pages are a
+        refcount check each — no cost when sharing is off or cold."""
+        if self.prefix is None or n <= 0:
+            return
+        alloc = self.allocator
+        ps = alloc.page_size
+        ids = alloc.slot_page_ids(slot)
+        last = min((start + n - 1) // ps, len(ids) - 1)
+        for b in range(start // ps, last + 1):
+            if alloc.ref_count(ids[b]) <= 1:
+                continue
+            while True:
+                try:
+                    old, new = alloc.fork_table(slot, b)
+                    break
+                except PoolExhausted:
+                    if self.prefix.evict_cold(1):
+                        continue
+                    victim = alloc.lru_victim(exclude={slot})
+                    if victim is None:
+                        raise
+                    self._evict(victim)
+            if new != old:
+                self.cache = self._jit_copy_page(
+                    self.cache, jnp.int32(old), jnp.int32(new))
+                self.stats.cow_forks += 1
+                self._note_pages()
+                self._emit_kv()
+                if self._recorder is not None:
+                    req = self.active[slot]
+                    self._recorder.instant(
+                        "cow_fork", req.app, req.request_id, self.now(),
+                        meta={"page": int(new)})
+
+    def _publish_prefix(self, slot: int) -> None:
+        """Release-time publish: the slot's prompt-covering pages move
+        into the trie (one retained reference each) instead of dying with
+        the slot — the next request with this prefix maps them back."""
+        if self.prefix is None:
+            return
+        eff = self._eff.get(slot)
+        if eff is None or len(eff) == 0:
+            return
+        npages = self.allocator.pages_needed(len(eff))
+        ids = self.allocator.slot_page_ids(slot)
+        if len(ids) >= npages:
+            self.prefix.insert([int(t) for t in eff], ids[:npages])
+
+    def _prefix_lookup(self, eff: np.ndarray) -> tuple[int, list[int]]:
+        """Longest cached prefix of ``eff``, floored to the prefill-chunk
+        grid so the resumed prefill re-dispatches on exactly the chunk
+        boundaries a from-scratch prefill would use (bit-identical
+        streams); pages are trimmed to what the floored hit covers."""
+        if self.prefix is None:
+            return 0, []
+        matched, pages = self.prefix.lookup([int(t) for t in eff])
+        hit = (matched // self.prefill_chunk) * self.prefill_chunk
+        if hit <= 0:
+            return 0, []
+        return hit, pages[:self.allocator.pages_needed(hit)]
 
     # ----------------------------------------------------------- prefill
     def _prefill_slot(self, slot: int, req: Request,
@@ -391,6 +501,7 @@ class InferenceEngine:
             mask[slot] = True
             if self.paged:
                 self.allocator.touch(slot)
+                self._cow_guard(slot, int(self.lengths[slot]), c)
                 _, self.cache = self._jit_prefill_paged(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(self.lengths),
@@ -429,8 +540,10 @@ class InferenceEngine:
             free = [i for i, a in enumerate(self.active) if a is None]
             if not free:
                 break
+            hit, hit_pages = 0, []
             if self.paged:
-                need_tok = len(self._effective_prompt(req)) + 1
+                eff = self._effective_prompt(req)
+                need_tok = len(eff) + 1
                 if not self.allocator.fits(need_tok):
                     raise RuntimeError(
                         f"request {req.request_id} needs "
@@ -438,9 +551,26 @@ class InferenceEngine:
                         f"the pool holds {self.allocator.num_pages} "
                         f"(block table: {self.allocator.max_blocks}); it "
                         "can never be admitted")
-                if not (self.allocator.can_admit(need_tok) and
-                        self.allocator.admit_within_watermark(need_tok)):
+                # prefix sharing: cached pages cost a reference, not a
+                # page, and cold trie pages count as reclaimable headroom
+                hit, hit_pages = self._prefix_lookup(eff)
+                fresh = self.allocator.pages_needed(need_tok) - len(hit_pages)
+                reclaim = (self.prefix.reclaimable_pages()
+                           if self.prefix is not None else 0)
+                reclaim = max(0, reclaim - len(hit_pages))
+                in_use_eff = self.allocator.pages_in_use - reclaim
+                if fresh > self.allocator.free_pages + reclaim:
                     continue   # memory-aware: smaller requests may still fit
+                if in_use_eff > 0 and (in_use_eff + len(hit_pages) + fresh
+                                       > self.allocator.high_watermark
+                                       * self.allocator.num_pages):
+                    continue
+                if fresh > self.allocator.free_pages:
+                    self.prefix.evict_cold(
+                        fresh - self.allocator.free_pages,
+                        protect=frozenset(hit_pages))
+                    if fresh > self.allocator.free_pages:
+                        continue
             slot = free[0]
             self.active[slot] = req
             self.waiting.remove(req)
@@ -448,17 +578,30 @@ class InferenceEngine:
             if self._recorder is not None:
                 self._recorder.instant("admit", req.app, req.request_id,
                                        self.now())
-            self._partial[slot] = 0
+            self._partial[slot] = hit
             self._eff[slot] = self._effective_prompt(req)
             if self.paged:
-                self.allocator.alloc_slot(slot, need_tok)
+                self.allocator.alloc_slot(slot, need_tok, shared=hit_pages)
                 self._note_pages()
                 self._emit_kv()
             self.cache = self._jit_set_slice(self.cache, slot,
                                              self._fresh_slot)
             new_lengths = self.lengths.copy()
-            new_lengths[slot] = 0
+            new_lengths[slot] = hit
             self.lengths = new_lengths
+            if hit:
+                # fully-hit chunks skip prefill: zero FLOPs, but the pages
+                # must be gathered through the block table once — charged
+                # as a roofline'd memory-bound item, not compute
+                self.stats.prefix_hit_tokens += hit
+                self.stats.shared_pages += len(hit_pages)
+                t0 = self.now()
+                self._advance("prefix_gather", hit, req)
+                req.t_prefill.append(self.now())
+                if self._recorder is not None:
+                    self._recorder.instant(
+                        "prefix_hit", req.app, req.request_id, t0,
+                        tokens=hit, meta={"pages": len(hit_pages)})
 
         # 2) prefill work
         prefilling = [i for i, r in enumerate(self.active)
@@ -489,11 +632,17 @@ class InferenceEngine:
             for i in list(decoding):
                 if self.active[i] is None:
                     continue   # evicted by an earlier slot's growth
-                if not self._grow_pages(i, int(self.lengths[i]) + 1):
+                if self._grow_pages(i, int(self.lengths[i]) + 1):
+                    # the new token writes into the page covering
+                    # lengths[i]; fork it first if it is shared (evictions
+                    # this triggers are re-filtered below, like growth's)
+                    self._cow_guard(i, int(self.lengths[i]), 1)
+                else:
                     # pool smaller than this one row: finish cache-full
                     req = self.active[i]
                     req.t_done = self.now()
                     self.done.append(req)
+                    self._publish_prefix(i)
                     self.allocator.free_slot(i)
                     self._emit_kv()
                     self.active[i] = None
@@ -562,6 +711,7 @@ class InferenceEngine:
                     req.t_done = t
                     self.done.append(req)
                     if self.paged:
+                        self._publish_prefix(i)
                         self.allocator.free_slot(i)
                         self._emit_kv()
                     self.active[i] = None

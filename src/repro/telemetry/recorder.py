@@ -28,9 +28,11 @@ work-item kind: ``prefill``, ``decode``, ``encode``, ``denoise``,
 ``admit`` (request became memory-resident / claimed a slot), ``evict``
 (preempt-to-evict; ``tokens`` carries the cached tokens lost, i.e. the
 recompute bill), ``preempt`` (chunk-boundary preemption), ``release``
-(workflow dependency release). Counters are named step series — both
-substrates emit ``kv_pages`` (suffix ``@<partition>`` on the engine) for
-the KV-pool occupancy timeline.
+(workflow dependency release), ``prefix_hit`` (admission mapped cached
+prefix pages; ``tokens`` carries the prefill tokens skipped) and
+``cow_fork`` (first write into a shared page forked it). Counters are
+named step series — both substrates emit ``kv_pages`` (suffix
+``@<partition>`` on the engine) for the KV-pool occupancy timeline.
 """
 from __future__ import annotations
 
@@ -41,7 +43,8 @@ from typing import Optional
 #: the two substrates emit schema-identical telemetry blocks even when one
 #: never produces a given kind
 EVENT_KINDS = ("prefill", "decode", "encode", "denoise", "train",
-               "admit", "evict", "preempt", "release")
+               "admit", "evict", "preempt", "release",
+               "prefix_hit", "cow_fork")
 #: span-event kinds that represent chip-occupying work
 WORK_KINDS = ("prefill", "decode", "encode", "denoise", "train")
 

@@ -95,6 +95,73 @@ def test_copy_on_write_tables():
     assert np.all(before == SENTINEL)     # old snapshot untouched
 
 
+def test_shared_alloc_costs_references_not_pages():
+    a = make()
+    a.alloc_slot(0, tokens=8)             # 2 private pages
+    donor = a.slot_page_ids(0)
+    for p in donor:
+        a.ref_incr(p)                     # a trie-like holder retains them
+    a.free_slot(0)
+    assert a.pages_in_use == 2            # survive the slot free
+    a.alloc_slot(1, tokens=9, shared=donor)   # 2 shared + 1 fresh
+    assert a.pages_in_use == 3
+    assert a.slot_page_ids(1)[:2] == donor
+    assert all(a.ref_count(p) == 2 for p in donor)
+
+
+def test_fork_then_free_leaves_shared_pages_alive():
+    a = make()
+    a.alloc_slot(0, tokens=4)
+    [page] = a.slot_page_ids(0)
+    a.ref_incr(page)                      # second holder
+    a.alloc_slot(1, tokens=4, shared=[page])
+    old, new = a.fork_table(1, 0)         # CoW: slot 1 goes private
+    assert old == page and new != page
+    assert a.tables[1, 0] == new
+    assert a.ref_count(page) == 2         # slot 0 + the retainer
+    a.free_slot(1)
+    assert a.ref_count(page) == 2         # untouched by the fork's free
+    a.free_slot(0)
+    assert a.ref_count(page) == 1         # retainer keeps it alive
+    assert a.pages_in_use == 1
+
+
+def test_fork_is_noop_on_private_pages():
+    a = make()
+    a.alloc_slot(0, tokens=4)
+    [page] = a.slot_page_ids(0)
+    assert a.fork_table(0, 0) == (page, page)
+    assert a.pages_in_use == 1
+
+
+def test_double_free_of_refcounted_page_raises():
+    a = make()
+    a.alloc_slot(0, tokens=4)
+    [page] = a.slot_page_ids(0)
+    a.free_slot(0)
+    with pytest.raises(ValueError, match="double free"):
+        a.ref_decr(page)
+    with pytest.raises(ValueError, match="not allocated"):
+        a.ref_incr(page)                  # can't share a freed page either
+
+
+def test_eviction_never_frees_a_shared_page():
+    """Evicting (freeing) any single holder of a refcount>1 page must not
+    return it to the free list — other holders still map it."""
+    a = make()
+    a.alloc_slot(0, tokens=8)
+    shared = a.slot_page_ids(0)
+    a.alloc_slot(1, tokens=8, shared=shared)
+    a.alloc_slot(2, tokens=4)
+    victim = a.lru_victim()
+    assert victim == 0                    # LRU picks the stalest slot
+    freed = a.free_slot(victim)           # the engine's evict path
+    assert freed == 0                     # nothing hit the free list
+    assert all(a.ref_count(p) == 1 for p in shared)
+    # slot 1 still decodes against those pages
+    assert list(a.tables[1, :2]) == shared
+
+
 def test_validation():
     with pytest.raises(ValueError):
         make(num_pages=0)

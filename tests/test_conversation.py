@@ -1,0 +1,186 @@
+"""Multi-turn conversation workloads + prefix-cache acceptance.
+
+Covers the ``conversation`` workload generator (spec validation, literal
+prompt prefix-consistency, trace geometry) and the cross-substrate
+acceptance criteria for prefix sharing: engine-vs-simulator hit-rate
+parity within 5%, and prefill fraction / pages-per-user strictly
+decreasing as the shared-prefix fraction rises — on BOTH substrates.
+
+All block sizes here are multiples of lcm(page_size=16, prefill_chunk=8)
+so the two substrates floor prefix hits onto the same grid.
+"""
+import functools
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.bench import Scenario, ScenarioApp
+from repro.bench.conversation import (DECODE_GROUP, ConversationSpec,
+                                      conversation_prompt, conversation_trace,
+                                      decode_steps, session_turn)
+from repro.configs.registry import CONFIGS
+from repro.core.slo import SLO
+
+USERS = 3
+SPEC = dict(turns=3, user_tokens=32, assistant_tokens=32, think_time_s=1.0)
+SYS_POINTS = (64, 192)          # the shared-fraction axis (multiples of 16)
+
+
+def _scenario(sys_tokens, substrate, prefix_cache=True):
+    return Scenario(
+        name=f"conv-{sys_tokens}-{substrate}", mode="concurrent",
+        policy="chunked", total_chips=8, substrate=substrate,
+        prefix_cache=prefix_cache,
+        kv_page_budget=8192 if substrate == "simulator" else 1024,
+        page_size=16,
+        apps=[ScenarioApp("conversation", name="chat", num_requests=USERS,
+                          conversation=ConversationSpec(
+                              system_tokens=sys_tokens, **SPEC))])
+
+
+@functools.lru_cache(maxsize=None)
+def _summary(sys_tokens, substrate):
+    return _scenario(sys_tokens, substrate).run().sim.summary()
+
+
+# ---------------------------------------------------------------- the spec
+def test_spec_defaults_and_round_trip():
+    sp = ConversationSpec()
+    rt = ConversationSpec.from_dict(sp.to_dict())
+    assert rt == sp
+    sp = ConversationSpec(turns=2, system_tokens=48, user_tokens=16,
+                          assistant_tokens=8, think_time_s=0.5,
+                          stagger_s=0.1)
+    assert ConversationSpec.from_dict(sp.to_dict()) == sp
+
+
+def test_spec_rejects_bad_values():
+    with pytest.raises(ValueError):
+        ConversationSpec(turns=0)
+    with pytest.raises(ValueError):
+        ConversationSpec(user_tokens=0)
+    with pytest.raises(ValueError):
+        ConversationSpec(think_time_s=-1.0)
+    with pytest.raises(ValueError):
+        ConversationSpec.from_dict({"turns": 2, "bogus_knob": 1})
+
+
+def test_prompt_growth_is_linear_in_turns():
+    sp = ConversationSpec(turns=4, system_tokens=100, user_tokens=10,
+                          assistant_tokens=20)
+    assert sp.prompt_tokens(0) == 110
+    # each turn appends last turn's assistant block + the new user block
+    for t in range(1, sp.turns):
+        assert sp.prompt_tokens(t) == sp.prompt_tokens(t - 1) + 30
+    assert sp.max_prompt_tokens() == sp.prompt_tokens(sp.turns - 1)
+    assert decode_steps(sp) == math.ceil(20 / DECODE_GROUP)
+    assert session_turn(sp, 0) == (0, 0)
+    assert session_turn(sp, 5) == (1, 1)
+
+
+# ------------------------------------------------------- literal prompts
+def test_conversation_prompt_prefix_consistent_across_turns():
+    sp = ConversationSpec(turns=3, system_tokens=16, user_tokens=8,
+                          assistant_tokens=8)
+    for s in range(2):
+        prev = conversation_prompt(sp, s, 0, vocab=1000)
+        assert prev.shape == (sp.prompt_tokens(0),)
+        for t in range(1, sp.turns):
+            cur = conversation_prompt(sp, s, t, vocab=1000)
+            assert cur.shape == (sp.prompt_tokens(t),)
+            # turn t literally extends turn t-1: this is what the engine's
+            # radix trie shares
+            np.testing.assert_array_equal(cur[:prev.size], prev)
+            prev = cur
+
+
+def test_conversation_prompt_shares_system_block_across_sessions():
+    sp = ConversationSpec(turns=2, system_tokens=32, user_tokens=16,
+                          assistant_tokens=16)
+    a = conversation_prompt(sp, 0, 0, vocab=1000)
+    b = conversation_prompt(sp, 1, 0, vocab=1000)
+    np.testing.assert_array_equal(a[:32], b[:32])    # shared system prompt
+    assert not np.array_equal(a[32:], b[32:])        # private histories
+
+
+# ----------------------------------------------------------------- traces
+def test_conversation_trace_geometry():
+    sp = ConversationSpec(system_tokens=64, **SPEC)
+    cfg = CONFIGS["tinyllama-1.1b"]
+    tr = conversation_trace("chat", cfg, sp, SLO(ttft=2.0, tpot=0.2),
+                            sessions=USERS)
+    assert not tr.closed_loop
+    assert len(tr.requests) == USERS * sp.turns
+    for i, req in enumerate(tr.requests):
+        s, t = session_turn(sp, i)
+        assert req.prefix_key == f"chat/s{s}"
+        assert req.prefix_tokens == sp.prompt_tokens(t)
+        assert req.prefix_sys_key == "chat/sys"
+        assert req.prefix_sys_tokens == sp.system_tokens
+        assert req.kv_tokens == sp.prompt_tokens(t) + sp.assistant_tokens
+        if t:   # think time paces turns within a session
+            prev = tr.requests[i - 1]
+            assert req.arrival_s == pytest.approx(
+                prev.arrival_s + sp.think_time_s)
+
+
+def test_scenario_yaml_round_trip_with_conversation():
+    sc = _scenario(64, "simulator")
+    rt = Scenario.from_yaml(sc.to_yaml())
+    assert rt.prefix_cache is True
+    assert rt.apps[0].conversation == sc.apps[0].conversation
+    doc = rt.run().to_json()
+    assert doc["schema_version"] == "1.4"
+    blk = doc["results"]["concurrent"]["prefix"]
+    assert blk["enabled"] and blk["hit_rate"] > 0
+
+
+# ----------------------------------------- cross-substrate acceptance
+def _point(sys_tokens, substrate):
+    s = _summary(sys_tokens, substrate)
+    sp = ConversationSpec(system_tokens=sys_tokens, **SPEC)
+    foot = sp.max_prompt_tokens() + sp.assistant_tokens
+    peak = s["memory"]["pages_in_use"] * s["memory"]["page_size"]
+    return {"hit_rate": s["prefix"]["hit_rate"],
+            "prefill_frac": 1.0 - s["prefix"]["hit_rate"],
+            "pages_per_user": peak / USERS / foot,
+            "shared_pages": s["prefix"]["shared_pages"]}
+
+
+@pytest.mark.parametrize("sys_tokens", SYS_POINTS)
+def test_engine_vs_sim_hit_rate_parity(sys_tokens):
+    eng = _point(sys_tokens, "engine")
+    sim = _point(sys_tokens, "simulator")
+    assert eng["hit_rate"] > 0
+    assert eng["hit_rate"] == pytest.approx(sim["hit_rate"], rel=0.05)
+    assert eng["shared_pages"] == sim["shared_pages"]
+
+
+@pytest.mark.parametrize("substrate", ["simulator", "engine"])
+def test_sharing_grows_with_shared_fraction(substrate):
+    pts = [_point(s, substrate) for s in SYS_POINTS]
+    for lo, hi in zip(pts, pts[1:]):
+        # more shared prefix -> strictly less prefill work...
+        assert hi["prefill_frac"] < lo["prefill_frac"]
+        # ...and strictly fewer pages per user of their own context
+        assert hi["pages_per_user"] < lo["pages_per_user"]
+
+
+def test_plot_results_surfaces_prefix_block(tmp_path):
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks import plot_results
+
+    docs = [_scenario(s, "simulator").run().to_json() for s in SYS_POINTS]
+    path = tmp_path / "docs.json"
+    path.write_text(json.dumps(docs))
+    rows = [r for d in plot_results.load_docs([str(path)])
+            for r in plot_results.flatten(d)]
+    md = plot_results.to_markdown(rows)
+    assert "prefix_hit_rate" in md and "shared_pages" in md
+    pts = plot_results.prefix_points(docs)
+    assert len(pts) == len(SYS_POINTS)
+    fracs = sorted(x for x, _, _ in pts)
+    assert 0 < fracs[0] < fracs[-1] < 1

@@ -90,6 +90,30 @@ def test_static_partition_splits_chips_evenly():
     assert chips_of == {"a0": 20, "a1": 20, "a2": 20}
 
 
+def test_static_partition_weighted_split():
+    traces = [AppTrace(n, SLO(), []) for n in ("big", "mid", "small")]
+    # proportional: 3:2:1 of 60 chips = 30/20/10, no remainder
+    _, chips = StaticPartitionPolicy(
+        weights={"big": 3, "mid": 2, "small": 1}).partition(traces, 60)
+    assert chips == {"big": 30, "mid": 20, "small": 10}
+    # remainder goes to the largest fractional share: 3:1 of 10 chips
+    # floors to 7/2; the leftover chip lands on big (.5 > .5 tie → order)
+    _, chips = StaticPartitionPolicy(
+        weights={"big": 3}).partition(traces[:2], 10)
+    assert chips == {"big": 8, "mid": 2}
+    assert sum(chips.values()) == 10
+    # every partition keeps at least one chip even when outweighed
+    _, chips = StaticPartitionPolicy(
+        weights={"big": 100}).partition(traces, 8)
+    assert chips["mid"] == chips["small"] == 1
+    assert sum(chips.values()) == 8
+    with pytest.raises(ValueError, match="positive"):
+        StaticPartitionPolicy(weights={"big": 0}).partition(traces, 8)
+    # unweighted stays the historical equal split (seed-parity pinned)
+    _, chips = StaticPartitionPolicy().partition(traces, 256)
+    assert chips == {"big": 85, "mid": 85, "small": 85}
+
+
 # --------------------------------------------------------------- parity
 # Seed-implementation fig5 summary numbers (256 chips, chatbot=10,
 # imagegen=10, live_captions=50), captured before the strategy branching

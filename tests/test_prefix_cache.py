@@ -1,0 +1,201 @@
+"""Radix prefix cache: trie semantics, engine parity (bit-identical token
+streams with sharing on vs. off, including CoW divergence and eviction
+pressure), and family gating."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import CONFIGS
+from repro.models.factory import build_model
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.engine import InferenceEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import Request
+
+
+# ---------------------------------------------------------------- trie
+def _pool(num_pages=16, page_size=4, max_slots=4, max_blocks=8):
+    a = BlockAllocator(num_pages, page_size, max_slots, max_blocks)
+    return a, PrefixCache(a)
+
+
+def _publish(a, trie, slot, tokens):
+    """Alloc a slot over ``tokens``, publish, free — a finished request."""
+    a.alloc_slot(slot, len(tokens))
+    pages = a.slot_page_ids(slot)[:a.pages_needed(len(tokens))]
+    trie.insert(tokens, pages)
+    a.free_slot(slot)
+    return pages
+
+
+def test_trie_exact_and_partial_hits():
+    a, trie = _pool()
+    pages = _publish(a, trie, 0, list(range(10)))   # 3 pages: 4+4+2 tokens
+    assert a.pages_in_use == 3                      # trie keeps them alive
+    hit, got = trie.lookup(list(range(10)))
+    assert hit == 10 and got == pages
+    # divergence mid-page: only the common prefix counts, but the page of
+    # the diverging token is still returned (CoW material)
+    hit, got = trie.lookup([0, 1, 2, 3, 4, 99])
+    assert hit == 5 and got == pages[:2]
+    # divergence at the first token: no hit
+    assert trie.lookup([99, 1, 2]) == (0, [])
+    # a LONGER probe than the cached key stops at the cached tail
+    hit, got = trie.lookup(list(range(12)))
+    assert hit == 10 and got == pages
+
+
+def test_trie_insert_dedups_and_supersedes_tails():
+    a, trie = _pool()
+    _publish(a, trie, 0, list(range(6)))            # pages: [0..3], [4,5]
+    assert trie.stats.nodes == 2
+    # same prefix, longer tail: full page dedups, the short tail [4,5] is
+    # superseded by [4,5,6,7] and its page freed
+    _publish(a, trie, 1, list(range(8)))
+    assert trie.stats.nodes == 2
+    assert a.pages_in_use == 2
+    hit, _ = trie.lookup(list(range(8)))
+    assert hit == 8
+    # a diverging branch adds exactly the diverging page
+    _publish(a, trie, 2, [0, 1, 2, 3, 42, 43])
+    assert trie.stats.nodes == 3
+    hit, _ = trie.lookup([0, 1, 2, 3, 42, 43])
+    assert hit == 6
+
+
+def test_trie_cold_eviction_is_lru_and_skips_hot_pages():
+    a, trie = _pool(num_pages=8)
+    _publish(a, trie, 0, [1] * 4)
+    _publish(a, trie, 1, [2] * 4)
+    trie.lookup([1] * 4)                            # refresh prefix 1
+    [hot] = trie.lookup([2] * 4)[1]
+    a.alloc_slot(3, 4, shared=[hot])                # a slot reads prefix 2
+    assert trie.reclaimable_pages() == 1            # only the cold one
+    assert trie.evict_cold(5) == 1                  # hot page never selected
+    assert a.ref_count(hot) == 2
+    # after the reader leaves, the page is cold again and evictable
+    a.free_slot(3)
+    assert trie.evict_cold(1) == 1
+    assert a.pages_in_use == 0
+
+
+def test_trie_eviction_leaf_first():
+    a, trie = _pool()
+    pages = _publish(a, trie, 0, list(range(12)))   # chain of 3 pages
+    trie.evict_cold(1)
+    hit, got = trie.lookup(list(range(12)))
+    assert hit == 8 and got == pages[:2]            # tail leaf went first
+
+
+# -------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = dataclasses.replace(CONFIGS["tinyllama-1.1b"].reduced(),
+                              num_layers=2)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    return m, params, cfg
+
+
+def _shared_prefix_trace(cfg, n=4, sys_len=12, tail_len=5, max_new=4):
+    """n requests sharing a literal ``sys_len``-token system prompt with
+    distinct tails — the workload prefix sharing exists for."""
+    rng = np.random.default_rng(7)
+    sys_block = rng.integers(0, cfg.vocab_size, sys_len)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, tail_len)
+        prompt = np.concatenate([sys_block, tail]).astype(np.int32)
+        reqs.append(Request(i, prompt, max_new, arrival_s=0.0))
+    return reqs
+
+
+def _run(m, params, cfg, reqs, **kw):
+    eng = InferenceEngine(m, max_seq=64, policy="chunked",
+                          prefill_chunk=4, paged=True, **kw)
+    eng.load_params(params)
+    for r in reqs:
+        eng.submit(Request(r.request_id, np.array(r.prompt),
+                           r.max_new_tokens, arrival_s=r.arrival_s))
+    done = {r.request_id: list(r.tokens_out) for r in eng.run()}
+    assert len(done) == len(reqs)
+    return done, eng
+
+
+def test_prefix_cache_token_streams_bit_identical(tiny_model):
+    """The acceptance pin (dense family): sharing on vs. off produces the
+    SAME token streams while actually hitting — page_size (8) > chunk (4)
+    makes floored hits land mid-page, so CoW forks genuinely fire."""
+    m, params, cfg = tiny_model
+    reqs = _shared_prefix_trace(cfg)
+    want, _ = _run(m, params, cfg, reqs, max_slots=1, page_size=8)
+    got, eng = _run(m, params, cfg, reqs, max_slots=1, page_size=8,
+                    prefix_cache=True)
+    assert got == want
+    st = eng.stats
+    assert st.prefix_hit_tokens > 0      # later users resumed mid-prompt
+    assert st.shared_pages > 0
+    assert st.cow_forks > 0              # diverging tails forked mid-page
+    assert st.prefill_tokens < sum(len(r.prompt) for r in reqs)
+    assert eng.prefix.stats.hits >= 3    # every follower hit
+
+
+def test_prefix_cache_full_hit_skips_whole_prompt(tiny_model):
+    """Identical prompts: the follower's prefill is skipped entirely when
+    the prompt length sits on the chunk grid."""
+    m, params, cfg = tiny_model
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)  # 4 chunks
+    reqs = [Request(i, prompt.copy(), 4, arrival_s=0.0) for i in range(2)]
+    want, _ = _run(m, params, cfg, reqs, max_slots=1, page_size=8)
+    got, eng = _run(m, params, cfg, reqs, max_slots=1, page_size=8,
+                    prefix_cache=True)
+    assert got == want
+    assert got[0] == got[1]              # same prompt, same greedy stream
+    assert eng.stats.prefix_hit_tokens == 16
+    assert eng.stats.prefill_tokens == 16   # only the donor prefilled
+
+
+def test_prefix_cache_parity_under_eviction_pressure(tiny_model):
+    """A pool with real pressure: evictions, cold-prefix reclaim and CoW
+    all interleave, and the streams still match sharing-off exactly."""
+    m, params, cfg = tiny_model
+    reqs = _shared_prefix_trace(cfg, n=6, sys_len=12, tail_len=7, max_new=5)
+    want, _ = _run(m, params, cfg, reqs, max_slots=2, page_size=4,
+                   kv_pages=10)
+    got, eng = _run(m, params, cfg, reqs, max_slots=2, page_size=4,
+                    kv_pages=10, prefix_cache=True)
+    assert got == want
+    assert eng.stats.prefix_hit_tokens > 0
+    assert eng.stats.pages_in_use <= 10
+    # pressure reclaimed cold prefixes rather than growing without bound
+    assert (eng.prefix.stats.evicted_pages > 0
+            or eng.stats.evictions > 0)
+
+
+def test_prefix_cache_requires_paged_and_shareable_family(tiny_model):
+    m, params, cfg = tiny_model
+    assert m.prefix_shareable()
+    with pytest.raises(ValueError, match="paged"):
+        InferenceEngine(m, max_slots=2, max_seq=64, paged=False,
+                        prefix_cache=True)
+    hy = build_model(dataclasses.replace(CONFIGS["jamba-v0.1-52b"].reduced()))
+    assert not hy.prefix_shareable()     # slot-resident SSM state
+    with pytest.raises(ValueError, match="share prefixes"):
+        InferenceEngine(hy, max_slots=2, max_seq=64, paged=True,
+                        prefix_cache=True)
+
+
+def test_prefix_telemetry_and_stats(tiny_model):
+    from repro.telemetry.recorder import TraceRecorder
+    m, params, cfg = tiny_model
+    rec = TraceRecorder()
+    reqs = _shared_prefix_trace(cfg)
+    _, eng = _run(m, params, cfg, reqs, max_slots=1, page_size=8,
+                  prefix_cache=True, recorder=rec)
+    counts = rec.counts()
+    assert counts["prefix_hit"] >= 3
+    assert counts["cow_fork"] == eng.stats.cow_forks > 0
+    assert rec.token_total("prefix_hit") == eng.stats.prefix_hit_tokens

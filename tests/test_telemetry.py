@@ -300,14 +300,24 @@ def test_simulator_request_release_parity_with_engine():
 
 
 # ------------------------------------------------------ deprecation shim
-def test_monitor_metrics_shim_warns_and_reexports(recwarn):
+def test_monitor_metrics_shim_warns_once_per_process_and_reexports():
     import importlib
     import sys
+    import warnings
+    import repro.telemetry as tel
+    # simulate a fresh process: clear the module AND the process-wide flag
     sys.modules.pop("repro.monitor.metrics", None)
+    tel._monitor_metrics_shim_warned = False
     with pytest.warns(DeprecationWarning, match="repro.telemetry"):
         mod = importlib.import_module("repro.monitor.metrics")
-    import repro.telemetry as tel
     assert mod.UtilizationTimeline is tel.UtilizationTimeline
+    assert mod.HostMonitor is tel.HostMonitor
+    # any re-import in the SAME process stays silent (the flag survives
+    # sys.modules.pop because it lives on repro.telemetry, not the shim)
+    sys.modules.pop("repro.monitor.metrics", None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        mod = importlib.import_module("repro.monitor.metrics")
     assert mod.HostMonitor is tel.HostMonitor
 
 
