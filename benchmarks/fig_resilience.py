@@ -1,0 +1,118 @@
+"""Resilience scenario family: goodput under swept fault intensity, on
+BOTH substrates.
+
+A latency-critical app (live captions) shares the pod with an interactive
+chatbot while the ``repro.resilience`` layer injects a co-ordinated fault
+storm whose severity scales with one knob ``x`` in [0, 1]:
+
+* **thermal_throttle** — clocks derate to ``1 - 0.6x`` of nominal for a
+  long window (sustained-load throttling on a fanless device),
+* **engine_stall (crash)** — the engine blacks out for ``6x`` seconds and
+  loses all in-flight state; recovery replays the killed requests,
+* **memory_spike** — an external app steals ``0.5x`` of the KV page pool
+  at runtime, forcing live eviction (refcounted shared prefix pages are
+  structurally protected),
+* **client_timeout** — clients cap their wait and retry with exponential
+  backoff, cancelling past the deadline,
+
+with ``shed_on_slo`` arming admission-time load shedding. ``x = 0`` is the
+clean baseline: its ``faults`` block must be zero-filled and its document
+identical to a scenario with no ``faults:`` key at all.
+
+The headline metric is **goodput** (completed-within-SLO / issued): the
+paper's resilience story is that it should degrade *gracefully* —
+monotonically (within noise) in ``x``, never collapsing to zero while the
+shedding controller keeps the survivors inside their SLOs. Engine rows
+re-run the same seeded schedule on the real InferenceEngine; the clean
+point doubles as the substrate-parity check. All rows are virtual-clock
+deterministic and diff in CI (``BENCH_resilience.json``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_enabled
+from repro.bench import Scenario, ScenarioApp
+
+#: fault-intensity axis (0 = clean baseline)
+INTENSITY_SWEEP = (0.0, 0.4, 0.7, 1.0)
+INTENSITY_SWEEP_SMOKE = (0.0, 1.0)
+NUM_CAPTIONS = 12
+NUM_CHAT = 4
+NUM_CAPTIONS_SMOKE = 4
+NUM_CHAT_SMOKE = 2
+TOTAL_CHIPS = 64
+#: memory_spike needs a finite pool to steal from
+SIM_BUDGET_PAGES = 2048
+ENGINE_BUDGET_PAGES = 256
+
+
+def faults_at(x: float) -> list[dict]:
+    """The fault storm at intensity ``x`` (empty at 0: clean baseline)."""
+    if x <= 0.0:
+        return []
+    return [
+        {"kind": "thermal_throttle", "start_s": 2.0, "duration_s": 30.0,
+         "derate": 1.0 - 0.6 * x},
+        {"kind": "engine_stall", "start_s": 8.0, "duration_s": 6.0 * x,
+         "crash": True},
+        {"kind": "memory_spike", "start_s": 4.0, "duration_s": 20.0,
+         "steal_fraction": 0.5 * x},
+        {"kind": "client_timeout", "timeout_s": 20.0, "max_retries": 2,
+         "backoff_base_s": 0.5, "backoff_cap_s": 4.0},
+    ]
+
+
+def scenario(x: float, *, substrate: str = "simulator") -> Scenario:
+    smoke = smoke_enabled()
+    return Scenario(
+        name=f"resilience-x{x:.1f}-{substrate}",
+        mode="concurrent", policy="slo_aware", total_chips=TOTAL_CHIPS,
+        substrate=substrate, seed=7, page_size=16,
+        kv_page_budget=(SIM_BUDGET_PAGES if substrate == "simulator"
+                        else ENGINE_BUDGET_PAGES),
+        faults=faults_at(x),
+        shed_on_slo=({"attainment": 0.7, "window": 8, "action": "shed"}
+                     if x > 0.0 else None),
+        apps=[ScenarioApp("live_captions",
+                          num_requests=(NUM_CAPTIONS_SMOKE if smoke
+                                        else NUM_CAPTIONS)),
+              ScenarioApp("chatbot",
+                          num_requests=(NUM_CHAT_SMOKE if smoke
+                                        else NUM_CHAT))])
+
+
+def _derived(fb: dict, extra: str = "") -> str:
+    s = (f"goodput={fb['goodput']:.3f};"
+         f"injected={fb['injected']};"
+         f"issued={fb['issued']};"
+         f"completed_ok={fb['completed_ok']};"
+         f"retries={fb['retries']};"
+         f"timeouts={fb['timeouts']};"
+         f"cancels={fb['cancels']};"
+         f"sheds={fb['sheds']};"
+         f"replays={fb['replays']};"
+         f"ttr_s={fb['time_to_recover_s']:.3f}")
+    return s + (";" + extra if extra else "")
+
+
+def run() -> list[str]:
+    sweep = INTENSITY_SWEEP_SMOKE if smoke_enabled() else INTENSITY_SWEEP
+    rows = []
+    sim_goodput = {}
+    for x in sweep:
+        s = scenario(x).run().sim.summary()
+        fb = s["faults"]
+        sim_goodput[x] = fb["goodput"]
+        rows.append(row(f"resilience_sim_x{x:.1f}",
+                        s["makespan_s"] * 1e6, _derived(fb)))
+    for x in sweep:
+        s = scenario(x, substrate="engine").run().sim.summary()
+        fb = s["faults"]
+        parity = (f"sim_goodput={sim_goodput[x]:.3f};"
+                  f"parity_gap={abs(fb['goodput'] - sim_goodput[x]):.4f}")
+        rows.append(row(f"resilience_engine_x{x:.1f}",
+                        s["makespan_s"] * 1e6, _derived(fb, parity)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -8,13 +8,46 @@
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import platform
+import signal
 import sys
 import time
 import traceback
 
 BENCH_SCHEMA_VERSION = 1
+
+#: --smoke default for --row-timeout: a hung benchmark row fails fast with
+#: its suite named instead of stalling CI until the job-level kill
+SMOKE_ROW_TIMEOUT_S = 120.0
+
+
+class RowTimeout(Exception):
+    """A benchmark suite exceeded the per-row wall-clock budget."""
+
+
+@contextlib.contextmanager
+def row_deadline(suite: str, seconds: float):
+    """Raise :class:`RowTimeout` (naming the suite) if the body runs longer
+    than ``seconds``. SIGALRM-based, so it interrupts a wedged row rather
+    than waiting for it; no-op where SIGALRM is unavailable (Windows) or
+    the budget is 0."""
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise RowTimeout(f"suite {suite!r} exceeded the per-row "
+                         f"{seconds:g}s timeout")
+
+    prev = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 def _write_json(path: str, suites: list[tuple[str, list[str]]],
@@ -54,7 +87,15 @@ def main(argv=None) -> None:
                          "figures: the analytic pod simulator (default) or "
                          "the real InferenceEngine under a virtual cost "
                          "clock")
+    ap.add_argument("--row-timeout", type=float, default=None,
+                    help="wall-clock seconds each suite may spend producing "
+                         "a row before it is failed with RowTimeout (0 "
+                         "disables; default: 0, or "
+                         f"{SMOKE_ROW_TIMEOUT_S:.0f} under --smoke)")
     args = ap.parse_args(argv)
+    row_timeout = args.row_timeout
+    if row_timeout is None:
+        row_timeout = SMOKE_ROW_TIMEOUT_S if args.smoke else 0.0
 
     from benchmarks import common
     if args.smoke:
@@ -64,7 +105,8 @@ def main(argv=None) -> None:
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
                             fig7_workflow, fig_memory, fig_prefix,
-                            kernel_bench, roofline_table, telemetry_bench)
+                            fig_resilience, kernel_bench, roofline_table,
+                            telemetry_bench)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
@@ -73,6 +115,7 @@ def main(argv=None) -> None:
         ("fig7_workflow", fig7_workflow.run),
         ("fig_memory", fig_memory.run),
         ("fig_prefix", fig_prefix.run),
+        ("fig_resilience", fig_resilience.run),
         ("appendix_platforms", appendix_platforms.run),
         ("engine_bench", engine_bench.run),
         ("telemetry_bench", telemetry_bench.run),
@@ -96,9 +139,21 @@ def main(argv=None) -> None:
         lines: list[str] = []
         collected.append((name, lines))  # keep partial rows on failure
         try:
-            for line in fn():
+            # the deadline is re-armed per row, so generator-style suites
+            # get a true per-row budget; list-returning suites spend it all
+            # producing the first "row" (the whole list)
+            with row_deadline(name, row_timeout):
+                it = iter(fn())
+            while True:
+                with row_deadline(name, row_timeout):
+                    line = next(it, None)
+                if line is None:
+                    break
                 print(line, flush=True)
                 lines.append(line)
+        except RowTimeout as e:
+            failures.append(name)
+            print(f"{name}_TIMEOUT,0.0,{e}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             print(f"{name}_FAILED,0.0,{e!r}", flush=True)

@@ -28,9 +28,10 @@ _EXPORTS = {
     "conversation": ["ConversationSpec", "conversation_prompt",
                      "conversation_trace"],
     "scenario": ["SCHEMA_VERSION", "SUBSTRATES", "Scenario", "ScenarioApp",
-                 "ScenarioResult", "run_workflow_spec"],
+                 "ScenarioError", "ScenarioResult", "run_workflow_spec"],
     "engine_runner": ["CostedRequest", "engine_model",
                       "run_scenario_on_engine"],
+    "seeding": ["child_rng", "child_seed", "child_sequence"],
 }
 _ATTR_TO_MODULE = {attr: mod for mod, attrs in _EXPORTS.items()
                    for attr in attrs}

@@ -58,10 +58,12 @@ from repro.bench.conversation import (ConversationSpec, conversation_prompt,
                                       session_turn)
 from repro.bench.policy import get_policy
 from repro.bench.scenario import SETUP_S, Scenario, ScenarioResult
+from repro.bench.seeding import child_seed
 from repro.core.dag import Phase, build_dag
 from repro.core.apps import app_from_task
 from repro.core.simulator import AppTrace, SimResult, UtilSample
 from repro.core.slo import RequestRecord, SLOReport
+from repro.resilience import FaultStats, SloTracker, time_to_recover
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
 
@@ -171,9 +173,197 @@ class _EngineRun:
     seen: int = 0                    # engine.done entries already collected
 
 
+class _FaultController:
+    """Engine-substrate fault driver (repro.resilience).
+
+    Applies the SAME resolved :class:`FaultSchedule` the pod simulator
+    consumes to the per-partition engines: thermal/stall windows reach the
+    engines through their ``time_warp`` hook (set at construction), so
+    this controller only owns the *stateful* faults — crash instants
+    (``InferenceEngine.crash_active``), memory-spike page reservations
+    (``steal_pages`` / ``release_stolen``), client timeouts with
+    backoff-retry/cancel, and the shed-on-SLO admission gate. All
+    bookkeeping mirrors the simulator's event handlers so the two
+    substrates score the same ``faults`` block within parity tolerance."""
+
+    def __init__(self, fsched, shed_cfg, policy, traces: dict,
+                 recorder=None):
+        self.fsched = fsched
+        self.shed_cfg = shed_cfg
+        self.policy = policy
+        self.traces = traces
+        self._rec = recorder
+        self.fstats = FaultStats()
+        self.client = fsched.client if fsched is not None else None
+        self.tracker = (SloTracker(shed_cfg.window)
+                        if shed_cfg is not None else None)
+        if fsched is not None:
+            self.fstats.injected = fsched.injected_count()
+        #: per-run ordered (t, kind, payload) action queues (consumed as
+        #: each engine's virtual clock crosses t)
+        self.actions: dict[int, list] = {}
+        self.attempts: dict[tuple, int] = {}
+        self.first_issue: dict[tuple, float] = {}
+        self.issue_t: dict[tuple, float] = {}
+        self.cancelled: set[tuple] = set()
+
+    def build_actions(self, parts: list) -> None:
+        if self.fsched is None:
+            return
+        for i, part in enumerate(parts):
+            acts = []
+            for w in self.fsched.stalls:
+                if w.crash and w.matches(part):
+                    acts.append((w.t0, "crash", w))
+            for sp in self.fsched.spikes:
+                acts.append((sp.t0, "spike", sp))
+                acts.append((sp.t1, "spike", sp))
+            acts.sort(key=lambda a: a[0])
+            self.actions[i] = acts
+
+    def next_action_t(self, run_i: int) -> float:
+        acts = self.actions.get(run_i)
+        return acts[0][0] if acts else math.inf
+
+    # --------------------------------------------------------- per-tick
+    def poll(self, runs: list, completed: dict) -> None:
+        """Apply every action each engine's clock has crossed, then scan
+        for client timeouts — called once per driver iteration."""
+        for i, run in enumerate(runs):
+            eng = run.engine
+            now = eng.now()
+            acts = self.actions.get(i)
+            while acts and acts[0][0] <= now + 1e-12:
+                t, kind, _ = acts.pop(0)
+                if kind == "crash":
+                    eng.crash_active()
+                elif kind == "spike":
+                    self._apply_spike(eng, t)
+        if self.client is not None:
+            self._poll_timeouts(runs, completed)
+
+    def _apply_spike(self, eng, t: float) -> None:
+        """Re-derive the external hold from the fraction of spikes active
+        just after ``t`` (handles overlapping spikes on one boundary)."""
+        if eng.allocator is None:
+            return
+        frac = sum(sp.steal_fraction for sp in self.fsched.spikes
+                   if sp.t0 <= t + 1e-12 < sp.t1)
+        eng.release_stolen()
+        want = min(int(frac * eng.kv_pages), eng.kv_pages - 1)
+        if want > 0:
+            eng.steal_pages(want)
+
+    def _poll_timeouts(self, runs: list, completed: dict) -> None:
+        cl = self.client
+        for run in runs:
+            eng = run.engine
+            now = eng.now()
+            for r in list(eng.active) + list(eng.waiting):
+                if r is None or not cl.applies_to(r.app):
+                    continue
+                key = (r.app, r.trace_idx)
+                if key in self.cancelled or key in completed:
+                    continue
+                issued = self.issue_t.get(key)
+                if issued is None or now - issued < cl.timeout_s:
+                    continue
+                self.fstats.timeouts += 1
+                if self._rec is not None:
+                    self._rec.instant("timeout", r.app, r.request_id, now)
+                eng.abort(r.request_id)
+                att = self.attempts.get(key, 0) + 1
+                self.attempts[key] = att
+                deadline = (self.first_issue[key] + cl.deadline_s
+                            if cl.deadline_s > 0 else math.inf)
+                backoff = cl.backoff_s(att)
+                if att > cl.max_retries or now + backoff > deadline:
+                    self.cancelled.add(key)
+                    self.fstats.cancels += 1
+                    completed[key] = now   # the gate resolves: chains advance
+                    if self.tracker is not None:  # a cancel IS an SLO miss
+                        self.tracker.note(r.app, False)
+                    if self._rec is not None:
+                        self._rec.instant("cancel", r.app, r.request_id, now)
+                else:
+                    self.fstats.retries += 1
+                    # full client-side restart: state reset, re-submitted
+                    # after the backoff (arrival_s gates engine admission)
+                    r.tokens_out = []
+                    r.t_tokens = []
+                    r.t_prefill = []
+                    r.t_first_token = None
+                    r.t_done = None
+                    r.arrival_s = now + backoff
+                    self.issue_t[key] = now + backoff
+                    eng.submit(r)
+                    if self._rec is not None:
+                        self._rec.instant("retry", r.app, r.request_id, now)
+
+    # ------------------------------------------------------- admission
+    def on_release(self, p: "_Pending", completed: dict) -> bool:
+        """Shed-on-SLO gate at release time; False = shed (never submit —
+        but the completion gate resolves so dependent chains advance)."""
+        self.fstats.issued += 1
+        req = p.request
+        key = (req.app, req.trace_idx)
+        decision = "admit"
+        if (self.tracker is not None
+                and self.tracker.should_degrade(req.app, self.shed_cfg)):
+            decision = self.policy.shed_decision(
+                req.app, req, self.tracker.rolling(req.app), self.shed_cfg,
+                req.arrival_s)
+        if decision == "shed":
+            self.fstats.sheds += 1
+            completed[key] = req.arrival_s
+            if self._rec is not None:
+                self._rec.instant("shed", req.app, req.request_id,
+                                  req.arrival_s)
+            return False
+        if decision == "downgrade":
+            self.fstats.downgrades += 1
+            p.background = True          # demoted: loses its deadline
+            req.priority = max(req.priority, 1)
+            if self._rec is not None:
+                self._rec.instant("downgrade", req.app, req.request_id,
+                                  req.arrival_s)
+        if self.client is not None and self.client.applies_to(req.app):
+            self.first_issue.setdefault(key, req.arrival_s)
+            self.issue_t[key] = req.arrival_s
+            self.attempts.setdefault(key, 0)
+        return True
+
+    def note_done(self, r) -> None:
+        """Feed the rolling SLO tracker as completions land (online — the
+        shed gate needs attainment DURING the run, not post-hoc)."""
+        if self.tracker is None:
+            return
+        trace = self.traces[r.app]
+        rec = _record_for(r, trace,
+                          self.first_issue.get((r.app, r.trace_idx)))
+        self.tracker.note(r.app, rec.meets_slo(trace.slo))
+
+    # -------------------------------------------------------- finalize
+    def finalize(self, runs: list, recs: dict,
+                 part_of: dict) -> FaultStats:
+        self.fstats.replays = sum(r.engine.stats.replays for r in runs)
+        if self.fsched is not None and self.fsched.stalls:
+            def finish_of(w):
+                for name, rl in recs.items():
+                    if not w.matches(part_of[name]):
+                        continue
+                    for rec in rl:
+                        if rec.e2e_s is not None:
+                            yield (rec.arrival_s, rec.arrival_s + rec.e2e_s)
+            self.fstats.time_to_recover_s = time_to_recover(
+                self.fsched.stalls, finish_of)
+        return self.fstats
+
+
 def _drive(runs: list[_EngineRun], pending: list[_Pending],
            total_chips: int,
-           recorder=None) -> tuple[dict, list[UtilSample]]:
+           recorder=None, faults: Optional[_FaultController] = None
+           ) -> tuple[dict, list[UtilSample]]:
     """Event loop over one or more engines (one per chip partition) sharing
     a single virtual timeline. Always steps the laggard engine among those
     with runnable work so cross-partition dependency releases stay causal;
@@ -183,12 +373,16 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
     waiting = list(pending)
     n_total = len(pending)
     for _ in range(_MAX_ITERS):
+        if faults is not None:
+            faults.poll(runs, completed)
         for run in runs:
             done = run.engine.done
             while run.seen < len(done):
                 r = done[run.seen]
                 run.seen += 1
                 completed[(r.app, r.trace_idx)] = r.t_done
+                if faults is not None:
+                    faults.note_done(r)
         if len(completed) >= n_total:
             return completed, util
         still = []
@@ -199,6 +393,9 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                 if p.pred is not None:
                     arr = max(arr, completed[p.pred])
                 p.request.arrival_s = arr
+                if faults is not None and not faults.on_release(p,
+                                                               completed):
+                    continue   # shed: dropped without ever being submitted
                 if not p.background:
                     p.request.deadline_s = arr + p.deadline_hint_s
                 if recorder is not None and p.dep_gates:
@@ -233,8 +430,13 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                     "gated on completions that can no longer happen")
             run = min(idle, key=lambda r: min(w.arrival_s
                                               for w in r.engine.waiting))
-            run.engine.advance_to(min(w.arrival_s
-                                      for w in run.engine.waiting))
+            tgt = min(w.arrival_s for w in run.engine.waiting)
+            if faults is not None:
+                # don't jump past a pending crash/spike boundary: the
+                # action must apply before admissions at the next arrival
+                tgt = min(tgt, max(faults.next_action_t(runs.index(run)),
+                                   run.engine.now() + 1e-9))
+            run.engine.advance_to(tgt)
     raise RuntimeError("engine scenario exceeded the iteration budget")
 
 
@@ -302,40 +504,51 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
     return out
 
 
-def _records(runs: list[_EngineRun],
-             traces: dict[str, AppTrace]) -> dict[str, list[RequestRecord]]:
+def _record_for(r, trace: AppTrace,
+                arrival: Optional[float] = None) -> RequestRecord:
+    """One request's SLO record from engine timing. ``arrival`` overrides
+    the request's (possibly retry-shifted) ``arrival_s`` with the FIRST
+    issue time, so a timed-out-then-retried request is scored on its
+    client-perceived latency, exactly as on the simulator substrate."""
+    arr = r.arrival_s if arrival is None else arrival
+    rec = RequestRecord(r.app, r.trace_idx, arr)
+    rec.e2e_s = r.t_done - arr
+    if r.decode_tokens_full > 0:
+        if r.t_first_token is not None:
+            rec.ttft_s = r.t_first_token - arr
+        if r.decode_tokens_full > 1 and len(r.t_tokens) > 1:
+            rec.tpot_s = ((r.t_tokens[-1] - r.t_tokens[0])
+                          / (r.decode_tokens_full - 1))
+        else:
+            rec.tpot_s = 0.0
+    if trace.slo.step is not None:
+        # the source chain had `prefill_items` separately-schedulable
+        # steps (denoise iterations); the engine prompt collapses them,
+        # so resample the per-dispatch timestamps at item boundaries —
+        # a step's span then reflects the policy's actual interleaving
+        # at the same granularity the simulator dispatches items
+        times = r.t_prefill or r.t_tokens
+        m = max(r.prefill_items, 1) if isinstance(r, CostedRequest) \
+            else len(times)
+        k = len(times)
+        prev = arr
+        for i in range(min(m, k)):
+            t = times[min(k - 1, math.ceil(k * (i + 1) / m) - 1)]
+            rec.step_times_s.append(t - prev)
+            prev = t
+    return rec
+
+
+def _records(runs: list[_EngineRun], traces: dict[str, AppTrace],
+             first_issue: Optional[dict] = None
+             ) -> dict[str, list[RequestRecord]]:
     """Per-request SLO records from engine timing, in completion order."""
     recs: dict[str, list[RequestRecord]] = {name: [] for name in traces}
     all_done = sorted((r for run in runs for r in run.engine.done),
                       key=lambda r: (r.t_done, r.app, r.trace_idx))
     for r in all_done:
-        trace = traces[r.app]
-        rec = RequestRecord(r.app, r.trace_idx, r.arrival_s)
-        rec.e2e_s = r.t_done - r.arrival_s
-        if r.decode_tokens_full > 0:
-            if r.t_first_token is not None:
-                rec.ttft_s = r.t_first_token - r.arrival_s
-            if r.decode_tokens_full > 1 and len(r.t_tokens) > 1:
-                rec.tpot_s = ((r.t_tokens[-1] - r.t_tokens[0])
-                              / (r.decode_tokens_full - 1))
-            else:
-                rec.tpot_s = 0.0
-        if trace.slo.step is not None:
-            # the source chain had `prefill_items` separately-schedulable
-            # steps (denoise iterations); the engine prompt collapses them,
-            # so resample the per-dispatch timestamps at item boundaries —
-            # a step's span then reflects the policy's actual interleaving
-            # at the same granularity the simulator dispatches items
-            times = r.t_prefill or r.t_tokens
-            m = max(r.prefill_items, 1) if isinstance(r, CostedRequest) \
-                else len(times)
-            k = len(times)
-            prev = r.arrival_s
-            for i in range(min(m, k)):
-                t = times[min(k - 1, math.ceil(k * (i + 1) / m) - 1)]
-                rec.step_times_s.append(t - prev)
-                prev = t
-        recs[r.app].append(rec)
+        arrival = (first_issue or {}).get((r.app, r.trace_idx))
+        recs[r.app].append(_record_for(r, traces[r.app], arrival))
     return recs
 
 
@@ -359,6 +572,13 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
     run_idx_of = {p: i for i, p in enumerate(parts)}
     rid = itertools.count()
 
+    # resilience: the SAME seeded schedule the simulator substrate resolves
+    # (Scenario.fault_schedule is a fresh, identically-seeded instance)
+    fsched = sc.fault_schedule()
+    shed_cfg = sc.shed_config()
+    if fsched is not None:
+        fsched.bind_partitions(part_of)
+
     pending: list[_Pending] = []
     for t_i, trace in enumerate(traces):
         part = part_of[trace.name]
@@ -377,7 +597,8 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                     return [(d, min(j, n - 1)) for d, n in deps if n > 0]
         pending += _build_pending(
             trace, run_idx_of[part], chips=chips_of[part],
-            chip=chip, vocab=ecfg.vocab_size, seed=sc.seed + t_i, rid=rid,
+            chip=chip, vocab=ecfg.vocab_size,
+            seed=child_seed(sc.seed, "prompts", t_i), rid=rid,
             chunk_target_s=sc.chunk_target_s, setup_s=setup_s,
             dep_gates_for=dep_fn, priority=prio,
             conv=(conv_of or {}).get(trace.name),
@@ -400,6 +621,8 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
     if getattr(sc, "telemetry", False):
         from repro.telemetry import TraceRecorder
         recorder = TraceRecorder()
+    if fsched is not None and recorder is not None:
+        fsched.emit(recorder)
 
     runs = []
     for p_i, part in enumerate(parts):
@@ -424,12 +647,20 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                               recorder=recorder,
                               recorder_chips=chips_of[part],
                               recorder_label=str(part),
-                              request_work=_request_work)
+                              request_work=_request_work,
+                              time_warp=(fsched.time_warp(part)
+                                         if fsched is not None else None))
         eng.load_params(params)
         runs.append(_EngineRun(engine=eng, chips=chips_of[part]))
 
-    completed, util = _drive(runs, pending, total_chips, recorder)
-    recs = _records(runs, {t.name: t for t in traces})
+    faults = None
+    if fsched is not None or shed_cfg is not None:
+        faults = _FaultController(fsched, shed_cfg, policy,
+                                  {t.name: t for t in traces}, recorder)
+        faults.build_actions(parts)
+    completed, util = _drive(runs, pending, total_chips, recorder, faults)
+    recs = _records(runs, {t.name: t for t in traces},
+                    first_issue=faults.first_issue if faults else None)
     reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
     paged = [r.engine for r in runs if r.engine.paged]
     mem = {}
@@ -470,6 +701,8 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             prefix_cow_forks=sum(e.stats.cow_forks for e in engines))
     sim = SimResult(reports=reports, util=util, total_chips=total_chips,
                     chip=chip, strategy=policy.name, trace=recorder,
+                    fault_stats=(faults.finalize(runs, recs, part_of)
+                                 if faults is not None else None),
                     **mem, **pfx)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed

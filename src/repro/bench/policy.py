@@ -156,6 +156,19 @@ class SchedulingPolicy:
         engine-side state hook (mirror of the simulator's
         :meth:`on_dispatch`; deficit/fair-queueing policies charge here)."""
 
+    # ------------------------------------------------- degradation hook
+    def shed_decision(self, app: str, req, attainment: float,
+                      cfg, now: float) -> str:
+        """Graceful-degradation triage (repro.resilience), consulted by
+        BOTH substrates at admission time once the app's rolling SLO
+        attainment has crossed ``cfg.attainment`` (a
+        :class:`~repro.resilience.ShedConfig`). Return ``"shed"`` to drop
+        the request, ``"downgrade"`` to demote it to background priority,
+        or ``"admit"`` to wave it through anyway. The default honours the
+        scenario's configured action; policies override for smarter
+        triage (e.g. shed only background apps)."""
+        return cfg.action
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"{type(self).__name__}(name={self.name!r})"
 

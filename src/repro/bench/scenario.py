@@ -58,15 +58,19 @@ import yaml
 
 from repro.bench.arrival import ArrivalProcess, make_arrival
 from repro.bench.conversation import ConversationSpec, conversation_trace
-from repro.bench.policy import SchedulingPolicy, get_policy
+from repro.bench.policy import (SchedulingPolicy, available_policies,
+                                get_policy)
+from repro.bench.seeding import child_rng, child_seed
 from repro.core.apps import AppDef, DEFAULT_ARCH, app_from_task, make_app
 from repro.core.dag import Phase, build_dag
 from repro.core.simulator import AppTrace, PodSimulator, SimResult
 from repro.core.slo import SLO
 from repro.core.workflow import WorkflowSpec, parse_workflow
+from repro.resilience import (FaultSchedule, MemorySpike, ShedConfig,
+                              make_fault)
 from repro.roofline.hw import ChipSpec, get_chip
 
-SCHEMA_VERSION = "1.4"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.5"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
@@ -78,11 +82,24 @@ SCHEMA_VERSION = "1.4"   # 1.1: + top-level "substrate", scenario.substrate
                          #      pages, CoW forks) when the scenario sets
                          #      prefix_cache: true; + "conversation" app
                          #      key (multi-turn sessions) in the spec
+                         # 1.5: + per-sim ALWAYS-present "faults" block
+                         #      (injected/retries/timeouts/cancels/sheds/
+                         #      goodput/time-to-recover); + "faults" and
+                         #      "shed_on_slo" scenario keys
+                         #      (repro.resilience) — zero-filled and absent
+                         #      respectively on fault-free runs
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
 SUBSTRATES = ("simulator", "engine")
 RELEASES = ("request", "node")   # workflow dependency-release granularity
+
+
+class ScenarioError(ValueError):
+    """A scenario spec is malformed — unknown key, unknown registry name
+    (policy/arrival/fault), or an invalid fault/shed configuration. Always
+    raised at LOAD time with the offending key and the valid options, so a
+    YAML typo cannot silently run a different benchmark."""
 
 
 # --------------------------------------------------------------------- spec
@@ -122,6 +139,12 @@ class ScenarioApp:
     @classmethod
     def from_dict(cls, d: dict) -> "ScenarioApp":
         d = dict(d)
+        valid = ({f.name for f in dataclasses.fields(cls)}
+                 | {"app", "kv_cache"})
+        unknown = sorted(set(d) - valid)
+        if unknown:
+            raise ScenarioError(
+                f"unknown app key(s) {unknown}; valid keys: {sorted(valid)}")
         app_type = d.pop("app", None) or d.pop("app_type")
         slo = d.pop("slo", None)
         arrival = d.pop("arrival", None)
@@ -131,9 +154,13 @@ class ScenarioApp:
         conv = d.pop("conversation", None)
         if conv is not None and not isinstance(conv, ConversationSpec):
             conv = ConversationSpec.from_dict(conv)
+        try:
+            arrival = make_arrival(arrival)
+        except ValueError as e:
+            raise ScenarioError(str(e)) from e
         return cls(app_type=app_type,
                    slo=SLO.parse(slo) if slo is not None else None,
-                   arrival=make_arrival(arrival), conversation=conv, **d)
+                   arrival=arrival, conversation=conv, **d)
 
     def to_dict(self) -> dict:
         d: dict = {"app": self.app_type}
@@ -187,6 +214,14 @@ class Scenario:
     #: in ``to_json()``: utilization/bandwidth timelines, event counts,
     #: Gantt spans — schema-identical across substrates (repro.telemetry)
     telemetry: bool = False
+    #: fault injection (schema 1.5, repro.resilience): list of fault spec
+    #: dicts (``{"kind": "thermal_throttle", ...}``) or FaultSpec objects.
+    #: Both substrates resolve the SAME seeded schedule from this list.
+    faults: list = field(default_factory=list)
+    #: shed-on-SLO degradation hook (schema 1.5): dict / ShedConfig / true.
+    #: When rolling attainment drops below the threshold, the scheduling
+    #: policy's ``shed_decision`` sheds or downgrades new admissions.
+    shed_on_slo: Union[None, bool, dict, ShedConfig] = None
     #: arrival rates for :meth:`sweep` (one ScenarioResult per rate);
     #: serialized so a sweep is one YAML document
     sweep_rates: list = field(default_factory=list)
@@ -206,6 +241,17 @@ class Scenario:
             raise ValueError(
                 f"unknown workflow_release {self.workflow_release!r}; "
                 f"expected one of {RELEASES}")
+        try:
+            self.faults = [make_fault(f) for f in self.faults]
+            self.shed_on_slo = ShedConfig.from_dict(self.shed_on_slo)
+        except ValueError as e:
+            raise ScenarioError(str(e)) from e
+        if (any(isinstance(f, MemorySpike) for f in self.faults)
+                and self.kv_page_budget is None and self.memory_mb is None):
+            raise ScenarioError(
+                "memory_spike faults steal from the KV pool, which this "
+                "scenario leaves unconstrained; set kv_page_budget or "
+                "memory_mb")
 
     # ------------------------------------------------------------- helpers
     @property
@@ -243,13 +289,41 @@ class Scenario:
             return self.workflow
         return parse_workflow(self.workflow)
 
+    def fault_schedule(self) -> Optional[FaultSchedule]:
+        """A FRESH resolved :class:`FaultSchedule` (seeded from the
+        scenario seed's ``faults`` child stream). Each substrate constructs
+        its own instance, so start jitters resolve identically on both —
+        the parity guarantee of the resilience layer."""
+        if not self.faults:
+            return None
+        return FaultSchedule(self.faults, rng=child_rng(self.seed, "faults"))
+
+    def shed_config(self) -> Optional[ShedConfig]:
+        return self.shed_on_slo   # normalized in __post_init__
+
     # ------------------------------------------------------- serialization
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
         d = dict(d)
+        valid = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - valid)
+        if unknown:
+            raise ScenarioError(
+                f"unknown scenario key(s) {unknown}; valid keys: "
+                f"{sorted(valid)}")
+        pol = d.get("policy")
+        if isinstance(pol, str) and pol not in available_policies():
+            raise ScenarioError(
+                f"unknown policy {pol!r}; available: "
+                f"{', '.join(available_policies())}")
         apps = [a if isinstance(a, ScenarioApp) else ScenarioApp.from_dict(a)
                 for a in d.pop("apps", [])]
-        return cls(apps=apps, **d)
+        try:
+            return cls(apps=apps, **d)
+        except ScenarioError:
+            raise
+        except (TypeError, ValueError) as e:
+            raise ScenarioError(str(e)) from e
 
     @classmethod
     def from_yaml(cls, src: Union[str, dict]) -> "Scenario":
@@ -282,6 +356,10 @@ class Scenario:
             d["telemetry"] = True
         if self.prefix_cache:
             d["prefix_cache"] = True
+        if self.faults:
+            d["faults"] = [f.to_dict() for f in self.faults]
+        if self.shed_on_slo is not None:
+            d["shed_on_slo"] = self.shed_on_slo.to_dict()
         if self.sweep_rates:
             d["sweep_rates"] = list(self.sweep_rates)
         if self.apps:
@@ -306,7 +384,9 @@ class Scenario:
                             chunk_target_s=self.chunk_target_s,
                             kv_token_budget=self.kv_token_budget(),
                             page_size=self.page_size,
-                            prefix_cache=self.prefix_cache)
+                            prefix_cache=self.prefix_cache,
+                            faults=self.fault_schedule(),
+                            shed=self.shed_config())
 
     def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
                start_s: float = 0.0) -> AppTrace:
@@ -316,7 +396,8 @@ class Scenario:
                                       start_s=start_s,
                                       background=app.background)
         return app.sim_trace(sa.num_requests, start_s=start_s,
-                             seed=self.seed + idx, arrival=sa.arrival)
+                             seed=child_seed(self.seed, "arrival", idx),
+                             arrival=sa.arrival)
 
     def run(self) -> "ScenarioResult":
         names = [sa.name or sa.app_type for sa in self.apps]
@@ -385,7 +466,8 @@ class Scenario:
             self.workflow_spec(), total_chips=self.total_chips,
             policy=self.policy, chip=self.chip_spec,
             chunk_target_s=self.chunk_target_s, max_rounds=max_rounds,
-            release=self.workflow_release)
+            release=self.workflow_release,
+            faults=self.fault_schedule(), shed=self.shed_config())
         return ScenarioResult(scenario=self, sims={"workflow": sim},
                               node_finish_s=finish, e2e_s=e2e)
 
@@ -452,7 +534,8 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
                       chip: Optional[ChipSpec] = None,
                       chunk_target_s: float = 0.05,
                       max_rounds: int = 12,
-                      release: str = "node"
+                      release: str = "node",
+                      faults=None, shed=None
                       ) -> tuple[SimResult, dict[str, float], float]:
     """Execute a workflow DAG on the pod: the DAG scheduler releases each
     node's trace when its dependencies complete; the simulator runs ONCE
@@ -501,7 +584,8 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
                              closed_loop=trace.closed_loop)
             traces.append(trace)
         sim = PodSimulator(total_chips, policy=policy, chip=chip,
-                           chunk_target_s=chunk_target_s)
+                           chunk_target_s=chunk_target_s,
+                           faults=faults, shed=shed)
         result = sim.run(traces)
         new_fin = {}
         for name in exec_nodes:

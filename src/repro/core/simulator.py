@@ -17,16 +17,19 @@ utilization timeline (SMACT/SMOCC analogue), and energy via the power model.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import math
 import warnings
 from dataclasses import dataclass
-from typing import Union
+from typing import Optional, Union
 
 from repro.bench.policy import SchedulingPolicy, get_policy
 from repro.core.costs import WorkItem
 from repro.core.slo import SLO, RequestRecord, SLOReport
+from repro.resilience import (FaultSchedule, FaultStats, ShedConfig,
+                              SloTracker, time_to_recover)
 from repro.roofline.hw import ChipSpec, TPU_V5E
 from repro.telemetry.recorder import TraceRecorder
 
@@ -92,6 +95,8 @@ class PodSimulator:
                  kv_token_budget: Union[int, None] = None,
                  page_size: int = 16,
                  prefix_cache: bool = False,
+                 faults: Optional[FaultSchedule] = None,
+                 shed: Optional[ShedConfig] = None,
                  strategy: Union[str, None] = None):
         if strategy is not None:
             warnings.warn("PodSimulator(strategy=...) is deprecated; use "
@@ -105,6 +110,11 @@ class PodSimulator:
         self.kv_token_budget = kv_token_budget
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        #: resilience (repro.resilience): injected fault schedule + the
+        #: shed-on-SLO admission controller — None keeps the clean path
+        #: bit-identical to the pre-resilience simulator
+        self.faults = faults
+        self.shed = shed
         self._seq = itertools.count()
 
     @property
@@ -122,6 +132,17 @@ class PodSimulator:
         telem = TraceRecorder()
         apps = {t.name: t for t in traces}
         partition_of, chips_of = policy.partition(traces, self.total_chips)
+
+        # ---- resilience: fault schedule + shed-on-SLO controller --------
+        fsched = self.faults
+        fstats = FaultStats()
+        shed_cfg = self.shed
+        tracker = SloTracker(shed_cfg.window) if shed_cfg is not None else None
+        client = fsched.client if fsched is not None else None
+        if fsched is not None:
+            fsched.bind_partitions(partition_of)
+            fstats.injected = fsched.injected_count()
+            fsched.emit(telem)
 
         queues: dict[str, list] = {p: [] for p in chips_of}
         busy_until: dict[str, float] = {p: 0.0 for p in chips_of}
@@ -141,8 +162,29 @@ class PodSimulator:
                 for r in t.requests:
                     heapq.heappush(events, (r.arrival_s, next(self._seq),
                                             "arrival", r))
+        if fsched is not None:
+            # crash instants kill in-flight state; spike starts force live
+            # eviction down to the shrunken budget (the restore needs no
+            # event: admissions consult cur_budget at their own `now`)
+            for w in fsched.stalls:
+                if w.crash:
+                    heapq.heappush(events, (w.t0, next(self._seq),
+                                            "crash", w))
+                # "wake": a bare dispatch kick at the window edge, so work
+                # parked behind a stall/spike cannot outlive the event heap
+                heapq.heappush(events, (w.t1, next(self._seq), "wake", None))
+            for sp in fsched.spikes:
+                heapq.heappush(events, (sp.t0, next(self._seq), "spike", sp))
+                heapq.heappush(events, (sp.t1, next(self._seq), "wake", None))
 
         state: dict[tuple[str, int], dict] = {}
+        #: resilience bookkeeping (all empty on the clean path)
+        req_of: dict[tuple[str, int], SimRequest] = {}
+        finished: set[tuple] = set()
+        cancelled: set[tuple] = set()
+        attempts: dict[tuple, int] = {}        # client-timeout attempt no.
+        first_arrival: dict[tuple, float] = {}
+        crash_killed: set[tuple] = set()       # (key, epoch) of dead flights
 
         # ---- analytic memory model (None budget = unconstrained) -------
         budget = self.kv_token_budget
@@ -172,6 +214,42 @@ class PodSimulator:
         prefix_use: dict[str, float] = {}      # key -> last hit time
         pf = {"lookups": 0, "hits": 0, "hit_tokens": 0, "shared_pages": 0,
               "prompt_tokens": 0}
+
+        def cur_budget(now: float):
+            """Budget net of memory spikes active at ``now`` (time-varying
+            under faults; the base budget otherwise)."""
+            if budget is None or fsched is None:
+                return budget
+            return budget - fsched.steal_tokens_at(now, budget)
+
+        def release_next(app: str, now: float):
+            """Advance a closed-loop chain (normal completion, shed, or
+            cancellation — sessions must never wedge on a lost request)."""
+            trace = apps[app]
+            if trace.closed_loop:
+                i = next_idx.get(app, len(trace.requests))
+                if i < len(trace.requests):
+                    next_idx[app] = i + 1
+                    nxt = trace.requests[i]
+                    # effective arrival = max(now, nominal); the trace
+                    # itself is never mutated, so re-running the same
+                    # AppTrace is reproducible
+                    heapq.heappush(events, (max(now, nxt.arrival_s),
+                                            next(self._seq), "arrival", nxt))
+
+        def abort_progress(k: tuple, now: float):
+            """Client abort / crash: drop residency + chain progress and
+            stale-mark every queued entry (epoch bump). Unlike evict(),
+            the request keeps its eviction rights — this is not a memory
+            event."""
+            if k in resident:
+                mem["resident"] -= resident.pop(k)[1]
+                note_kv(now)
+            st = state[k]
+            st["tokens_done"] = 0
+            st["decode_done"] = 0
+            st["decode_t0"] = None
+            epoch[k] = epoch.get(k, 0) + 1
 
         def enqueue(partition: str, ready_t: float, req: SimRequest,
                     item_idx: int, chunk_frac: float):
@@ -227,7 +305,8 @@ class PodSimulator:
             # the request only needs its INCREMENTAL footprint
             hit = state[k].get("prefix_hit", 0)
             need = min(max(req.kv_tokens - hit, 0), budget)
-            while mem["resident"] + need > budget:
+            b = cur_budget(now)
+            while mem["resident"] + need > b:
                 cold = [kk for kk, tok in prefix_res.items()
                         if tok > 0 and prefix_sharers.get(kk, 0) == 0]
                 if cold:
@@ -249,7 +328,7 @@ class PodSimulator:
                 # their work without helping — wait for a completion
                 if (mem["resident"]
                         - sum(resident[kk][1] for kk in cands)
-                        + need > budget):
+                        + need > b):
                     return False
                 evict(min(cands, key=lambda kk: last_use.get(kk, 0.0)), now)
             resident[k] = (req, need)
@@ -295,7 +374,11 @@ class PodSimulator:
                 run_frac = min(frac, policy.chunk_fraction(
                     item, full_dur, frac, self.chunk_target_s))
                 dur = full_dur * run_frac
-                end = now + dur
+                # faults: thermal derating / stall windows stretch the
+                # dispatch through the SAME piecewise time integrator the
+                # engine's virtual clock uses (parity by construction)
+                end = (fsched.advance(now, dur, partition)
+                       if fsched is not None else now + dur)
                 busy_until[partition] = end
                 util.append(UtilSample(now, end, chips, self.total_chips))
                 telem.span(item.kind, req.app, req.request_id, now, end,
@@ -308,14 +391,40 @@ class PodSimulator:
                 rem = frac - run_frac
                 heapq.heappush(events, (end, next(self._seq), "complete",
                                         (partition, req, idx, rem, now,
-                                         run_frac)))
+                                         run_frac, ep)))
                 return
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == "arrival":
                 req = payload
-                st = state[(req.app, req.request_id)] = {
+                fstats.issued += 1
+                decision = "admit"
+                if (tracker is not None
+                        and tracker.should_degrade(req.app, shed_cfg)):
+                    decision = policy.shed_decision(
+                        req.app, req, tracker.rolling(req.app), shed_cfg,
+                        now)
+                if decision == "shed":
+                    fstats.sheds += 1
+                    telem.instant("shed", req.app, req.request_id, now)
+                    release_next(req.app, now)
+                    continue
+                if decision == "downgrade":
+                    fstats.downgrades += 1
+                    telem.instant("downgrade", req.app, req.request_id, now)
+                    # a fresh demoted copy: the trace's request is never
+                    # mutated (re-running the same AppTrace reproduces)
+                    req = dataclasses.replace(req, background=True)
+                k = (req.app, req.request_id)
+                req_of[k] = req
+                if client is not None and client.applies_to(req.app):
+                    first_arrival[k] = now
+                    attempts[k] = 0
+                    heapq.heappush(events, (now + client.timeout_s,
+                                            next(self._seq), "timeout",
+                                            (k, 0)))
+                st = state[k] = {
                     "rec": RequestRecord(req.app, req.request_id, now),
                     "t_start": now, "decode_done": 0, "decode_t0": None,
                     "tokens_done": 0,
@@ -353,105 +462,216 @@ class PodSimulator:
                     st["prefix_hit"] = hit
                 enqueue(partition_of[req.app], now, req, 0, 1.0)
             elif kind == "complete":
-                partition, req, idx, rem, started, run_frac = payload
-                busy_until[partition] = now
+                partition, req, idx, rem, started, run_frac, ep = payload
                 k = (req.app, req.request_id)
-                executing.discard(k)
-                last_use[k] = now
-                st = state[k]
-                # partial chunks count toward the recompute bill too: an
-                # eviction mid-prefill loses real work
-                done_scale = 1.0
-                if (req.items[idx].kind == "prefill"
-                        and st.get("prefill_total", 0)):
-                    done_scale = 1.0 - (st.get("prefix_hit", 0)
-                                        / st["prefill_total"])
-                st["tokens_done"] += req.items[idx].tokens * run_frac * done_scale
-                if rem > 1e-9:  # chunk remainder goes back to the queue
-                    telem.instant("preempt", req.app, req.request_id, now)
-                    enqueue(partition, now, req, idx, rem)
+                if (k, ep) in crash_killed:
+                    # the partition died mid-dispatch: the work never ran
+                    # to completion and busy_until was re-seeded at the
+                    # crash, so this completion must not touch either
+                    crash_killed.discard((k, ep))
+                    live = False
                 else:
-                    item = req.items[idx]
-                    rec: RequestRecord = st["rec"]
-                    if item.kind == "decode":
-                        if st["decode_t0"] is None:
-                            st["decode_t0"] = now
-                            if rec.ttft_s is None:  # evicted: keep first ttft
-                                rec.ttft_s = now - rec.arrival_s
-                        st["decode_done"] += item.tokens
-                    if item.kind in ("denoise", "encode", "train"):
-                        rec.step_times_s.append(now - max(started, rec.arrival_s))
-                    if idx + 1 < len(req.items):
-                        enqueue(partition, now, req, idx + 1, 1.0)
+                    busy_until[partition] = now
+                    executing.discard(k)
+                    last_use[k] = now
+                    # a timeout abort bumped the epoch mid-flight: the chip
+                    # time was burned (wasted work, busy_until above) but
+                    # the result is discarded
+                    live = ep == epoch.get(k, 0) and k not in cancelled
+                if live:
+                    st = state[k]
+                    # partial chunks count toward the recompute bill too: an
+                    # eviction mid-prefill loses real work
+                    done_scale = 1.0
+                    if (req.items[idx].kind == "prefill"
+                            and st.get("prefill_total", 0)):
+                        done_scale = 1.0 - (st.get("prefix_hit", 0)
+                                            / st["prefill_total"])
+                    st["tokens_done"] += (req.items[idx].tokens * run_frac
+                                          * done_scale)
+                    if rem > 1e-9:  # chunk remainder goes back to the queue
+                        telem.instant("preempt", req.app, req.request_id, now)
+                        enqueue(partition, now, req, idx, rem)
                     else:
-                        if k in resident:    # release the KV footprint
-                            mem["resident"] -= resident.pop(k)[1]
-                            note_kv(now)
-                        key = req.prefix_key
-                        if self.prefix_cache and key and req.prefix_tokens > 0:
-                            # publish: the prompt's shareable prefix stays
-                            # behind for the next arrival under this key;
-                            # the shared-ancestor portion is published (and
-                            # charged) once under the sys key, the session
-                            # key carries only its increment beyond it
-                            sysk, syst = req.prefix_sys_key, 0
-                            if sysk:
-                                syst = min(req.prefix_sys_tokens,
-                                           req.prefix_tokens)
-                                prefix_cached[sysk] = max(
-                                    prefix_cached.get(sysk, 0), syst)
-                                prefix_use.setdefault(sysk, now)
-                            prefix_cached[key] = max(
-                                prefix_cached.get(key, 0), req.prefix_tokens)
-                            if budget is not None:
-                                grow = 0
+                        item = req.items[idx]
+                        rec: RequestRecord = st["rec"]
+                        if item.kind == "decode":
+                            if st["decode_t0"] is None:
+                                st["decode_t0"] = now
+                                if rec.ttft_s is None:  # evicted: keep first
+                                    rec.ttft_s = now - rec.arrival_s
+                            st["decode_done"] += item.tokens
+                        if item.kind in ("denoise", "encode", "train"):
+                            rec.step_times_s.append(
+                                now - max(started, rec.arrival_s))
+                        if idx + 1 < len(req.items):
+                            enqueue(partition, now, req, idx + 1, 1.0)
+                        else:
+                            finished.add(k)
+                            if k in resident:    # release the KV footprint
+                                mem["resident"] -= resident.pop(k)[1]
+                                note_kv(now)
+                            key = req.prefix_key
+                            if (self.prefix_cache and key
+                                    and req.prefix_tokens > 0):
+                                # publish: the prompt's shareable prefix
+                                # stays behind for the next arrival under
+                                # this key; the shared-ancestor portion is
+                                # published (and charged) once under the sys
+                                # key, the session key carries only its
+                                # increment beyond it
+                                sysk, syst = req.prefix_sys_key, 0
                                 if sysk:
-                                    want = min(syst, budget)
-                                    g = want - prefix_res.get(sysk, 0)
+                                    syst = min(req.prefix_sys_tokens,
+                                               req.prefix_tokens)
+                                    prefix_cached[sysk] = max(
+                                        prefix_cached.get(sysk, 0), syst)
+                                    prefix_use.setdefault(sysk, now)
+                                prefix_cached[key] = max(
+                                    prefix_cached.get(key, 0),
+                                    req.prefix_tokens)
+                                if budget is not None:
+                                    grow = 0
+                                    if sysk:
+                                        want = min(syst, budget)
+                                        g = want - prefix_res.get(sysk, 0)
+                                        if g > 0:
+                                            prefix_res[sysk] = want
+                                            grow += g
+                                    want = max(0, min(prefix_cached[key],
+                                                      budget) - syst)
+                                    g = want - prefix_res.get(key, 0)
                                     if g > 0:
-                                        prefix_res[sysk] = want
+                                        prefix_res[key] = want
                                         grow += g
-                                want = max(0, min(prefix_cached[key], budget)
-                                           - syst)
-                                g = want - prefix_res.get(key, 0)
-                                if g > 0:
-                                    prefix_res[key] = want
-                                    grow += g
-                                if grow > 0:
-                                    mem["resident"] += grow
-                                    mem["peak"] = max(mem["peak"],
-                                                      mem["resident"])
-                                    note_kv(now)
-                            prefix_use.setdefault(key, now)
+                                    if grow > 0:
+                                        mem["resident"] += grow
+                                        mem["peak"] = max(mem["peak"],
+                                                          mem["resident"])
+                                        note_kv(now)
+                                prefix_use.setdefault(key, now)
+                            if st.get("prefix_held"):
+                                prefix_sharers[st["prefix_held"]] -= 1
+                            rec.e2e_s = now - rec.arrival_s
+                            if (st["decode_done"] > 1
+                                    and st["decode_t0"] is not None):
+                                rec.tpot_s = ((now - st["decode_t0"]) /
+                                              max(st["decode_done"] - 1, 1))
+                            elif st["decode_done"] == 1:
+                                rec.tpot_s = 0.0
+                            records[req.app].append(rec)
+                            if tracker is not None:
+                                tracker.note(req.app, rec.meets_slo(
+                                    apps[req.app].slo))
+                            release_next(req.app, now)
+            elif kind == "crash":
+                w = payload
+                # the partition lost its in-flight state: every request
+                # with progress (running or partially done) restarts from
+                # scratch when the window lifts
+                for kk, r in list(req_of.items()):
+                    if kk in finished or kk in cancelled or kk not in state:
+                        continue
+                    if not w.matches(partition_of[r.app]):
+                        continue
+                    if (kk in executing
+                            or state[kk].get("tokens_done", 0) > 0):
+                        if kk in executing:
+                            crash_killed.add((kk, epoch.get(kk, 0)))
+                            executing.discard(kk)
+                        fstats.replays += 1
+                        telem.instant("replay", r.app, r.request_id, now)
+                        abort_progress(kk, now)
+                        enqueue(partition_of[r.app], w.t1, r, 0, 1.0)
+                for p in chips_of:
+                    if w.matches(p):
+                        busy_until[p] = w.t1   # restart at window end
+            elif kind == "spike":
+                # an external app grabbed part of the pool: evict live
+                # residents down to the shrunken budget NOW (admissions
+                # already consult cur_budget; this handles the occupants).
+                # Shared-prefix pages with in-flight readers are pinned —
+                # cold published prefixes go first, exactly as in admit().
+                b = cur_budget(now)
+                if budget is not None:
+                    while mem["resident"] > b:
+                        cold = [kk for kk, tok in prefix_res.items()
+                                if tok > 0 and prefix_sharers.get(kk, 0) == 0]
+                        if cold:
+                            kk = min(cold,
+                                     key=lambda x: prefix_use.get(x, 0.0))
+                            mem["resident"] -= prefix_res.pop(kk)
+                            prefix_cached.pop(kk, None)
+                            note_kv(now)
+                            continue
+                        cands = [kk for kk in resident
+                                 if kk not in executing]
+                        if not cands:
+                            break   # executing footprints are unevictable
+                        evict(min(cands,
+                                  key=lambda kk: last_use.get(kk, 0.0)), now)
+            elif kind == "timeout":
+                k, att = payload
+                if (k not in finished and k not in cancelled
+                        and attempts.get(k, 0) == att):
+                    r = req_of[k]
+                    fstats.timeouts += 1
+                    telem.instant("timeout", r.app, r.request_id, now)
+                    # in-flight work keeps burning chip time until its
+                    # (now stale) completion — wasted work, by design
+                    abort_progress(k, now)
+                    executing.discard(k)
+                    st = state[k]
+                    st["rec"].ttft_s = None   # re-measured on the retry
+                    attempts[k] = att + 1
+                    deadline = (first_arrival[k] + client.deadline_s
+                                if client.deadline_s > 0 else math.inf)
+                    backoff = client.backoff_s(att + 1)
+                    if (att + 1 > client.max_retries
+                            or now + backoff > deadline):
+                        cancelled.add(k)
+                        fstats.cancels += 1
+                        telem.instant("cancel", r.app, r.request_id, now)
                         if st.get("prefix_held"):
                             prefix_sharers[st["prefix_held"]] -= 1
-                        rec.e2e_s = now - rec.arrival_s
-                        if st["decode_done"] > 1 and st["decode_t0"] is not None:
-                            rec.tpot_s = ((now - st["decode_t0"]) /
-                                          max(st["decode_done"] - 1, 1))
-                        elif st["decode_done"] == 1:
-                            rec.tpot_s = 0.0
-                        records[req.app].append(rec)
-                        trace = apps[req.app]
-                        if trace.closed_loop:
-                            i = next_idx.get(req.app, len(trace.requests))
-                            if i < len(trace.requests):
-                                next_idx[req.app] = i + 1
-                                nxt = trace.requests[i]
-                                # effective arrival = max(completion, nominal);
-                                # the trace itself is never mutated, so
-                                # re-running the same AppTrace is reproducible
-                                t_arr = max(now, nxt.arrival_s)
-                                heapq.heappush(events, (t_arr,
-                                                        next(self._seq),
-                                                        "arrival", nxt))
+                            st["prefix_held"] = None
+                        if tracker is not None:   # a cancel IS an SLO miss
+                            tracker.note(r.app, False)
+                        release_next(r.app, now)
+                    else:
+                        fstats.retries += 1
+                        telem.instant("retry", r.app, r.request_id, now)
+                        heapq.heappush(events, (now + backoff,
+                                                next(self._seq),
+                                                "reissue", k))
+            elif kind == "reissue":
+                k = payload
+                if k not in finished and k not in cancelled:
+                    r = req_of[k]
+                    enqueue(partition_of[r.app], now, r, 0, 1.0)
+                    heapq.heappush(events, (now + client.timeout_s,
+                                            next(self._seq), "timeout",
+                                            (k, attempts[k])))
+            elif kind == "wake":
+                pass   # dispatch kick only (the loop below)
             # after any event, try to dispatch in every partition
             for p in queues:
                 try_dispatch(p, now)
 
         reports = {t.name: SLOReport(t.name, t.slo, records[t.name])
                    for t in traces}
+        if fsched is not None and fsched.stalls:
+            def finish_of(w):
+                for t in traces:
+                    if not w.matches(partition_of[t.name]):
+                        continue
+                    for r in records[t.name]:
+                        if r.e2e_s is not None:
+                            yield (r.arrival_s, r.arrival_s + r.e2e_s)
+            fstats.time_to_recover_s = time_to_recover(fsched.stalls,
+                                                       finish_of)
         return SimResult(reports=reports, util=util,
+                         fault_stats=fstats,
                          total_chips=self.total_chips, chip=self.chip,
                          strategy=policy.name,
                          kv_token_budget=budget, page_size=self.page_size,
@@ -492,6 +712,9 @@ class SimResult:
     #: simulator runs; engine runs carry one when telemetry is enabled.
     #: NOT part of summary()/to_json() unless the scenario opts in.
     trace: Union[TraceRecorder, None] = None
+    # ---- resilience (schema 1.5's ALWAYS-present "faults" block; a
+    # fault-free run carries the zero-filled counters)
+    fault_stats: Union[FaultStats, None] = None
 
     @property
     def policy_name(self) -> str:
@@ -550,6 +773,17 @@ class SimResult:
             "cow_forks": self.prefix_cow_forks,
         }
 
+    def faults_summary(self) -> dict:
+        """Schema 1.5 "faults" block — ALWAYS present (zero-filled when no
+        faults were injected), identical keys on both substrates. Goodput
+        = SLO-meeting completions over requests issued: shed, cancelled
+        and still-failing requests all stay in the denominator."""
+        fs = self.fault_stats or FaultStats()
+        ok = sum(1 for rep in self.reports.values()
+                 for r in rep.records if r.meets_slo(rep.slo))
+        total = sum(len(rep.records) for rep in self.reports.values())
+        return fs.block(ok, total)
+
     def summary(self) -> dict:
         mem = self.memory_summary()
         pfx = self.prefix_summary()
@@ -560,6 +794,7 @@ class SimResult:
             "energy_kj": self.energy_j() / 1e3,
             **({"memory": mem} if mem is not None else {}),
             **({"prefix": pfx} if pfx is not None else {}),
+            "faults": self.faults_summary(),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,

@@ -77,6 +77,7 @@ class BlockAllocator:
         self.low_watermark = (high_watermark if low_watermark is None
                               else low_watermark)
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._reserved: list[int] = []               # external pressure holds
         self._pages: dict[int, list[int]] = {}       # slot -> page ids
         self._ref: dict[int, int] = {}               # page -> refcount
         self._last_touch: dict[int, int] = {}        # slot -> tick
@@ -257,6 +258,33 @@ class BlockAllocator:
             tables[slot, :] = SENTINEL
             self.tables = tables
         return freed
+
+    # -------------------------------------------------- external pressure
+    def reserve(self, n: int) -> int:
+        """An EXTERNAL tenant (repro.resilience's ``memory_spike``) grabs
+        up to ``n`` free pages out of the pool. Only free-list pages are
+        ever taken — allocated pages, and in particular refcounted shared
+        prefix pages, are structurally untouchable. Returns how many pages
+        were actually reserved (caller evicts and retries for the rest)."""
+        if n < 0:
+            raise ValueError(f"reserve count must be >= 0, got {n}")
+        got = []
+        while len(got) < n and self._free:
+            got.append(self._take_page())
+        self._reserved.extend(got)
+        return len(got)
+
+    @property
+    def reserved_pages(self) -> int:
+        return len(self._reserved)
+
+    def release_reserved(self) -> int:
+        """Return every externally reserved page to the free list (spike
+        end); returns how many were released."""
+        n = len(self._reserved)
+        while self._reserved:
+            self.ref_decr(self._reserved.pop())
+        return n
 
     # ------------------------------------------------------ victim choice
     def touch(self, slot: int) -> None:

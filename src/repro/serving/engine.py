@@ -109,6 +109,7 @@ class EngineStats:
     prefix_hit_tokens: int = 0    # prefill tokens served from the trie
     shared_pages: int = 0         # cached pages mapped into admitted slots
     cow_forks: int = 0            # shared pages forked on first write
+    replays: int = 0              # in-flight requests replayed after a crash
 
 
 class InferenceEngine:
@@ -130,7 +131,9 @@ class InferenceEngine:
                  recorder_label: str = "",
                  request_work: Optional[
                      Callable[[Request, str, int],
-                              "tuple[float, float]"]] = None):
+                              "tuple[float, float]"]] = None,
+                 time_warp: Optional[
+                     Callable[[float, float], float]] = None):
         #: telemetry (repro.telemetry): when a recorder is attached the
         #: engine emits admit/evict instants, one span per prefill-chunk
         #: dispatch and per decoded row, and a per-pool KV-occupancy
@@ -151,6 +154,11 @@ class InferenceEngine:
         self.prefill_chunk = prefill_chunk
         self._step_cost = step_cost_s
         self._req_cost = request_cost_s
+        #: fault integrator (repro.resilience): maps ``(t0, nominal_s) ->
+        #: t1`` so thermal derating / stall windows stretch the virtual
+        #: clock through the SAME piecewise integrator the pod simulator's
+        #: dispatch end times use (parity by construction)
+        self._time_warp = time_warp
         self._use_vclock = step_cost_s is not None or request_cost_s is not None
         self._vclock = 0.0
         self._t0 = _time.monotonic()
@@ -285,9 +293,15 @@ class InferenceEngine:
         if not self._use_vclock:
             return
         if self._req_cost is not None and req is not None:
-            self._vclock += self._req_cost(req, kind, tokens)
+            cost = self._req_cost(req, kind, tokens)
         elif self._step_cost is not None:
-            self._vclock += self._step_cost(kind, tokens)
+            cost = self._step_cost(kind, tokens)
+        else:
+            return
+        if self._time_warp is not None:
+            self._vclock = self._time_warp(self._vclock, cost)
+        else:
+            self._vclock += cost
 
     def advance_to(self, t: float) -> None:
         """Jump the virtual clock forward to ``t`` (idle gap to the next
@@ -347,17 +361,26 @@ class InferenceEngine:
             self.stats.pages_in_use = max(self.stats.pages_in_use,
                                           self.allocator.pages_in_use)
 
-    def _evict(self, victim: int) -> None:
+    def _evict(self, victim: int, *, crash: bool = False) -> None:
         """Preempt-to-evict: free the victim slot's pages and requeue its
-        request; the tokens it had cached are recomputed on re-admission."""
+        request; the tokens it had cached are recomputed on re-admission.
+        ``crash=True`` is the fault-injection variant (partition lost its
+        state): same mechanism — so the replayed stream is token-identical
+        by the same argument paging parity rests on — but counted as
+        ``stats.replays`` and traced as a ``replay`` instant, because a
+        crash is not a memory event."""
         req = self.active[victim]
-        self.stats.evictions += 1
+        if crash:
+            self.stats.replays += 1
+        else:
+            self.stats.evictions += 1
         self.stats.recompute_tokens += int(self.lengths[victim])
         if self._recorder is not None:
-            self._recorder.instant("evict", req.app, req.request_id,
-                                   self.now(),
+            self._recorder.instant("replay" if crash else "evict",
+                                   req.app, req.request_id, self.now(),
                                    tokens=int(self.lengths[victim]))
-        self.allocator.free_slot(victim)
+        if self.allocator is not None:
+            self.allocator.free_slot(victim)
         self.active[victim] = None
         self._partial.pop(victim, None)
         self._eff.pop(victim, None)
@@ -366,6 +389,76 @@ class InferenceEngine:
         self.lengths = new_lengths
         self.waiting.insert(0, req)
         self._emit_kv()
+
+    # ------------------------------------------------------------- faults
+    def crash_active(self) -> int:
+        """Partition crash (``engine_stall`` with ``crash: true``): every
+        active slot loses its in-flight state and replays from scratch on
+        recovery. Returns how many requests were killed (requeued at the
+        head of the waiting queue)."""
+        n = 0
+        for i, r in enumerate(self.active):
+            if r is not None:
+                self._evict(i, crash=True)
+                n += 1
+        return n
+
+    def abort(self, request_id: int) -> Optional[Request]:
+        """Client-side abort (timeout / cancellation): drop the request
+        wherever it is — waiting queue or active slot — freeing its pages
+        WITHOUT publishing its prefix. Returns the request so the caller
+        can reset and resubmit it, or None when it is unknown or already
+        finished."""
+        for i, r in enumerate(self.waiting):
+            if r.request_id == request_id:
+                return self.waiting.pop(i)
+        for i, r in enumerate(self.active):
+            if r is not None and r.request_id == request_id:
+                if self.allocator is not None:
+                    self.allocator.free_slot(i)
+                self.active[i] = None
+                self._partial.pop(i, None)
+                self._eff.pop(i, None)
+                new_lengths = self.lengths.copy()
+                new_lengths[i] = 0
+                self.lengths = new_lengths
+                self._emit_kv()
+                return r
+        return None
+
+    def steal_pages(self, n: int) -> int:
+        """External memory pressure (``memory_spike``): an outside tenant
+        reserves ``n`` pages out of this engine's pool. Free pages go
+        first, then cold cached prefixes, then live LRU slots are evicted
+        to make room; the allocator only ever hands over FREE-list pages,
+        so pages with refcount > 1 (shared prefixes with live readers) are
+        structurally safe. Returns how many pages were actually taken."""
+        alloc = self.allocator
+        if alloc is None or n <= 0:
+            return 0
+        got = alloc.reserve(n)
+        while got < n:
+            if self.prefix is not None and self.prefix.evict_cold(1):
+                got += alloc.reserve(n - got)
+                continue
+            victim = alloc.lru_victim()
+            if victim is None:
+                break
+            self._evict(victim)
+            got += alloc.reserve(n - got)
+        self._note_pages()
+        self._emit_kv()
+        return got
+
+    def release_stolen(self) -> int:
+        """Spike end: the external tenant returns every reserved page."""
+        alloc = self.allocator
+        if alloc is None:
+            return 0
+        n = alloc.release_reserved()
+        if n:
+            self._emit_kv()
+        return n
 
     def _rebalance(self, protect: set[int]) -> None:
         """Watermark policy: once the pool hits the high watermark, evict

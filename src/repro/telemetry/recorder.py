@@ -33,6 +33,12 @@ prefix pages; ``tokens`` carries the prefill tokens skipped) and
 ``cow_fork`` (first write into a shared page forked it). Counters are
 named step series — both substrates emit ``kv_pages`` (suffix
 ``@<partition>`` on the engine) for the KV-pool occupancy timeline.
+
+Resilience events (repro.resilience): ``fault`` spans mark injected fault
+windows (app ``__faults__``, chips=0 — never chip-occupying work);
+``timeout`` / ``retry`` / ``cancel`` mark the client-timeout lifecycle,
+``shed`` / ``downgrade`` the admission controller's decisions, and
+``replay`` an in-flight request restarted after a partition crash.
 """
 from __future__ import annotations
 
@@ -44,7 +50,9 @@ from typing import Optional
 #: never produces a given kind
 EVENT_KINDS = ("prefill", "decode", "encode", "denoise", "train",
                "admit", "evict", "preempt", "release",
-               "prefix_hit", "cow_fork")
+               "prefix_hit", "cow_fork",
+               "fault", "timeout", "retry", "cancel", "shed", "downgrade",
+               "replay")
 #: span-event kinds that represent chip-occupying work
 WORK_KINDS = ("prefill", "decode", "encode", "denoise", "train")
 

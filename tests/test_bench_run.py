@@ -1,0 +1,63 @@
+"""benchmarks/run.py harness: the per-row SIGALRM deadline that fails a
+hung benchmark fast with its suite named (the --smoke CI contract)."""
+import importlib.util
+import pathlib
+import signal
+import time
+
+import pytest
+
+_PATH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" / \
+    "run.py"
+_spec = importlib.util.spec_from_file_location("bench_run", _PATH)
+bench_run = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_run)
+
+needs_sigalrm = pytest.mark.skipif(not hasattr(signal, "SIGALRM"),
+                                   reason="no SIGALRM on this platform")
+
+
+@needs_sigalrm
+def test_row_deadline_interrupts_a_hung_row():
+    with pytest.raises(bench_run.RowTimeout, match="'hung_suite'"):
+        with bench_run.row_deadline("hung_suite", 0.2):
+            t0 = time.time()
+            while time.time() - t0 < 5.0:
+                pass
+    # the timer is disarmed on exit: nothing fires later
+    signal.setitimer(signal.ITIMER_REAL, 0)
+
+
+@needs_sigalrm
+def test_row_deadline_noop_when_fast_or_disabled():
+    with bench_run.row_deadline("fast", 5.0):
+        pass
+    with bench_run.row_deadline("off", 0.0):
+        time.sleep(0.01)
+
+
+@needs_sigalrm
+def test_row_deadline_restores_previous_handler():
+    marker = []
+    prev = signal.signal(signal.SIGALRM, lambda *a: marker.append(1))
+    try:
+        with bench_run.row_deadline("x", 5.0):
+            pass
+        assert signal.getsignal(signal.SIGALRM) is not signal.SIG_DFL
+        signal.raise_signal(signal.SIGALRM)
+        assert marker == [1]                 # our handler is back
+    finally:
+        signal.signal(signal.SIGALRM, prev)
+
+
+def test_smoke_defaults_row_timeout(capsys):
+    # --smoke turns the per-row deadline on by default; a tiny explicit
+    # budget fails the suite with a *_TIMEOUT row and exit code 1
+    if not hasattr(signal, "SIGALRM"):
+        pytest.skip("no SIGALRM on this platform")
+    with pytest.raises(SystemExit) as ex:
+        bench_run.main(["--smoke", "--only", "fig3_exclusive",
+                        "--row-timeout", "0.0001"])
+    assert ex.value.code == 1
+    out = capsys.readouterr().out
+    assert "fig3_exclusive_TIMEOUT" in out

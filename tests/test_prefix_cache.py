@@ -188,6 +188,72 @@ def test_prefix_cache_requires_paged_and_shareable_family(tiny_model):
                         prefix_cache=True)
 
 
+def test_steal_pages_never_reclaims_shared_refcounted_pages(tiny_model):
+    """Fault-injection pressure (``memory_spike``): an external tenant
+    stealing pages can evict cold prefixes and LRU slots, but pages with
+    refcount > 1 — a published prefix with a live reader — are
+    structurally out of reach (only free-list pages are ever reserved)."""
+    m, params, cfg = tiny_model
+    eng = InferenceEngine(m, max_slots=2, max_seq=64, policy="chunked",
+                          prefill_chunk=4, paged=True, page_size=4,
+                          kv_pages=12, prefix_cache=True)
+    eng.load_params(params)
+    a = eng.allocator
+    rng = np.random.default_rng(5)
+    sys_block = rng.integers(0, cfg.vocab_size, 8)
+    # publish a prefix, then map it into a live slot: refcount 2 pages
+    a.alloc_slot(0, 8)
+    donor_pages = a.slot_page_ids(0)
+    eng.prefix.insert(list(sys_block), donor_pages)
+    a.free_slot(0)
+    a.alloc_slot(1, 8, shared=donor_pages)
+    assert all(a.ref_count(p) == 2 for p in donor_pages)
+
+    # a steal the free list can absorb touches NOTHING allocated: the
+    # refcount-2 pages and the reader's mapping are structurally safe
+    free_before = a.free_pages
+    assert eng.steal_pages(5) == 5
+    assert all(a.ref_count(p) == 2 for p in donor_pages)
+    assert a.slot_page_ids(1) == donor_pages
+    assert a.free_pages == free_before - 5
+
+    # draining the whole pool cascades: free pages, then the LRU reader
+    # slot, then the now-cold prefix — each page freed only at refcount 0
+    # (ref_decr would raise on any double free)
+    got = 5 + eng.steal_pages(100)
+    assert got == 12
+    assert a.pages_in_use == a.reserved_pages == 12
+    # the tenant's hold is now the ONLY reference on the donor pages
+    assert all(a.ref_count(p) == 1 for p in donor_pages)
+    assert eng.release_stolen() == 12
+    assert a.free_pages == 12
+
+
+def test_token_streams_bit_identical_under_steal_pressure(tiny_model):
+    """The resilience pin: a pool shrunk by an external page steal forces
+    extra eviction/recompute, and the streams STILL match the unpressured
+    sharing-off run bit for bit (warm prefix cache + live pressure)."""
+    m, params, cfg = tiny_model
+    reqs = _shared_prefix_trace(cfg, n=5, sys_len=12, tail_len=6, max_new=4)
+    want, _ = _run(m, params, cfg, reqs, max_slots=2, page_size=4,
+                   kv_pages=14)
+
+    eng = InferenceEngine(m, max_seq=64, policy="chunked", prefill_chunk=4,
+                          paged=True, max_slots=2, page_size=4, kv_pages=14,
+                          prefix_cache=True)
+    eng.load_params(params)
+    assert eng.steal_pages(4) == 4           # external tenant holds 4 pages
+    for r in reqs:
+        eng.submit(Request(r.request_id, np.array(r.prompt),
+                           r.max_new_tokens, arrival_s=r.arrival_s))
+    got = {r.request_id: list(r.tokens_out) for r in eng.run()}
+    assert got == want
+    # the steal really constrained the run: live pressure forced
+    # evict-and-recompute that the unpressured run never needed
+    assert eng.stats.evictions > 0 or eng.stats.recompute_tokens > 0
+    eng.release_stolen()
+
+
 def test_prefix_telemetry_and_stats(tiny_model):
     from repro.telemetry.recorder import TraceRecorder
     m, params, cfg = tiny_model

@@ -1,0 +1,416 @@
+"""Fault injection and graceful degradation (repro.resilience): the shared
+time integrator, spec validation, seeded determinism, the schema-1.5
+``faults`` block, and end-to-end pins on BOTH substrates."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import Scenario, ScenarioApp, ScenarioError
+from repro.resilience import (ClientTimeout, FaultSchedule, FaultSpecError,
+                              ShedConfig, SloTracker, StallWindow,
+                              ThermalThrottle, available_faults, make_fault,
+                              time_to_recover)
+from repro.serving.block_allocator import BlockAllocator
+
+
+# ------------------------------------------------------- the time integrator
+def sched(*specs):
+    return FaultSchedule(list(specs), rng=np.random.default_rng(0))
+
+
+def test_advance_identity_without_faults():
+    s = sched()
+    assert s.advance(3.0, 5.0) == 8.0
+    assert s.time_warp() is None
+
+
+def test_advance_thermal_derate_math():
+    s = sched({"kind": "thermal_throttle", "start_s": 10.0,
+               "duration_s": 10.0, "derate": 0.5})
+    assert s.advance(0.0, 5.0) == pytest.approx(5.0)     # before the window
+    assert s.advance(10.0, 5.0) == pytest.approx(20.0)   # all inside: 2x
+    # straddling: 5s full speed, then 5s of work at half speed
+    assert s.advance(5.0, 10.0) == pytest.approx(20.0)
+    # crossing out the far edge: 5s in-window does 2.5s of work
+    assert s.advance(15.0, 10.0) == pytest.approx(27.5)
+
+
+def test_advance_freezes_through_stall_and_matches_partition():
+    s = sched({"kind": "engine_stall", "start_s": 2.0, "duration_s": 3.0,
+               "partition": "A"})
+    # partition A: 2s of work, frozen 2->5, remaining 3s
+    assert s.advance(0.0, 5.0, "A") == pytest.approx(8.0)
+    # other partitions (and work started inside the window) are untouched
+    assert s.advance(0.0, 5.0, "B") == pytest.approx(5.0)
+    # an unscoped stall hits every partition
+    s2 = sched({"kind": "engine_stall", "start_s": 2.0, "duration_s": 3.0})
+    assert s2.advance(0.0, 5.0, "B") == pytest.approx(8.0)
+    assert s2.advance(3.0, 1.0, None) == pytest.approx(6.0)
+
+
+def test_advance_periodic_throttle_duty_cycle():
+    s = sched({"kind": "thermal_throttle", "start_s": 0.0, "duration_s": 1.0,
+               "derate": 0.5, "period_s": 2.0})
+    # [0,1) half speed -> 0.5 work; [1,2) full -> 1.5 done by t=2
+    assert s.advance(0.0, 1.5) == pytest.approx(2.0)
+    assert s.advance(0.0, 2.0) == pytest.approx(3.0)
+
+
+def test_advance_is_monotone_in_derate():
+    ends = [sched({"kind": "thermal_throttle", "start_s": 0.0,
+                   "duration_s": 100.0, "derate": d}).advance(0.0, 10.0)
+            for d in (1.0, 0.7, 0.4, 0.2)]
+    assert ends == sorted(ends)
+    assert ends[0] == pytest.approx(10.0)
+    assert ends[-1] == pytest.approx(50.0)
+
+
+def test_bind_partitions_resolves_app_names():
+    s = sched({"kind": "engine_stall", "start_s": 1.0, "partition": "chat"})
+    s.bind_partitions({"chat": "p0"})
+    assert s.stalls[0].partition == "p0"
+    assert s.advance(0.0, 2.0, "p0") == pytest.approx(7.0)
+
+
+def test_start_jitter_is_seeded_and_deterministic():
+    spec = {"kind": "engine_stall", "start_s": 1.0, "duration_s": 2.0,
+            "start_jitter_s": 5.0}
+    t0s = {FaultSchedule([spec],
+                         rng=np.random.default_rng(9)).stalls[0].t0
+           for _ in range(3)}
+    assert len(t0s) == 1                     # same seed, same window
+    assert 1.0 <= t0s.pop() <= 6.0
+    other = FaultSchedule([spec], rng=np.random.default_rng(10)).stalls[0].t0
+    assert other not in t0s                  # jitter actually draws
+
+
+# ----------------------------------------------------------- spec validation
+def test_fault_registry_and_validation_errors():
+    assert available_faults() == ["client_timeout", "engine_stall",
+                                  "memory_spike", "thermal_throttle"]
+    with pytest.raises(FaultSpecError, match="unknown fault kind"):
+        make_fault({"kind": "volcano"})
+    with pytest.raises(FaultSpecError, match="frobnicate"):
+        make_fault({"kind": "engine_stall", "frobnicate": 1})
+    with pytest.raises(FaultSpecError, match="derate"):
+        make_fault({"kind": "thermal_throttle", "derate": 1.5})
+    with pytest.raises(FaultSpecError, match="steal_fraction"):
+        make_fault({"kind": "memory_spike", "steal_fraction": 1.0})
+    with pytest.raises(FaultSpecError, match="one client_timeout"):
+        sched({"kind": "client_timeout"}, {"kind": "client_timeout"})
+
+
+def test_client_timeout_backoff_caps():
+    ct = ClientTimeout(backoff_base_s=0.5, backoff_cap_s=4.0)
+    assert [ct.backoff_s(a) for a in (1, 2, 3, 4, 5)] == [
+        0.5, 1.0, 2.0, 4.0, 4.0]
+    assert ct.applies_to("anything")
+    scoped = ClientTimeout(apps=("chat",))
+    assert scoped.applies_to("chat") and not scoped.applies_to("captions")
+
+
+def test_shed_config_normalization():
+    assert ShedConfig.from_dict(None) is None
+    assert ShedConfig.from_dict(False) is None
+    assert ShedConfig.from_dict(True) == ShedConfig()
+    cfg = ShedConfig.from_dict({"attainment": 0.5, "action": "downgrade"})
+    assert cfg.attainment == 0.5 and cfg.action == "downgrade"
+    with pytest.raises(ValueError, match="unknown shed_on_slo key"):
+        ShedConfig.from_dict({"atainment": 0.5})
+    with pytest.raises(ValueError, match="action"):
+        ShedConfig.from_dict({"action": "explode"})
+
+
+def test_slo_tracker_rolling_window():
+    tr = SloTracker(window=4)
+    cfg = ShedConfig(attainment=0.7, window=4, min_completed=2)
+    assert tr.rolling("a") == 1.0
+    tr.note("a", False)
+    assert not tr.should_degrade("a", cfg)       # below min_completed
+    tr.note("a", False)
+    assert tr.should_degrade("a", cfg)
+    for _ in range(4):                           # window slides: all ok now
+        tr.note("a", True)
+    assert tr.rolling("a") == 1.0
+    assert not tr.should_degrade("a", cfg)
+
+
+def test_time_to_recover_metric():
+    w = StallWindow(10.0, 15.0, None, True)
+    # in flight at window start, finishing 3s after recovery
+    assert time_to_recover([w], lambda _: [(8.0, 18.0), (16.0, 17.0)]) \
+        == pytest.approx(3.0)
+    # nothing in flight at the stall -> 0
+    assert time_to_recover([w], lambda _: [(16.0, 17.0)]) == 0.0
+    # finished before recovery -> clamped at 0
+    assert time_to_recover([w], lambda _: [(8.0, 12.0)]) == 0.0
+
+
+# -------------------------------------------------- allocator reserve safety
+def test_reserve_only_ever_takes_free_pages():
+    a = BlockAllocator(num_pages=8, page_size=4, max_slots=4, max_blocks=8)
+    a.alloc_slot(0, 8)                           # 2 private pages
+    shared = a.slot_page_ids(0)
+    for p in shared:
+        a.ref_incr(p)                            # a second holder (prefix)
+    assert a.reserve(100) == 6                   # only the free list
+    assert a.reserved_pages == 6
+    for p in shared:
+        assert a.ref_count(p) == 2               # shared pages untouched
+    assert a.free_pages == 0
+    assert a.release_reserved() == 6
+    assert a.free_pages == 6
+
+
+# ----------------------------------------------------- scenario-level wiring
+def scenario(faults=None, shed=None, substrate="simulator", seed=7, **kw):
+    kw.setdefault("total_chips", 16)
+    kw.setdefault("kv_page_budget", 64)
+    kw.setdefault("page_size", 16)
+    apps = kw.pop("apps", None) or [
+        ScenarioApp("chatbot", num_requests=6),
+        ScenarioApp("live_captions", num_requests=6)]
+    return Scenario(apps=apps, seed=seed, substrate=substrate,
+                    faults=faults or [], shed_on_slo=shed, **kw)
+
+
+def faults_block(result):
+    res = result.to_json()["results"]
+    return res[next(iter(res))]["faults"]
+
+
+ZERO_KEYS = ("injected", "retries", "timeouts", "cancels", "sheds",
+             "downgrades", "replays")
+
+
+def test_fault_free_run_is_a_noop_with_zero_filled_block():
+    """Schema 1.5's acceptance pin: a scenario without ``faults:`` and one
+    with ``faults: []`` produce IDENTICAL documents, and the always-present
+    faults block is zero-filled."""
+    doc_a = scenario().run().to_json()
+    doc_b = Scenario(apps=[ScenarioApp("chatbot", num_requests=6),
+                           ScenarioApp("live_captions", num_requests=6)],
+                     seed=7, total_chips=16, kv_page_budget=64,
+                     page_size=16).run().to_json()
+    assert json.dumps(doc_a, sort_keys=True) == \
+        json.dumps(doc_b, sort_keys=True)
+    fb = doc_a["results"]["concurrent"]["faults"]
+    for k in ZERO_KEYS:
+        assert fb[k] == 0
+    assert fb["goodput"] == 1.0
+    assert fb["issued"] == fb["completed_ok"] == 12
+    assert fb["time_to_recover_s"] == 0.0
+    assert doc_a["schema_version"] == "1.5"
+
+
+STORM = [
+    {"kind": "thermal_throttle", "start_s": 1.0, "duration_s": 20.0,
+     "derate": 0.4},
+    {"kind": "engine_stall", "start_s": 4.0, "duration_s": 3.0,
+     "crash": True},
+    {"kind": "memory_spike", "start_s": 2.0, "duration_s": 10.0,
+     "steal_fraction": 0.5},
+    {"kind": "client_timeout", "timeout_s": 8.0, "max_retries": 1},
+]
+
+
+def test_faulted_run_is_byte_identical_across_repeats():
+    """Seeded determinism audit: every stochastic path (arrivals, jitters,
+    prompts) derives from Scenario.seed, so repeated runs serialize to the
+    SAME bytes."""
+    sc = scenario(faults=STORM, shed={"attainment": 0.6, "window": 6})
+    docs = [json.dumps(sc.run().to_json(), sort_keys=True) for _ in range(2)]
+    assert docs[0] == docs[1]
+
+
+def test_faulted_sim_run_exercises_every_counter():
+    sc = scenario(faults=STORM, shed={"attainment": 0.6, "window": 6},
+                  apps=[ScenarioApp("chatbot", num_requests=10),
+                        ScenarioApp("live_captions", num_requests=8)])
+    fb = faults_block(sc.run())
+    assert fb["injected"] == 4
+    assert fb["timeouts"] > 0
+    assert fb["retries"] > 0
+    assert fb["goodput"] < 1.0
+    assert fb["issued"] == 18
+    assert fb["completed_ok"] < fb["issued"]
+    assert fb["time_to_recover_s"] > 0.0
+
+
+def test_thermal_throttle_slows_makespan_monotonically():
+    def makespan(derate):
+        faults = ([] if derate is None else
+                  [{"kind": "thermal_throttle", "start_s": 0.0,
+                    "duration_s": 1000.0, "derate": derate}])
+        res = scenario(faults=faults).run()
+        return res.sim.summary()["makespan_s"]
+    spans = [makespan(d) for d in (None, 0.7, 0.4)]
+    assert spans[0] < spans[1] < spans[2]
+
+
+def test_sim_crash_replays_in_flight_work():
+    sc = scenario(faults=[{"kind": "engine_stall", "start_s": 1.0,
+                           "duration_s": 2.0, "crash": True}],
+                  apps=[ScenarioApp("deep_research", num_requests=1),
+                        ScenarioApp("chatbot", num_requests=3)])
+    res = sc.run()
+    fb = faults_block(res)
+    assert fb["replays"] > 0
+    assert fb["time_to_recover_s"] > 0.0
+    # every request still completes: replay is recovery, not loss
+    assert fb["issued"] == 4
+    assert sum(len(r.records) for r in res.sim.reports.values()) == 4
+
+
+def test_sim_timeout_cancel_caps_wasted_wait():
+    # deep_research can never finish in 2s: 1 retry then a cancel
+    sc = scenario(faults=[{"kind": "client_timeout", "timeout_s": 2.0,
+                           "max_retries": 1, "backoff_base_s": 0.1}],
+                  apps=[ScenarioApp("deep_research", num_requests=1)])
+    fb = faults_block(sc.run())
+    assert fb["timeouts"] == 2                  # initial attempt + 1 retry
+    assert fb["retries"] == 1
+    assert fb["cancels"] == 1
+    assert fb["completed_ok"] == 0
+    assert fb["goodput"] == 0.0
+
+
+def test_shed_on_slo_sheds_and_scores_against_goodput():
+    # 2 chips + 10x thermal derate: chatbot TTFT/TPOT collapse, the
+    # rolling-attainment trigger fires, and admissions are shed
+    sc = scenario(faults=[{"kind": "thermal_throttle", "start_s": 0.0,
+                           "duration_s": 1000.0, "derate": 0.1}],
+                  shed={"attainment": 0.9, "window": 4, "min_completed": 2},
+                  apps=[ScenarioApp("chatbot", num_requests=12)],
+                  total_chips=2)
+    res = sc.run()
+    fb = faults_block(res)
+    assert fb["sheds"] > 0
+    # shed requests never execute but stay in the goodput denominator
+    executed = sum(len(r.records) for r in res.sim.reports.values())
+    assert executed == fb["issued"] - fb["sheds"]
+    assert fb["goodput"] <= executed / fb["issued"]
+
+
+def test_memory_spike_throttles_admissions_yet_all_complete():
+    def run(faults):
+        return scenario(faults=faults,
+                        apps=[ScenarioApp("chatbot", num_requests=8)],
+                        kv_page_budget=48).run()
+    res = run([{"kind": "memory_spike", "start_s": 0.5, "duration_s": 30.0,
+                "steal_fraction": 0.6}])
+    # the shrunken pool delays admissions, but nothing is lost
+    assert sum(len(r.records) for r in res.sim.reports.values()) == 8
+    assert res.sim.summary()["makespan_s"] > \
+        run([]).sim.summary()["makespan_s"]
+
+
+def test_memory_spike_reclaims_cold_prefixes_first():
+    """Under pressure the analytic prefix pool gives up COLD published
+    prefixes (no in-flight readers) before touching live work — later
+    conversation turns re-prefill (hit rate drops) but still complete."""
+    from repro.bench.conversation import ConversationSpec
+
+    def run(faults):
+        sc = Scenario(
+            apps=[ScenarioApp("conversation", name="chat", num_requests=3,
+                              conversation=ConversationSpec(
+                                  turns=3, system_tokens=128, user_tokens=64,
+                                  assistant_tokens=64, think_time_s=4.0))],
+            seed=7, total_chips=8, kv_page_budget=64, page_size=16,
+            prefix_cache=True, faults=faults)
+        return sc.run().sim.summary()
+    base = run([])
+    hit = run([{"kind": "memory_spike", "start_s": 3.0, "duration_s": 8.0,
+                "steal_fraction": 0.8}])
+    assert hit["prefix"]["hit_rate"] < base["prefix"]["hit_rate"]
+    assert hit["makespan_s"] > base["makespan_s"]
+    assert hit["apps"]["chat"]["n"] == base["apps"]["chat"]["n"] == 9
+
+
+def test_memory_spike_requires_a_page_budget():
+    with pytest.raises(ScenarioError, match="memory_spike"):
+        Scenario(apps=[ScenarioApp("chatbot")], total_chips=8,
+                 faults=[{"kind": "memory_spike"}])
+
+
+def test_fault_telemetry_spans_and_instants():
+    sc = scenario(faults=STORM, telemetry=True,
+                  apps=[ScenarioApp("chatbot", num_requests=10),
+                        ScenarioApp("live_captions", num_requests=8)])
+    res = sc.run()
+    counts = res.sim.trace.counts()
+    assert counts["fault"] == 3                 # thermal + stall + spike
+    assert counts.get("timeout", 0) > 0
+    assert counts.get("retry", 0) > 0
+
+
+# -------------------------------------------------------- scenario loading
+def test_scenario_error_names_key_and_options():
+    with pytest.raises(ScenarioError, match="bogus_key"):
+        Scenario.from_dict({"apps": [{"app": "chatbot"}], "bogus_key": 1})
+    with pytest.raises(ScenarioError, match="nrequests"):
+        Scenario.from_dict({"apps": [{"app": "chatbot", "nrequests": 3}]})
+    with pytest.raises(ScenarioError, match="available"):
+        Scenario.from_dict({"apps": [{"app": "chatbot"}], "policy": "nope"})
+    with pytest.raises(ScenarioError, match="volcano"):
+        Scenario.from_dict({"apps": [{"app": "chatbot"}],
+                            "faults": [{"kind": "volcano"}]})
+    with pytest.raises(ScenarioError, match="arrival"):
+        Scenario.from_dict({"apps": [{"app": "chatbot",
+                                      "arrival": {"kind": "warp"}}]})
+    with pytest.raises(ScenarioError, match="shed_on_slo"):
+        Scenario.from_dict({"apps": [{"app": "chatbot"}],
+                            "shed_on_slo": {"action": "explode"}})
+
+
+def test_faulted_scenario_yaml_round_trip():
+    sc = scenario(faults=STORM, shed={"attainment": 0.6, "window": 6})
+    rt = Scenario.from_yaml(sc.to_yaml())
+    assert rt.to_dict() == sc.to_dict()
+    assert [f.to_dict() for f in rt.faults] == \
+        [f.to_dict() for f in sc.faults]
+    assert rt.shed_config() == sc.shed_config()
+
+
+# ------------------------------------------------------- engine substrate
+def test_engine_faulted_run_and_parity_with_simulator():
+    """The parity pin: the same seeded thermal+timeout schedule on the real
+    engine's virtual clock lands within 5% goodput of the analytic
+    simulator (crash/shed feedback loops are chaotic by design; the
+    deterministic derating path is the one pinned)."""
+    faults = [{"kind": "thermal_throttle", "start_s": 1.0,
+               "duration_s": 30.0, "derate": 0.5},
+              {"kind": "client_timeout", "timeout_s": 20.0,
+               "max_retries": 1}]
+    apps = lambda: [ScenarioApp("chatbot", num_requests=4),  # noqa: E731
+                    ScenarioApp("live_captions", num_requests=4)]
+    sim = faults_block(scenario(faults=faults, apps=apps()).run())
+    eng = faults_block(
+        scenario(faults=faults, apps=apps(), substrate="engine").run())
+    assert eng["injected"] == sim["injected"] == 2
+    assert abs(eng["goodput"] - sim["goodput"]) <= 0.05
+    assert eng["issued"] == sim["issued"] == 8
+
+
+def test_engine_crash_replays_and_completes():
+    sc = scenario(faults=[{"kind": "engine_stall", "start_s": 1.0,
+                           "duration_s": 2.0, "crash": True}],
+                  apps=[ScenarioApp("deep_research", num_requests=1),
+                        ScenarioApp("chatbot", num_requests=2)],
+                  substrate="engine", kv_page_budget=96)
+    res = sc.run()
+    fb = faults_block(res)
+    assert fb["replays"] > 0
+    assert fb["issued"] == 3
+    assert sum(len(r.records) for r in res.sim.reports.values()) == 3
+
+
+def test_engine_run_is_byte_identical_across_repeats():
+    sc = scenario(faults=[{"kind": "thermal_throttle", "start_s": 1.0,
+                           "duration_s": 10.0, "derate": 0.5}],
+                  apps=[ScenarioApp("chatbot", num_requests=3)],
+                  substrate="engine")
+    docs = [json.dumps(sc.run().to_json(), sort_keys=True) for _ in range(2)]
+    assert docs[0] == docs[1]
