@@ -3,11 +3,12 @@
 Accepts either document family this repo emits:
 
 * **Scenario documents** — ``ScenarioResult.to_json()`` (``schema_version``
-  1.0–1.3): per-app SLO attainment, latency percentiles (p50/p99/mean),
-  makespan/utilization, workflow ``e2e_s``, the 1.2 ``memory`` block, and
-  the 1.3 ``telemetry`` scalars (mean SMACT/SMOCC/bandwidth/power, KV
-  peak). A file may also hold a JSON list of such documents (e.g. one per
-  policy).
+  1.0–1.6): per-app SLO attainment, latency percentiles (p50/p99/mean),
+  makespan/utilization, workflow ``e2e_s``, the 1.2 ``memory`` block, the
+  1.3 ``telemetry`` scalars (mean SMACT/SMOCC/bandwidth/power, KV peak),
+  and the 1.6 ``routing`` scalars (routed/affinity_hits/imbalance, when a
+  router is enabled). A file may also hold a JSON list of such documents
+  (e.g. one per policy).
 * **BENCH documents** — ``benchmarks/run.py --json`` (``version`` 1):
   ``us_per_call`` per suite/row, which covers both timings and dispatch
   counters (``engine_dispatch_*`` rows).
@@ -32,7 +33,7 @@ import sys
 
 #: metric-name suffixes where HIGHER is better (everything else: lower)
 HIGHER_IS_BETTER = ("slo_attainment", "utilization", "attainment",
-                    "smact_mean", "smocc_mean")
+                    "smact_mean", "smocc_mean", "affinity_hits")
 #: ignore absolute deltas below this (in metric units) — keeps near-zero
 #: virtual-clock metrics from tripping the relative threshold
 DEFAULT_MIN_ABS = 1e-9
@@ -68,6 +69,10 @@ def _scenario_metrics(doc: dict) -> dict[str, float]:
             if key in summary.get("memory", {}):   # schema 1.2 memory block
                 out[f"{base}/{label}/memory/{key}"] = \
                     float(summary["memory"][key])
+        rt = summary.get("routing", {})            # schema 1.6 routing
+        if rt.get("enabled"):
+            for key in ("routed", "affinity_hits", "imbalance"):
+                out[f"{base}/{label}/routing/{key}"] = float(rt.get(key, 0))
         tel = summary.get("telemetry", {})         # schema 1.3 telemetry
         for key in ("smact_mean", "smocc_mean", "bandwidth_gbs_mean",
                     "power_w_mean", "kv_pages_peak"):

@@ -1,0 +1,111 @@
+"""Routing-tier scenario family: replica fleets behind every pluggable
+routing policy, on BOTH substrates.
+
+Concurrent chat sessions (the ``conversation`` workload, shared system
+prompt, growing history) are served by ``replicas: 4`` copies of one
+partition. Sweeping ``routing:`` across the registry compares, at a fixed
+(workload, seed):
+
+* **hit_rate** — the prefix-cache hit rate; ``prefix_aware`` probes each
+  replica's radix trie and must be >= ``round_robin``, which scatters a
+  session's turns across replicas and re-pays their prefill;
+* **slo_attainment** — mean per-app attainment (>= for prefix_aware too);
+* **imbalance** — coefficient of variation of routed tokens across the
+  fleet (the load-balancing lens: p2c/least-outstanding minimize it,
+  affinity-seeking policies trade it away);
+* **affinity_hits / routed** — how often the policy found a warm replica.
+
+A second axis holds ``prefix_aware`` fixed and sweeps ``replicas`` 1→4.
+Engine rows rerun the policy sweep on the real engines (one
+InferenceEngine per replica, radix-trie probes via ``prefix_peek``) and
+carry ``parity_gap`` — the relative makespan gap vs. the simulator row,
+required <= 5%. All rows are virtual-clock deterministic and diff in CI
+(``BENCH_routing.json``). No KV page budget: the simulator pools pages
+globally while the engine splits them per replica, so a binding budget
+is the one knob the substrates legitimately disagree on.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_enabled
+from repro.bench import Scenario, ScenarioApp
+from repro.bench.conversation import ConversationSpec
+
+POLICIES = ("round_robin", "least_outstanding_tokens",
+            "power_of_two_choices", "session_affinity", "prefix_aware")
+POLICIES_SMOKE = ("round_robin", "prefix_aware")
+REPLICAS = 4
+REPLICA_SWEEP = (1, 2, 4)
+REPLICA_SWEEP_SMOKE = (1, 4)
+USERS = 6
+TURNS = 3
+SEED = 7
+
+
+def spec() -> ConversationSpec:
+    return ConversationSpec(turns=TURNS, system_tokens=192, user_tokens=48,
+                            assistant_tokens=48, think_time_s=1.0)
+
+
+def scenario(routing: str, replicas: int = REPLICAS, *,
+             substrate: str = "simulator") -> Scenario:
+    return Scenario(
+        name=f"routing-{routing}-r{replicas}-{substrate}",
+        mode="concurrent", policy="chunked", total_chips=16,
+        substrate=substrate, seed=SEED, prefix_cache=True, page_size=16,
+        replicas=replicas, routing=routing,
+        apps=[ScenarioApp("conversation", name="chat", num_requests=USERS,
+                          conversation=spec())])
+
+
+def _point_metrics(summary: dict) -> dict:
+    """Derived metrics for one sweep point from the schema-1.6 blocks."""
+    rt = summary.get("routing") or {}
+    pfx = summary.get("prefix") or {}
+    apps = summary.get("apps") or {}
+    att = (sum(a["slo_attainment"] for a in apps.values()) / len(apps)
+           if apps else 0.0)
+    return {
+        "replicas": rt.get("replicas", 1),
+        "routed": rt.get("routed", 0),
+        "affinity_hits": rt.get("affinity_hits", 0),
+        "imbalance": rt.get("imbalance", 0.0),
+        "hit_rate": pfx.get("hit_rate", 0.0),
+        "slo_attainment": att,
+    }
+
+
+def _derived(m: dict, extra: str = "") -> str:
+    s = (f"replicas={m['replicas']};"
+         f"hit_rate={m['hit_rate']:.3f};"
+         f"slo_attainment={m['slo_attainment']:.3f};"
+         f"imbalance={m['imbalance']:.3f};"
+         f"affinity_hits={m['affinity_hits']};"
+         f"routed={m['routed']}")
+    return s + (";" + extra if extra else "")
+
+
+def run() -> list[str]:
+    policies = POLICIES_SMOKE if smoke_enabled() else POLICIES
+    reps = REPLICA_SWEEP_SMOKE if smoke_enabled() else REPLICA_SWEEP
+    rows = []
+    sim_makespan = {}
+    for pol in policies:
+        s = scenario(pol).run().sim.summary()
+        sim_makespan[pol] = s["makespan_s"]
+        rows.append(row(f"routing_sim_{pol}",
+                        s["makespan_s"] * 1e6, _derived(_point_metrics(s))))
+    for n in reps:
+        s = scenario("prefix_aware", n).run().sim.summary()
+        rows.append(row(f"routing_sim_prefix_aware_r{n}",
+                        s["makespan_s"] * 1e6, _derived(_point_metrics(s))))
+    for pol in policies:
+        s = scenario(pol, substrate="engine").run().sim.summary()
+        gap = abs(s["makespan_s"] - sim_makespan[pol]) / sim_makespan[pol]
+        rows.append(row(f"routing_engine_{pol}", s["makespan_s"] * 1e6,
+                        _derived(_point_metrics(s),
+                                 f"parity_gap={gap:.4f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -4,13 +4,16 @@ dashboard (``diff_results.py`` is the regression-diff half).
 
 Input: any mix of files, each holding one document or a JSON array of
 documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
-1.0–1.4; the 1.2 ``memory`` block (page utilization, evictions, recompute),
+1.0–1.6; the 1.2 ``memory`` block (page utilization, evictions, recompute),
 the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
-spans) and the 1.4 ``prefix`` block (radix-cache hit rate, shared pages,
-CoW forks) are surfaced when present — a telemetry-enabled document
+spans), the 1.4 ``prefix`` block (radix-cache hit rate, shared pages,
+CoW forks) and the 1.6 ``routing`` block (per-replica load, imbalance,
+affinity hits) are surfaced when present — a telemetry-enabled document
 renders a per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines,
-and prefix-enabled documents add a hit-rate-vs-shared-fraction curve
-(shared fraction read off each document's conversation spec).
+prefix-enabled documents add a hit-rate-vs-shared-fraction curve (shared
+fraction read off each document's conversation spec), and router-enabled
+documents add per-replica routed-token bars plus, across documents that
+sweep ``replicas``, an attainment-vs-replicas curve.
 
     python benchmarks/plot_results.py results/*.json            # markdown
     python benchmarks/plot_results.py sweep.json --png out.png  # + charts
@@ -78,6 +81,8 @@ def flatten(doc: dict) -> list[dict]:
         mem = summary.get("memory", {})
         tel = summary.get("telemetry", {})
         pfx = summary.get("prefix", {})
+        rt = summary.get("routing", {})
+        routed = rt if rt.get("enabled") else {}
         for app, stats in summary["apps"].items():
             rows.append({
                 "scenario": name, "substrate": substrate, "label": label,
@@ -94,6 +99,10 @@ def flatten(doc: dict) -> list[dict]:
                 "prefix_hit_rate": pfx.get("hit_rate"),
                 "shared_pages": pfx.get("shared_pages"),
                 "cow_forks": pfx.get("cow_forks"),
+                "routing_policy": routed.get("policy"),
+                "replicas": routed.get("replicas"),
+                "imbalance": routed.get("imbalance"),
+                "affinity_hits": routed.get("affinity_hits"),
             })
     return rows
 
@@ -107,6 +116,38 @@ def telemetry_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
             if isinstance(summary, dict) and "telemetry" in summary:
                 out.append((name, label, summary["telemetry"]))
     return out
+
+
+def routing_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
+    """Every (scenario, label, routing block) with a live router."""
+    out = []
+    for doc in docs:
+        name = doc.get("scenario", {}).get("name", "scenario")
+        for label, summary in doc.get("results", {}).items():
+            rt = (summary.get("routing")
+                  if isinstance(summary, dict) else None)
+            if rt and rt.get("enabled"):
+                out.append((name, label, rt))
+    return out
+
+
+def replica_points(docs: list[dict]) -> list[tuple[int, float, str]]:
+    """(replica count, mean attainment, scenario name) per router-enabled
+    result — the replica-scaling curve across a ``sweep_replicas`` run."""
+    pts = []
+    for doc in docs:
+        name = doc.get("scenario", {}).get("name", "scenario")
+        for _label, summary in doc.get("results", {}).items():
+            if not isinstance(summary, dict) or "apps" not in summary:
+                continue
+            rt = summary.get("routing") or {}
+            apps = summary["apps"]
+            if not rt.get("enabled") or not apps:
+                continue
+            att = (sum(a["slo_attainment"] for a in apps.values())
+                   / len(apps))
+            pts.append((int(rt.get("replicas", 1)), att, name))
+    return pts
 
 
 def _shared_frac(doc: dict) -> Optional[float]:
@@ -153,7 +194,8 @@ def to_markdown(rows: list[dict]) -> str:
     cols = ["scenario", "substrate", "app", "rate_per_s", "attainment",
             "p99_s", "page_utilization", "evictions", "recompute_tokens",
             "smact_mean", "smocc_mean", "bandwidth_gbs_mean",
-            "prefix_hit_rate", "shared_pages", "cow_forks"]
+            "prefix_hit_rate", "shared_pages", "cow_forks",
+            "routing_policy", "replicas", "imbalance", "affinity_hits"]
     # drop all-empty optional columns (memory block absent on <1.2 docs)
     cols = [c for c in cols
             if c in ("scenario", "substrate", "app")
@@ -188,8 +230,17 @@ def render_png(rows: list[dict], path: str,
         print(f"# rendering first of {len(tel)} telemetry blocks "
               f"({tel[0][0]}/{tel[0][1]})", file=sys.stderr)
     pfx_pts = prefix_points(docs or [])
+    rt_blocks = routing_blocks(docs or [])
+    if len(rt_blocks) > 1:
+        print(f"# rendering first of {len(rt_blocks)} routing blocks "
+              f"({rt_blocks[0][0]}/{rt_blocks[0][1]})", file=sys.stderr)
+    rep_pts = replica_points(docs or [])
+    # the scaling curve needs at least two distinct replica counts
+    if len({p[0] for p in rep_pts}) < 2:
+        rep_pts = []
     panels = ((1 if sweep else 0) + (2 if mem else 0) + (3 if tel else 0)
-              + (1 if pfx_pts else 0))
+              + (1 if pfx_pts else 0) + (1 if rt_blocks else 0)
+              + (1 if rep_pts else 0))
     if not panels:
         print("# nothing to plot: no sweep points, memory blocks or "
               "telemetry blocks", file=sys.stderr)
@@ -291,6 +342,45 @@ def render_png(rows: list[dict], path: str,
                       fontsize=9)
         ax.legend(fontsize=8, frameon=False, labelcolor=TEXT_PRIMARY)
         ax.set_title("prefix cache vs shared fraction", color=TEXT_PRIMARY,
+                     fontsize=10)
+
+    if rt_blocks:
+        # per-replica routed-token bars: the load-distribution fingerprint
+        # of one routing policy (imbalance annotated in the title)
+        ax = axes.pop(0)
+        name, label, blk = rt_blocks[0]
+        loads = blk.get("per_replica_load", {})
+        reps = list(loads)
+        vals = [loads[r] for r in reps]
+        ax.bar(range(len(vals)), vals, color=SERIES[0], width=0.62)
+        ax.set_xticks(range(len(vals)))
+        ax.set_xticklabels([r.rsplit("#", 1)[-1] for r in reps],
+                           fontsize=8, color=TEXT_SECONDARY)
+        for i, v in enumerate(vals):
+            ax.annotate(_fmt(v), (i, v), ha="center",
+                        textcoords="offset points", xytext=(0, 3),
+                        fontsize=8, color=TEXT_PRIMARY)
+        ax.set_ylabel("routed tokens", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_title(f"replica load — {blk.get('policy', '?')} "
+                     f"(imbalance {_fmt(blk.get('imbalance'))})",
+                     color=TEXT_PRIMARY, fontsize=10)
+
+    if rep_pts:
+        # replica-scaling curve: mean attainment as the fleet grows
+        ax = axes.pop(0)
+        by_rep: dict[int, list[float]] = {}
+        for n, att, _name in rep_pts:
+            by_rep.setdefault(n, []).append(att)
+        xs = sorted(by_rep)
+        ys = [sum(by_rep[x]) / len(by_rep[x]) for x in xs]
+        ax.plot(xs, ys, color=SERIES[1], linewidth=2, marker="o",
+                markersize=4)
+        ax.set_xticks(xs)
+        ax.set_ylim(-0.02, 1.05)
+        ax.set_xlabel("replicas", color=TEXT_SECONDARY, fontsize=9)
+        ax.set_ylabel("mean SLO attainment", color=TEXT_SECONDARY,
+                      fontsize=9)
+        ax.set_title("attainment vs replicas", color=TEXT_PRIMARY,
                      fontsize=10)
 
     if mem:

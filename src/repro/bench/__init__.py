@@ -21,10 +21,11 @@ _EXPORTS = {
     "arrival": ["ArrivalProcess", "BurstyArrivals", "FixedSpacing",
                 "PoissonArrivals", "available_arrivals", "make_arrival",
                 "register_arrival"],
-    "policy": ["ChunkedPolicy", "GreedyPolicy", "PreemptivePriorityPolicy",
-               "SchedulingPolicy", "SloAwarePolicy", "StaticPartitionPolicy",
+    "policy": ["ChunkedPolicy", "GreedyPolicy", "PartitionPlan",
+               "PreemptivePriorityPolicy", "SchedulingPolicy",
+               "SloAwarePolicy", "StaticPartitionPolicy",
                "WeightedFairPolicy", "available_policies", "get_policy",
-               "register_policy"],
+               "register_policy", "resolve_partition"],
     "conversation": ["ConversationSpec", "conversation_prompt",
                      "conversation_trace"],
     "scenario": ["SCHEMA_VERSION", "SUBSTRATES", "Scenario", "ScenarioApp",

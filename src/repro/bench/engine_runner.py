@@ -56,9 +56,9 @@ import numpy as np
 
 from repro.bench.conversation import (ConversationSpec, conversation_prompt,
                                       session_turn)
-from repro.bench.policy import get_policy
+from repro.bench.policy import get_policy, resolve_partition
 from repro.bench.scenario import SETUP_S, Scenario, ScenarioResult
-from repro.bench.seeding import child_seed
+from repro.bench.seeding import child_rng, child_seed
 from repro.core.dag import Phase, build_dag
 from repro.core.apps import app_from_task
 from repro.core.simulator import AppTrace, SimResult, UtilSample
@@ -66,6 +66,7 @@ from repro.core.slo import RequestRecord, SLOReport
 from repro.resilience import FaultStats, SloTracker, time_to_recover
 from repro.serving.engine import InferenceEngine
 from repro.serving.request import Request
+from repro.serving.router import RouteRequest, Router
 
 ENGINE_ARCH = "tinyllama-1.1b"   # execution vehicle; timing is virtual
 ENGINE_LAYERS = 2
@@ -128,6 +129,10 @@ class CostedRequest(Request):
     # hit token at the partition's aggregate HBM bandwidth, zero FLOPs
     gather_tok_s: float = 0.0
     gather_hbm_tok: float = 0.0
+    # router tier: the replica that served this request and the load
+    # (tokens) it was charged — released via Router.note_done at completion
+    route_label: str = ""
+    route_tokens: int = 0
 
 
 def _request_cost(req: CostedRequest, kind: str, tokens: int) -> float:
@@ -160,10 +165,35 @@ class _Pending:
     background: bool
     dep_gates: tuple = ()            # (app, idx) completions gating release
     pred: Optional[tuple] = None     # closed-loop predecessor key
+    # router tier: base partition, source work items (for route-time
+    # recosting at the chosen replica's chip count), KV gather rate input,
+    # and the substrate-neutral routing view of this request
+    group: str = ""
+    items: Optional[list] = None
+    kv_tok_bytes: float = 0.0
+    route_req: Optional[RouteRequest] = None
 
     @property
     def gates(self) -> tuple:
         return self.dep_gates + ((self.pred,) if self.pred else ())
+
+
+def _recost(req: CostedRequest, items: list, chips: int, chip,
+            kv_tok_bytes: float) -> None:
+    """Recompute a request's per-token virtual costs at ``chips`` — the
+    routed replica's share, which can differ from the chip count the
+    request was built at. ``WorkItem.duration_s`` is NOT purely inverse in
+    chips (launch overhead + host terms), so costs must be recomputed from
+    the source items, never scaled by a chip ratio. Per-token WORK
+    (flops/hbm) is full-scale and chip-independent: unchanged."""
+    pre = [it for it in items if it.kind not in DECODE_KINDS]
+    dec = [it for it in items if it.kind in DECODE_KINDS]
+    prefill_s = sum(it.duration_s(chips, chip) for it in pre)
+    decode_s = sum(it.duration_s(chips, chip) for it in dec)
+    req.prefill_tok_s = prefill_s / len(req.prompt)
+    req.decode_tok_s = decode_s / max(len(dec), 1)
+    req.gather_tok_s = (kv_tok_bytes / (chips * chip.hbm_bandwidth)
+                        if kv_tok_bytes else 0.0)
 
 
 @dataclass
@@ -362,16 +392,44 @@ class _FaultController:
 
 def _drive(runs: list[_EngineRun], pending: list[_Pending],
            total_chips: int,
-           recorder=None, faults: Optional[_FaultController] = None
-           ) -> tuple[dict, list[UtilSample]]:
-    """Event loop over one or more engines (one per chip partition) sharing
-    a single virtual timeline. Always steps the laggard engine among those
-    with runnable work so cross-partition dependency releases stay causal;
-    idle engines jump their clock to the next arrival."""
+           recorder=None, faults: Optional[_FaultController] = None,
+           router: Optional[Router] = None,
+           run_idx_of: Optional[dict] = None,
+           group_runs: Optional[dict] = None,
+           chip=None) -> tuple[dict, list[UtilSample]]:
+    """Event loop over one or more engines (one per chip partition — or one
+    per replica under the router tier) sharing a single virtual timeline.
+    Always steps the laggard engine among those with runnable work so
+    cross-partition dependency releases stay causal; idle engines jump
+    their clock to the next arrival.
+
+    Without a router, gate-resolved requests submit immediately (their
+    ``arrival_s`` gates engine admission) — the pre-router path, verbatim.
+    With a router, a gate-resolved request is HELD until its group's
+    virtual clock reaches its arrival, then routed in (arrival, id) order —
+    the same order the simulator's event heap pops arrivals — so routing
+    decisions see the replica state (outstanding load, prefix caches) of
+    arrival time, not of release time."""
     completed: dict[tuple, float] = {}
     util: list[UtilSample] = []
     waiting = list(pending)
     n_total = len(pending)
+
+    def _release(p: _Pending, arr: float) -> bool:
+        """Shed gate + submit; shared by both release paths."""
+        if faults is not None and not faults.on_release(p, completed):
+            return False   # shed: dropped without ever being submitted
+        if not p.background:
+            p.request.deadline_s = arr + p.deadline_hint_s
+        if recorder is not None and p.dep_gates:
+            # workflow dependency release (per-request granularity);
+            # request_id, not trace_idx: every event of one engine
+            # trace keys requests the same way (Chrome tid)
+            recorder.instant("release", p.request.app,
+                             p.request.request_id, arr)
+        runs[p.run_idx].engine.submit(p.request)
+        return True
+
     for _ in range(_MAX_ITERS):
         if faults is not None:
             faults.poll(runs, completed)
@@ -381,11 +439,13 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                 r = done[run.seen]
                 run.seen += 1
                 completed[(r.app, r.trace_idx)] = r.t_done
+                if router is not None and getattr(r, "route_label", ""):
+                    router.note_done(r.route_label, r.route_tokens, r.t_done)
                 if faults is not None:
                     faults.note_done(r)
         if len(completed) >= n_total:
             return completed, util
-        still = []
+        still, ready = [], []
         for p in waiting:
             if all(g in completed for g in p.gates):
                 dep_t = max((completed[g] for g in p.dep_gates), default=0.0)
@@ -393,20 +453,30 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                 if p.pred is not None:
                     arr = max(arr, completed[p.pred])
                 p.request.arrival_s = arr
-                if faults is not None and not faults.on_release(p,
-                                                               completed):
-                    continue   # shed: dropped without ever being submitted
-                if not p.background:
-                    p.request.deadline_s = arr + p.deadline_hint_s
-                if recorder is not None and p.dep_gates:
-                    # workflow dependency release (per-request granularity);
-                    # request_id, not trace_idx: every event of one engine
-                    # trace keys requests the same way (Chrome tid)
-                    recorder.instant("release", p.request.app,
-                                     p.request.request_id, arr)
-                runs[p.run_idx].engine.submit(p.request)
+                if router is None:
+                    _release(p, arr)
+                else:
+                    ready.append(p)
             else:
                 still.append(p)
+        if router is not None and ready:
+            ready.sort(key=lambda p: (p.request.arrival_s,
+                                      p.request.request_id))
+            for p in ready:
+                arr = p.request.arrival_s
+                group_now = max(runs[i].engine.now()
+                                for i in group_runs[p.group])
+                if arr > group_now + 1e-9:
+                    still.append(p)   # not due yet: route with arrival-
+                    continue          # time replica state, like the sim
+                lbl = router.route(p.group, p.route_req, arr)
+                i = run_idx_of[lbl]
+                p.run_idx = i
+                p.request.route_label = lbl
+                p.request.route_tokens = p.route_req.tokens
+                _recost(p.request, p.items, runs[i].chips, chip,
+                        p.kv_tok_bytes)
+                _release(p, arr)
         waiting = still
         # same predicate as InferenceEngine._admit_order: a request the
         # engine would not admit must not make its engine a candidate, or
@@ -422,12 +492,35 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
             t1 = run.engine.now()
             if t1 > t0:
                 util.append(UtilSample(t0, t1, run.chips, total_chips))
+            continue
+        # no engine has runnable work: jump idle clocks to the next
+        # arrival — engine-visible (submitted) or router-held
+        idle = [run for run in runs if run.engine.waiting]
+        held = []
+        if router is not None:
+            held = [p for p in waiting if all(g in completed
+                                              for g in p.gates)]
+        if not idle and not held:
+            raise RuntimeError(
+                f"engine scenario deadlocked: {len(waiting)} request(s) "
+                "gated on completions that can no longer happen")
+        t_eng = min((min(w.arrival_s for w in r.engine.waiting)
+                     for r in idle), default=math.inf)
+        t_held = min((p.request.arrival_s for p in held), default=math.inf)
+        if t_held < t_eng:
+            # advance the whole group of the earliest held request so its
+            # group clock reaches the arrival and the hold above releases
+            p = min(held, key=lambda p: (p.request.arrival_s,
+                                         p.request.request_id))
+            for i in group_runs[p.group]:
+                run = runs[i]
+                tgt = p.request.arrival_s
+                if faults is not None:
+                    tgt = min(tgt, max(faults.next_action_t(i),
+                                       run.engine.now() + 1e-9))
+                if tgt > run.engine.now():
+                    run.engine.advance_to(tgt)
         else:
-            idle = [run for run in runs if run.engine.waiting]
-            if not idle:
-                raise RuntimeError(
-                    f"engine scenario deadlocked: {len(waiting)} request(s) "
-                    "gated on completions that can no longer happen")
             run = min(idle, key=lambda r: min(w.arrival_s
                                               for w in r.engine.waiting))
             tgt = min(w.arrival_s for w in run.engine.waiting)
@@ -447,7 +540,8 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
                    dep_gates_for: Optional[Callable[[int], list]] = None,
                    priority: int = 0,
                    conv: Optional[ConversationSpec] = None,
-                   kv_tok_bytes: float = 0.0) -> list[_Pending]:
+                   kv_tok_bytes: float = 0.0,
+                   group: str = "", routed: bool = False) -> list[_Pending]:
     if conv is not None and conv.max_prompt_tokens() > PROMPT_MAX_TOKENS:
         raise ValueError(
             f"conversation prompts grow to {conv.max_prompt_tokens()} "
@@ -494,13 +588,30 @@ def _build_pending(trace: AppTrace, run_idx: int, *,
             decode_hbm_tok=sum(it.hbm_bytes for it in dec) / n_steps,
             gather_tok_s=gather_tok_s,
             gather_hbm_tok=kv_tok_bytes)
+        rr = None
+        if routed:
+            # the substrate-neutral routing view: token volume and keys
+            # are computed from the SAME SimRequest the simulator routes,
+            # so a (policy, seed) pair makes identical choices; the
+            # literal prompt feeds the engine-side prefix probe
+            rr = RouteRequest(
+                app=trace.name, request_id=j,
+                tokens=sum(it.tokens for it in sim_req.items),
+                session_key=sim_req.prefix_key or trace.name,
+                prefix_key=sim_req.prefix_key or "",
+                prefix_tokens=sim_req.prefix_tokens,
+                prefix_sys_key=sim_req.prefix_sys_key or "",
+                prefix_sys_tokens=sim_req.prefix_sys_tokens,
+                prompt=prompt_arr)
         out.append(_Pending(
             run_idx=run_idx, request=req, offset_s=sim_req.arrival_s,
             setup_s=setup_s, deadline_hint_s=sim_req.deadline_hint_s,
             background=sim_req.background or trace.background,
             dep_gates=tuple(dep_gates_for(j)) if dep_gates_for else (),
             pred=(trace.name, j - 1) if trace.closed_loop and j > 0
-            else None))
+            else None,
+            group=group, items=list(sim_req.items),
+            kv_tok_bytes=kv_tok_bytes, route_req=rr))
     return out
 
 
@@ -567,13 +678,26 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
     chip = sc.chip_spec
     policy = get_policy(sc.policy)
     policy.reset()
-    part_of, chips_of = policy.partition(traces, total_chips)
+    plan = resolve_partition(policy, traces, total_chips,
+                             replicas=sc.replicas)
+    part_of = plan.apps                 # app -> BASE partition
+    # ---- router tier: one engine per replica of each partition ----------
+    router = None
+    if plan.replicas > 1 or sc.routing is not None:
+        router = Router(plan, sc.routing or "round_robin",
+                        rng=child_rng(sc.seed, "routing"))
+        chips_of = router.chips_of()    # exec label -> chips
+        base_of = dict(router.base_of)
+    else:
+        chips_of = dict(plan.chips)
+        base_of = {p: p for p in chips_of}
     parts = list(chips_of)
     run_idx_of = {p: i for i, p in enumerate(parts)}
     rid = itertools.count()
 
     # resilience: the SAME seeded schedule the simulator substrate resolves
-    # (Scenario.fault_schedule is a fresh, identically-seeded instance)
+    # (Scenario.fault_schedule is a fresh, identically-seeded instance);
+    # faults always target BASE partition names, never replica labels
     fsched = sc.fault_schedule()
     shed_cfg = sc.shed_config()
     if fsched is not None:
@@ -581,7 +705,13 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
 
     pending: list[_Pending] = []
     for t_i, trace in enumerate(traces):
-        part = part_of[trace.name]
+        base = part_of[trace.name]
+        if router is not None:
+            # costs are built at the first replica's share and recomputed
+            # at the routed replica's share on release (_recost)
+            build_part = router.labels_for(base)[0]
+        else:
+            build_part = base
         if hasattr(policy, "level_for"):
             prio = policy.level_for(trace.name, trace.background)
         else:
@@ -596,13 +726,14 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                 def dep_fn(j, deps=deps):
                     return [(d, min(j, n - 1)) for d, n in deps if n > 0]
         pending += _build_pending(
-            trace, run_idx_of[part], chips=chips_of[part],
+            trace, run_idx_of[build_part], chips=chips_of[build_part],
             chip=chip, vocab=ecfg.vocab_size,
             seed=child_seed(sc.seed, "prompts", t_i), rid=rid,
             chunk_target_s=sc.chunk_target_s, setup_s=setup_s,
             dep_gates_for=dep_fn, priority=prio,
             conv=(conv_of or {}).get(trace.name),
-            kv_tok_bytes=(kv_tok_of or {}).get(trace.name, 0.0))
+            kv_tok_bytes=(kv_tok_of or {}).get(trace.name, 0.0),
+            group=base, routed=router is not None)
 
     # memory knobs -> a page budget for the (reduced) execution vehicle,
     # via the shared pool-sizing helper; partitions own their chips, so
@@ -626,7 +757,11 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
 
     runs = []
     for p_i, part in enumerate(parts):
-        mine = [p for p in pending if p.run_idx == p_i]
+        if router is not None:
+            # any replica of a group may serve any of its requests
+            mine = [p for p in pending if p.group == base_of[part]]
+        else:
+            mine = [p for p in pending if p.run_idx == p_i]
         need = max((len(p.request.prompt) + p.request.max_new_tokens
                     for p in mine), default=PROMPT_MIN_TOKENS) + 8
         max_seq = math.ceil(need / SEQ_BUCKET) * SEQ_BUCKET
@@ -648,17 +783,31 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                               recorder_chips=chips_of[part],
                               recorder_label=str(part),
                               request_work=_request_work,
-                              time_warp=(fsched.time_warp(part)
+                              time_warp=(fsched.time_warp(base_of[part])
                                          if fsched is not None else None))
         eng.load_params(params)
         runs.append(_EngineRun(engine=eng, chips=chips_of[part]))
+    group_runs = None
+    if router is not None:
+        router.recorder = recorder
+        group_runs = {base: [run_idx_of[lbl]
+                             for lbl in router.labels_for(base)]
+                      for base in plan.chips}
+        # prefix-aware probe: each replica's REAL radix trie, floored to
+        # the prefill-chunk grid exactly like an admission hit
+        for lbl, i in run_idx_of.items():
+            router.set_probe(
+                lbl, lambda rr, eng=runs[i].engine:
+                eng.prefix_peek(rr.prompt))
 
     faults = None
     if fsched is not None or shed_cfg is not None:
         faults = _FaultController(fsched, shed_cfg, policy,
                                   {t.name: t for t in traces}, recorder)
-        faults.build_actions(parts)
-    completed, util = _drive(runs, pending, total_chips, recorder, faults)
+        faults.build_actions([base_of[p] for p in parts])
+    completed, util = _drive(runs, pending, total_chips, recorder, faults,
+                             router=router, run_idx_of=run_idx_of,
+                             group_runs=group_runs, chip=chip)
     recs = _records(runs, {t.name: t for t in traces},
                     first_issue=faults.first_issue if faults else None)
     reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
@@ -703,6 +852,8 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                     chip=chip, strategy=policy.name, trace=recorder,
                     fault_stats=(faults.finalize(runs, recs, part_of)
                                  if faults is not None else None),
+                    routing=(router.routing_block()
+                             if router is not None else None),
                     **mem, **pfx)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed

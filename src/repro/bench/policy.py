@@ -49,6 +49,9 @@ Shipped policies:
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Iterable, Optional, Union
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
@@ -59,6 +62,76 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
 _REGISTRY: dict[str, type["SchedulingPolicy"]] = {}
 
 BACKGROUND_DEMOTION_S = 1e6   # priority offset pushing background work last
+
+
+# ------------------------------------------------------------ partitioning
+@dataclass
+class PartitionPlan:
+    """Structured partition/placement decision (the redesigned
+    ``SchedulingPolicy.partition`` return type).
+
+    The old API returned a raw ``(app -> partition, partition -> chips)``
+    tuple, which could not express replica counts, weights, or any future
+    placement hints — the router tier needs all three. ``PartitionPlan``
+    stays tuple-unpackable (``part_of, chips_of = plan``) so legacy callers
+    and tests keep working while they migrate.
+
+    ``replicas`` asks the router tier to front each partition with N engine
+    replicas (the partition's chips split across them); 1 keeps the
+    single-engine-per-partition behaviour bit-identical to the old API.
+    """
+    apps: dict[str, str]                       # app name -> partition key
+    chips: dict[str, int]                      # partition key -> chip count
+    weights: dict[str, float] = field(default_factory=dict)
+    replicas: int = 1
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"PartitionPlan.replicas must be >= 1, "
+                             f"got {self.replicas}")
+        missing = sorted(set(self.apps.values()) - set(self.chips))
+        if missing:
+            raise ValueError(f"PartitionPlan maps app(s) onto unknown "
+                             f"partition(s) {missing}")
+
+    def __iter__(self):
+        # back-compat: the legacy tuple order, (partition_of, chips_of)
+        yield self.apps
+        yield self.chips
+
+    def partition_for(self, app: str) -> str:
+        return self.apps[app]
+
+
+_TUPLE_PARTITION_WARNED = False
+
+
+def resolve_partition(policy: "SchedulingPolicy",
+                      traces: Iterable["AppTrace"], total_chips: int, *,
+                      replicas: int = 1) -> PartitionPlan:
+    """Call ``policy.partition`` and normalize the result to a
+    :class:`PartitionPlan` — the ONE entry point both substrates use.
+
+    Legacy policies that still return the raw ``(dict, dict)`` tuple are
+    adapted with a one-per-process :class:`DeprecationWarning`. A
+    ``replicas`` override > 1 is applied to plans that did not set their
+    own replica count (a policy that explicitly plans replicas wins)."""
+    plan = policy.partition(traces, total_chips)
+    if not isinstance(plan, PartitionPlan):
+        global _TUPLE_PARTITION_WARNED
+        if not _TUPLE_PARTITION_WARNED:
+            _TUPLE_PARTITION_WARNED = True
+            warnings.warn(
+                f"{type(policy).__name__}.partition returned the legacy "
+                "(partition_of, chips_of) tuple; return a PartitionPlan "
+                "instead (the tuple form is deprecated and cannot express "
+                "replicas or weights)",
+                DeprecationWarning, stacklevel=2)
+        part_of, chips_of = plan
+        plan = PartitionPlan(apps=dict(part_of), chips=dict(chips_of))
+    if replicas > 1 and plan.replicas == 1:
+        plan = dataclasses.replace(plan, replicas=replicas)
+    return plan
 
 
 def register_policy(*names: str):
@@ -114,12 +187,15 @@ class SchedulingPolicy:
 
     # ------------------------------------------------- simulator-side hooks
     def partition(self, traces: Iterable["AppTrace"],
-                  total_chips: int) -> tuple[dict[str, str], dict[str, int]]:
-        """Map app name -> partition key, partition key -> chip count.
-        Default: every app shares one pool of all chips."""
+                  total_chips: int) -> PartitionPlan:
+        """Placement decision: app -> partition, partition -> chips (and
+        optionally weights/replicas) as a :class:`PartitionPlan`.
+        Default: every app shares one pool of all chips. Returning the
+        legacy ``(partition_of, chips_of)`` tuple still works through
+        :func:`resolve_partition` but is deprecated."""
         traces = list(traces)
-        return ({t.name: "__shared__" for t in traces},
-                {"__shared__": total_chips})
+        return PartitionPlan(apps={t.name: "__shared__" for t in traces},
+                             chips={"__shared__": total_chips})
 
     def priority(self, trace: "AppTrace", req: "SimRequest",
                  item: "WorkItem", now: float) -> float:
@@ -216,16 +292,17 @@ class StaticPartitionPolicy(SchedulingPolicy):
         self.weights = dict(weights or {})
 
     def partition(self, traces: Iterable["AppTrace"],
-                  total_chips: int) -> tuple[dict[str, str], dict[str, int]]:
+                  total_chips: int) -> PartitionPlan:
         traces = list(traces)
         if not traces:
-            return {}, {}
+            return PartitionPlan(apps={}, chips={})
         part = {t.name: t.name for t in traces}
         if not self.weights:
             # unweighted: the historical equal split (remainder chips idle
             # — pinned by the Fig. 5 seed-parity numbers)
             per = max(total_chips // len(traces), 1)
-            return part, {t.name: per for t in traces}
+            return PartitionPlan(apps=part,
+                                 chips={t.name: per for t in traces})
         w = {t.name: float(self.weights.get(t.name, 1.0)) for t in traces}
         if any(v <= 0 for v in w.values()):
             raise ValueError("static partition weights must be positive")
@@ -246,7 +323,7 @@ class StaticPartitionPolicy(SchedulingPolicy):
                            reverse=True)
             for i in range(left):
                 chips[order[i % len(order)]] += 1
-        return part, chips
+        return PartitionPlan(apps=part, chips=chips, weights=w)
 
 
 @register_policy("slo_aware")

@@ -50,7 +50,9 @@ Both emit the same versioned ``to_json()`` schema (1.1 adds the
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -69,8 +71,9 @@ from repro.core.workflow import WorkflowSpec, parse_workflow
 from repro.resilience import (FaultSchedule, MemorySpike, ShedConfig,
                               make_fault)
 from repro.roofline.hw import ChipSpec, get_chip
+from repro.serving.router import available_routing_policies
 
-SCHEMA_VERSION = "1.5"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.6"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
@@ -88,11 +91,20 @@ SCHEMA_VERSION = "1.5"   # 1.1: + top-level "substrate", scenario.substrate
                          #      "shed_on_slo" scenario keys
                          #      (repro.resilience) — zero-filled and absent
                          #      respectively on fault-free runs
+                         # 1.6: + per-sim ALWAYS-present "routing" block
+                         #      (policy/replicas/routed/affinity_hits/
+                         #      per_replica_load/imbalance — zero-filled
+                         #      without a router); + "replicas", "routing"
+                         #      and "sweep_replicas" scenario keys
+                         #      (the router tier, repro.serving.router)
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
 SUBSTRATES = ("simulator", "engine")
 RELEASES = ("request", "node")   # workflow dependency-release granularity
+
+
+_MODE_ENGINE_WARNED = False
 
 
 class ScenarioError(ValueError):
@@ -222,15 +234,56 @@ class Scenario:
     #: When rolling attainment drops below the threshold, the scheduling
     #: policy's ``shed_decision`` sheds or downgrades new admissions.
     shed_on_slo: Union[None, bool, dict, ShedConfig] = None
+    #: router tier (schema 1.6): each chip partition is fronted by
+    #: ``replicas`` engine replicas (its chips split across them) and
+    #: ``routing`` names the policy picking the serving replica per
+    #: request — round_robin, least_outstanding_tokens,
+    #: power_of_two_choices, session_affinity, prefix_aware
+    #: (``repro.serving.router`` registry). replicas=1 + routing=None
+    #: keeps both substrates bit-identical to the pre-router behaviour;
+    #: setting either one enables the router (routing alone defaults to
+    #: round_robin over 1 replica, replicas alone to round_robin).
+    replicas: int = 1
+    routing: Union[None, str, dict] = None
     #: arrival rates for :meth:`sweep` (one ScenarioResult per rate);
     #: serialized so a sweep is one YAML document
     sweep_rates: list = field(default_factory=list)
+    #: replica counts for :meth:`sweep` — crossed with ``sweep_rates``
+    #: into a grid when both are set
+    sweep_replicas: list = field(default_factory=list)
     apps: list[ScenarioApp] = field(default_factory=list)
     workflow: Union[None, str, dict, WorkflowSpec] = None
 
     def __post_init__(self):
-        if self.mode == "engine":      # sugar: concurrent on the real engine
+        if self.mode == "engine":      # deprecated alias, kept working
+            global _MODE_ENGINE_WARNED
+            if not _MODE_ENGINE_WARNED:
+                _MODE_ENGINE_WARNED = True
+                warnings.warn(
+                    "mode: engine is a deprecated alias for mode: "
+                    "concurrent + substrate: engine; spell out the "
+                    "substrate (or use Scenario.run(substrate='engine'))",
+                    DeprecationWarning, stacklevel=3)
             self.mode, self.substrate = "concurrent", "engine"
+        if isinstance(self.routing, dict):
+            r = dict(self.routing)
+            pol = r.pop("policy", None)
+            reps = r.pop("replicas", None)
+            if r or pol is None:
+                raise ScenarioError(
+                    f"routing block keys are 'policy' (required) and "
+                    f"'replicas'; got {sorted(self.routing)}")
+            self.routing = pol
+            if reps is not None and self.replicas == 1:
+                self.replicas = int(reps)
+        if self.routing is not None \
+                and self.routing not in available_routing_policies():
+            raise ScenarioError(
+                f"unknown routing policy {self.routing!r}; available: "
+                f"{', '.join(available_routing_policies())}")
+        if self.replicas < 1:
+            raise ScenarioError(f"replicas must be >= 1, "
+                                f"got {self.replicas}")
         if self.mode not in MODES:
             raise ValueError(f"unknown scenario mode {self.mode!r}; "
                              f"expected one of {MODES}")
@@ -262,6 +315,13 @@ class Scenario:
     @property
     def policy_name(self) -> str:
         return self.policy if isinstance(self.policy, str) else self.policy.name
+
+    @property
+    def routing_enabled(self) -> bool:
+        """True when a Router fronts the partitions (replicas > 1 or an
+        explicit routing policy) — the runs that emit a live (non-zero)
+        schema-1.6 ``routing`` block."""
+        return self.replicas > 1 or self.routing is not None
 
     def kv_token_budget(self) -> Optional[int]:
         """The memory knobs as a full-scale KV TOKEN budget (simulator
@@ -360,8 +420,14 @@ class Scenario:
             d["faults"] = [f.to_dict() for f in self.faults]
         if self.shed_on_slo is not None:
             d["shed_on_slo"] = self.shed_on_slo.to_dict()
+        if self.replicas != 1:
+            d["replicas"] = self.replicas
+        if self.routing is not None:
+            d["routing"] = self.routing
         if self.sweep_rates:
             d["sweep_rates"] = list(self.sweep_rates)
+        if self.sweep_replicas:
+            d["sweep_replicas"] = list(self.sweep_replicas)
         if self.apps:
             d["apps"] = [a.to_dict() for a in self.apps]
         if self.workflow is not None:
@@ -386,7 +452,10 @@ class Scenario:
                             page_size=self.page_size,
                             prefix_cache=self.prefix_cache,
                             faults=self.fault_schedule(),
-                            shed=self.shed_config())
+                            shed=self.shed_config(),
+                            replicas=self.replicas,
+                            routing=self.routing,
+                            routing_rng=child_rng(self.seed, "routing"))
 
     def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
                start_s: float = 0.0) -> AppTrace:
@@ -399,7 +468,16 @@ class Scenario:
                              seed=child_seed(self.seed, "arrival", idx),
                              arrival=sa.arrival)
 
-    def run(self) -> "ScenarioResult":
+    def run(self, substrate: Optional[str] = None) -> "ScenarioResult":
+        """Execute the scenario. ``substrate`` overrides the spec's
+        substrate for THIS run without mutating the scenario — the
+        supported way to run one declaration on both substrates (parity
+        tests used to mutate ``sc.substrate`` in place)."""
+        if substrate is not None and substrate != self.substrate:
+            if substrate not in SUBSTRATES:
+                raise ValueError(f"unknown substrate {substrate!r}; "
+                                 f"expected one of {SUBSTRATES}")
+            return dataclasses.replace(self, substrate=substrate).run()
         names = [sa.name or sa.app_type for sa in self.apps]
         dups = sorted({n for n in names if names.count(n) > 1})
         if dups:
@@ -419,28 +497,51 @@ class Scenario:
         return self._run_workflow()
 
     def sweep(self, rates_per_s: Optional[list] = None, *,
+              replicas: Optional[list] = None,
               apps: Optional[list] = None) -> list["ScenarioResult"]:
-        """Arrival-rate load curve: run this scenario once per Poisson rate
-        (``rates_per_s`` or the spec's ``sweep_rates``) and return one
-        :class:`ScenarioResult` per point — attainment-vs-rate curves from
-        one declaration, on either substrate. ``apps`` restricts which app
-        names get the swept arrival process (default: all)."""
+        """Load/scale curve: run this scenario once per sweep point and
+        return one :class:`ScenarioResult` per point, on either substrate.
+
+        Two axes — Poisson arrival rate (``rates_per_s`` or the spec's
+        ``sweep_rates``) and replica count (``replicas`` or the spec's
+        ``sweep_replicas``); setting both crosses them into a grid
+        (rate-major order, point names ``{name}@{rate}x{rep}``). ``apps``
+        restricts which app names get the swept arrival process
+        (default: all).
+
+        Every point runs on a DEEP COPY of the scenario, so per-point
+        state (arrival processes, resolved fault specs, app lists) cannot
+        leak between grid points — repeating a sweep yields byte-identical
+        result documents (pinned in tests/test_router.py)."""
         rates = list(rates_per_s if rates_per_s is not None
                      else self.sweep_rates)
-        if not rates:
-            raise ValueError("no sweep rates: pass rates_per_s or set "
-                             "Scenario.sweep_rates")
+        reps = list(replicas if replicas is not None
+                    else self.sweep_replicas)
+        if not rates and not reps:
+            raise ValueError("no sweep axes: pass rates_per_s/replicas or "
+                             "set Scenario.sweep_rates/sweep_replicas")
         from repro.bench.arrival import PoissonArrivals
         results = []
-        for rate in rates:
-            swept = [dataclasses.replace(
-                         sa, arrival=PoissonArrivals(rate_per_s=float(rate)))
-                     if apps is None or (sa.name or sa.app_type) in apps
-                     else sa
-                     for sa in self.apps]
-            point = dataclasses.replace(self, name=f"{self.name}@{rate}",
-                                        apps=swept, sweep_rates=[])
-            results.append(point.run())
+        for rate in (rates or [None]):
+            for rep in (reps or [None]):
+                point = copy.deepcopy(self)
+                point.sweep_rates, point.sweep_replicas = [], []
+                if rate is not None:
+                    point.apps = [
+                        dataclasses.replace(sa, arrival=PoissonArrivals(
+                            rate_per_s=float(rate)))
+                        if apps is None or (sa.name or sa.app_type) in apps
+                        else sa
+                        for sa in point.apps]
+                if rep is not None:
+                    point.replicas = int(rep)
+                if rate is not None and rep is not None:
+                    point.name = f"{self.name}@{rate}x{rep}"
+                elif rep is not None:
+                    point.name = f"{self.name}@r{rep}"
+                else:
+                    point.name = f"{self.name}@{rate}"
+                results.append(point.run())
         return results
 
     def _run_exclusive(self) -> "ScenarioResult":
@@ -467,7 +568,9 @@ class Scenario:
             policy=self.policy, chip=self.chip_spec,
             chunk_target_s=self.chunk_target_s, max_rounds=max_rounds,
             release=self.workflow_release,
-            faults=self.fault_schedule(), shed=self.shed_config())
+            faults=self.fault_schedule(), shed=self.shed_config(),
+            replicas=self.replicas, routing=self.routing,
+            routing_seed=self.seed)
         return ScenarioResult(scenario=self, sims={"workflow": sim},
                               node_finish_s=finish, e2e_s=e2e)
 
@@ -535,7 +638,10 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
                       chunk_target_s: float = 0.05,
                       max_rounds: int = 12,
                       release: str = "node",
-                      faults=None, shed=None
+                      faults=None, shed=None,
+                      replicas: int = 1,
+                      routing: Union[str, None] = None,
+                      routing_seed: int = 0
                       ) -> tuple[SimResult, dict[str, float], float]:
     """Execute a workflow DAG on the pod: the DAG scheduler releases each
     node's trace when its dependencies complete; the simulator runs ONCE
@@ -585,7 +691,12 @@ def run_workflow_spec(spec: WorkflowSpec, *, total_chips: int,
             traces.append(trace)
         sim = PodSimulator(total_chips, policy=policy, chip=chip,
                            chunk_target_s=chunk_target_s,
-                           faults=faults, shed=shed)
+                           faults=faults, shed=shed,
+                           replicas=replicas, routing=routing,
+                           # a FRESH identically-seeded stream per round:
+                           # routing choices repeat, so the fixed point
+                           # converges on one consistent placement
+                           routing_rng=child_rng(routing_seed, "routing"))
         result = sim.run(traces)
         new_fin = {}
         for name in exec_nodes:

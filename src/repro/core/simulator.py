@@ -25,12 +25,14 @@ import warnings
 from dataclasses import dataclass
 from typing import Optional, Union
 
-from repro.bench.policy import SchedulingPolicy, get_policy
+from repro.bench.policy import (SchedulingPolicy, get_policy,
+                                resolve_partition)
 from repro.core.costs import WorkItem
 from repro.core.slo import SLO, RequestRecord, SLOReport
 from repro.resilience import (FaultSchedule, FaultStats, ShedConfig,
                               SloTracker, time_to_recover)
 from repro.roofline.hw import ChipSpec, TPU_V5E
+from repro.serving.router import RouteRequest, Router, empty_routing_block
 from repro.telemetry.recorder import TraceRecorder
 
 
@@ -97,6 +99,9 @@ class PodSimulator:
                  prefix_cache: bool = False,
                  faults: Optional[FaultSchedule] = None,
                  shed: Optional[ShedConfig] = None,
+                 replicas: int = 1,
+                 routing: Union[str, None] = None,
+                 routing_rng=None,
                  strategy: Union[str, None] = None):
         if strategy is not None:
             warnings.warn("PodSimulator(strategy=...) is deprecated; use "
@@ -110,6 +115,13 @@ class PodSimulator:
         self.kv_token_budget = kv_token_budget
         self.page_size = page_size
         self.prefix_cache = prefix_cache
+        #: router tier (analytic mirror of the engine's replica fleet):
+        #: each partition is served by ``replicas`` execution lanes and a
+        #: routing policy picks one per request. replicas=1 + routing=None
+        #: keeps the event loop bit-identical to the pre-router simulator.
+        self.replicas = replicas
+        self.routing = routing
+        self.routing_rng = routing_rng
         #: resilience (repro.resilience): injected fault schedule + the
         #: shed-on-SLO admission controller — None keeps the clean path
         #: bit-identical to the pre-resilience simulator
@@ -131,7 +143,33 @@ class PodSimulator:
         # appends); SimResult.trace feeds repro.telemetry's derived views
         telem = TraceRecorder()
         apps = {t.name: t for t in traces}
-        partition_of, chips_of = policy.partition(traces, self.total_chips)
+        plan = resolve_partition(policy, traces, self.total_chips,
+                                 replicas=self.replicas)
+        partition_of = plan.apps            # app -> BASE partition
+        # ---- router tier: replica lanes per partition -------------------
+        # With routing enabled the execution partitions are the router's
+        # replica labels (chips split across them); faults keep matching
+        # on BASE partition names via base_of. Disabled, everything below
+        # runs on the base partitions exactly as before.
+        router: Union[Router, None] = None
+        if plan.replicas > 1 or self.routing is not None:
+            router = Router(plan, self.routing or "round_robin",
+                            rng=self.routing_rng, recorder=telem)
+            chips_of = router.chips_of()    # exec label -> chips
+            base_of = dict(router.base_of)
+        else:
+            chips_of = plan.chips
+            base_of = {p: p for p in chips_of}
+        #: sticky route: (app, request_id) -> exec label, assigned once at
+        #: arrival; evictions, crash replays and client reissues all go
+        #: back to the SAME replica (its cache holds the request's state)
+        route_of: dict[tuple, str] = {}
+        route_toks: dict[tuple, int] = {}
+
+        def pkey(lbl: str, key: str):
+            """Prefix-model key: per-replica when routing is on (each
+            replica has its own trie), the plain global key otherwise."""
+            return (lbl, key) if router is not None else key
 
         # ---- resilience: fault schedule + shed-on-SLO controller --------
         fsched = self.faults
@@ -215,6 +253,26 @@ class PodSimulator:
         pf = {"lookups": 0, "hits": 0, "hit_tokens": 0, "shared_pages": 0,
               "prompt_tokens": 0}
 
+        if router is not None:
+            # prefix-aware routing probe: what the analytic trie of one
+            # replica would serve for this request — same key fallback and
+            # page-grid floor as the arrival-time hit computation below
+            def _make_probe(lbl: str):
+                def probe(rr: RouteRequest) -> int:
+                    hit = 0
+                    if rr.prefix_key and rr.prefix_tokens > 0:
+                        hit = min(prefix_cached.get(pkey(lbl, rr.prefix_key),
+                                                    0), rr.prefix_tokens)
+                        if rr.prefix_sys_key:
+                            hit = max(hit, min(
+                                prefix_cached.get(
+                                    pkey(lbl, rr.prefix_sys_key), 0),
+                                rr.prefix_sys_tokens))
+                    return (hit // self.page_size) * self.page_size
+                return probe
+            for lbl in router.by_label:
+                router.set_probe(lbl, _make_probe(lbl))
+
         def cur_budget(now: float):
             """Budget net of memory spikes active at ``now`` (time-varying
             under faults; the base budget otherwise)."""
@@ -283,7 +341,7 @@ class PodSimulator:
             st["decode_t0"] = None
             epoch[k] = epoch.get(k, 0) + 1
             evicted_ever.add(k)
-            enqueue(partition_of[req.app], now, req, 0, 1.0)
+            enqueue(route_of[k], now, req, 0, 1.0)
 
         #: requests whose first admission was already traced — the
         #: unbudgeted path admits trivially but must still emit ONE
@@ -377,7 +435,7 @@ class PodSimulator:
                 # faults: thermal derating / stall windows stretch the
                 # dispatch through the SAME piecewise time integrator the
                 # engine's virtual clock uses (parity by construction)
-                end = (fsched.advance(now, dur, partition)
+                end = (fsched.advance(now, dur, base_of[partition])
                        if fsched is not None else now + dur)
                 busy_until[partition] = end
                 util.append(UtilSample(now, end, chips, self.total_chips))
@@ -429,6 +487,25 @@ class PodSimulator:
                     "t_start": now, "decode_done": 0, "decode_t0": None,
                     "tokens_done": 0,
                 }
+                # route once, at arrival, on the event-heap order — the
+                # engine runner routes the SAME requests in the same
+                # (arrival, seq) order, so a given (policy, seed) pair
+                # makes identical choices on both substrates
+                if router is not None:
+                    rr = RouteRequest(
+                        app=req.app, request_id=req.request_id,
+                        tokens=sum(it.tokens for it in req.items),
+                        session_key=req.prefix_key or req.app,
+                        prefix_key=req.prefix_key or "",
+                        prefix_tokens=req.prefix_tokens,
+                        prefix_sys_key=req.prefix_sys_key or "",
+                        prefix_sys_tokens=req.prefix_sys_tokens)
+                    route_of[k] = router.route(partition_of[req.app], rr,
+                                               now)
+                    route_toks[k] = rr.tokens
+                else:
+                    route_of[k] = partition_of[req.app]
+                lbl = route_of[k]
                 if self.prefix_cache:
                     ptoks = sum(it.tokens for it in req.items
                                 if it.kind == "prefill")
@@ -437,17 +514,20 @@ class PodSimulator:
                     hit, held = 0, None
                     if req.prefix_key and req.prefix_tokens > 0:
                         pf["lookups"] += 1
-                        hit = min(prefix_cached.get(req.prefix_key, 0),
+                        hit = min(prefix_cached.get(pkey(lbl,
+                                                         req.prefix_key), 0),
                                   req.prefix_tokens, ptoks)
-                        held = req.prefix_key
+                        held = pkey(lbl, req.prefix_key)
                         if req.prefix_sys_key:
                             # ancestor fallback: the session path descends
                             # from the shared system-prompt path in the trie
                             sys_hit = min(
-                                prefix_cached.get(req.prefix_sys_key, 0),
+                                prefix_cached.get(
+                                    pkey(lbl, req.prefix_sys_key), 0),
                                 req.prefix_sys_tokens, ptoks)
                             if sys_hit > hit:
-                                hit, held = sys_hit, req.prefix_sys_key
+                                hit, held = sys_hit, pkey(
+                                    lbl, req.prefix_sys_key)
                         hit = (hit // self.page_size) * self.page_size
                     if hit > 0:
                         pf["hits"] += 1
@@ -460,7 +540,7 @@ class PodSimulator:
                         telem.instant("prefix_hit", req.app, req.request_id,
                                       now, tokens=hit)
                     st["prefix_hit"] = hit
-                enqueue(partition_of[req.app], now, req, 0, 1.0)
+                enqueue(lbl, now, req, 0, 1.0)
             elif kind == "complete":
                 partition, req, idx, rem, started, run_frac, ep = payload
                 k = (req.app, req.request_id)
@@ -508,10 +588,14 @@ class PodSimulator:
                             enqueue(partition, now, req, idx + 1, 1.0)
                         else:
                             finished.add(k)
+                            if router is not None:
+                                router.note_done(route_of[k],
+                                                 route_toks.get(k, 0), now)
                             if k in resident:    # release the KV footprint
                                 mem["resident"] -= resident.pop(k)[1]
                                 note_kv(now)
-                            key = req.prefix_key
+                            key = (pkey(route_of[k], req.prefix_key)
+                                   if req.prefix_key else None)
                             if (self.prefix_cache and key
                                     and req.prefix_tokens > 0):
                                 # publish: the prompt's shareable prefix
@@ -520,7 +604,9 @@ class PodSimulator:
                                 # published (and charged) once under the sys
                                 # key, the session key carries only its
                                 # increment beyond it
-                                sysk, syst = req.prefix_sys_key, 0
+                                sysk = (pkey(route_of[k], req.prefix_sys_key)
+                                        if req.prefix_sys_key else None)
+                                syst = 0
                                 if sysk:
                                     syst = min(req.prefix_sys_tokens,
                                                req.prefix_tokens)
@@ -582,9 +668,9 @@ class PodSimulator:
                         fstats.replays += 1
                         telem.instant("replay", r.app, r.request_id, now)
                         abort_progress(kk, now)
-                        enqueue(partition_of[r.app], w.t1, r, 0, 1.0)
+                        enqueue(route_of[kk], w.t1, r, 0, 1.0)
                 for p in chips_of:
-                    if w.matches(p):
+                    if w.matches(base_of[p]):
                         busy_until[p] = w.t1   # restart at window end
             elif kind == "spike":
                 # an external app grabbed part of the pool: evict live
@@ -648,7 +734,7 @@ class PodSimulator:
                 k = payload
                 if k not in finished and k not in cancelled:
                     r = req_of[k]
-                    enqueue(partition_of[r.app], now, r, 0, 1.0)
+                    enqueue(route_of[k], now, r, 0, 1.0)
                     heapq.heappush(events, (now + client.timeout_s,
                                             next(self._seq), "timeout",
                                             (k, attempts[k])))
@@ -684,6 +770,8 @@ class PodSimulator:
                          prefix_shared_pages=pf["shared_pages"],
                          prefix_hits=pf["hits"],
                          prefix_lookups=pf["lookups"],
+                         routing=(router.routing_block()
+                                  if router is not None else None),
                          trace=telem)
 
 
@@ -708,6 +796,9 @@ class SimResult:
     prefix_hits: int = 0
     prefix_lookups: int = 0
     prefix_cow_forks: int = 0     # engine-only effect; analytic model: 0
+    # ---- router tier (schema 1.6's ALWAYS-present "routing" block; a
+    # router-less run carries the zero-filled block)
+    routing: Union[dict, None] = None
     #: recorded event trace (repro.telemetry) — always present for
     #: simulator runs; engine runs carry one when telemetry is enabled.
     #: NOT part of summary()/to_json() unless the scenario opts in.
@@ -773,6 +864,11 @@ class SimResult:
             "cow_forks": self.prefix_cow_forks,
         }
 
+    def routing_summary(self) -> dict:
+        """Schema 1.6 "routing" block — ALWAYS present (zero-filled when
+        no router fronted the run), identical keys on both substrates."""
+        return dict(self.routing) if self.routing else empty_routing_block()
+
     def faults_summary(self) -> dict:
         """Schema 1.5 "faults" block — ALWAYS present (zero-filled when no
         faults were injected), identical keys on both substrates. Goodput
@@ -795,6 +891,7 @@ class SimResult:
             **({"memory": mem} if mem is not None else {}),
             **({"prefix": pfx} if pfx is not None else {}),
             "faults": self.faults_summary(),
+            "routing": self.routing_summary(),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,

@@ -553,6 +553,17 @@ class InferenceEngine:
         if len(ids) >= npages:
             self.prefix.insert([int(t) for t in eff], ids[:npages])
 
+    def prefix_peek(self, tokens) -> int:
+        """Router probe: tokens of ``tokens`` this engine's prefix cache
+        already holds, floored to the prefill-chunk grid exactly like
+        :meth:`_prefix_lookup` floors a real admission hit — and with no
+        side effects (no stats, no LRU touch), so probing the losing
+        replicas of a routing decision leaves them untouched."""
+        if self.prefix is None or tokens is None:
+            return 0
+        matched = self.prefix.peek([int(t) for t in tokens])
+        return (matched // self.prefill_chunk) * self.prefill_chunk
+
     def _prefix_lookup(self, eff: np.ndarray) -> tuple[int, list[int]]:
         """Longest cached prefix of ``eff``, floored to the prefill-chunk
         grid so the resumed prefill re-dispatches on exactly the chunk

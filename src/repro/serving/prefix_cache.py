@@ -127,6 +127,29 @@ class PrefixCache:
             self._touch(node)
         return matched, pages
 
+    def peek(self, tokens: Sequence[int]) -> int:
+        """Length of the longest cached prefix of ``tokens``, with ZERO
+        side effects — no stats, no LRU touch. The router's prefix-aware
+        policy probes every replica with this before choosing one, so a
+        probe must not perturb eviction order or hit-rate accounting on
+        the replicas that lose the race."""
+        node, matched = self.root, 0
+        i = 0
+        while i < len(tokens):
+            piece = tokens[i:i + self.page_size]
+            best, best_lcp = None, 0
+            for ch in node.children:
+                l = _lcp(piece, ch.key)
+                if l > best_lcp:
+                    best, best_lcp = ch, l
+            if best is None:
+                break
+            matched += best_lcp
+            if best_lcp < len(best.key) or len(best.key) < self.page_size:
+                break               # diverged mid-page / partial tail
+            node, i = best, i + self.page_size
+        return matched
+
     # ------------------------------------------------------------ publish
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
         """Publish a finished slot's prompt pages under their token key.

@@ -84,10 +84,9 @@ def test_every_policy_runs_on_engine_deterministically(policy):
 def test_substrates_emit_schema_identical_documents():
     """Same YAML -> simulator and engine to_json() documents have identical
     structure; only the substrate field (and metric values) differ."""
-    eng = _concurrent("slo_aware", "engine").run().to_json()
-    sim_sc = _concurrent("slo_aware", "engine")
-    sim_sc.substrate = "simulator"
-    sim = sim_sc.run().to_json()
+    sc = _concurrent("slo_aware", "engine")
+    eng = sc.run().to_json()
+    sim = sc.run(substrate="simulator").to_json()
     assert eng["substrate"] == "engine" and sim["substrate"] == "simulator"
     assert eng["scenario"] == {**sim["scenario"], "substrate": "engine"}
 

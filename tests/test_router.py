@@ -1,0 +1,332 @@
+"""Router tier + partition-plan API redesign.
+
+Covers the routing-policy registry and every in-tree policy, the
+``PartitionPlan`` dataclass (tuple back-compat shim with its one-shot
+``DeprecationWarning``), the always-present schema-1.6 ``routing`` result
+block, cross-substrate routing parity (<=5% makespan gap per policy),
+the policy ranking pins (power-of-two-choices never worse than
+round-robin at p99 under bursty arrivals; prefix-aware strictly beats
+round-robin on prefix hit rate for conversation workloads), and the
+``Scenario.sweep`` deep-copy / rate-x-replica grid semantics.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.bench import (BurstyArrivals, PartitionPlan, Scenario,
+                         ScenarioApp, ScenarioError, resolve_partition)
+from repro.bench.conversation import ConversationSpec
+from repro.bench.policy import SchedulingPolicy
+from repro.core.simulator import AppTrace
+from repro.core.slo import SLO
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.router import (ReplicaView, RouteRequest, Router,
+                                  available_routing_policies,
+                                  empty_routing_block, get_routing_policy,
+                                  register_routing_policy, replica_labels,
+                                  split_chips)
+
+ALL_ROUTING = ("round_robin", "least_outstanding_tokens",
+               "power_of_two_choices", "session_affinity", "prefix_aware")
+
+
+def _conv_scenario(routing, replicas=4, *, substrate="simulator", seed=7):
+    return Scenario(
+        name=f"rt-{routing}-{substrate}", mode="concurrent",
+        policy="chunked", total_chips=16, substrate=substrate, seed=seed,
+        prefix_cache=True, page_size=16, replicas=replicas, routing=routing,
+        apps=[ScenarioApp("conversation", name="chat", num_requests=4,
+                          conversation=ConversationSpec(
+                              turns=3, system_tokens=128, user_tokens=32,
+                              assistant_tokens=32, think_time_s=1.0))])
+
+
+# ------------------------------------------------------------ registry
+def test_registry_lists_all_in_tree_policies():
+    avail = available_routing_policies()
+    for name in ALL_ROUTING:
+        assert name in avail
+
+
+def test_aliases_resolve_to_the_same_classes():
+    assert type(get_routing_policy("p2c")) \
+        is type(get_routing_policy("power_of_two_choices"))
+    assert type(get_routing_policy("sticky")) \
+        is type(get_routing_policy("session_affinity"))
+    assert type(get_routing_policy("least_outstanding")) \
+        is type(get_routing_policy("least_outstanding_tokens"))
+
+
+def test_unknown_routing_policy_raises():
+    with pytest.raises(KeyError, match="unknown routing policy"):
+        get_routing_policy("teleport")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_routing_policy("round_robin")
+        class Dup:  # pragma: no cover - never instantiated
+            pass
+
+
+def test_scenario_validates_routing_and_replicas():
+    with pytest.raises(ScenarioError, match="unknown routing policy"):
+        Scenario(routing="teleport", apps=[ScenarioApp("chatbot")])
+    with pytest.raises(ScenarioError, match="replicas must be >= 1"):
+        Scenario(replicas=0, apps=[ScenarioApp("chatbot")])
+    with pytest.raises(ScenarioError, match="routing block keys"):
+        Scenario(routing={"policy": "round_robin", "flavor": "mild"},
+                 apps=[ScenarioApp("chatbot")])
+    sc = Scenario(routing={"policy": "p2c", "replicas": 3},
+                  apps=[ScenarioApp("chatbot")])
+    assert sc.routing == "p2c" and sc.replicas == 3
+
+
+# ------------------------------------------------- PartitionPlan shim
+def test_partition_plan_tuple_unpacks():
+    plan = PartitionPlan(apps={"a": "p"}, chips={"p": 8})
+    apps, chips = plan
+    assert apps == {"a": "p"} and chips == {"p": 8}
+    assert plan.partition_for("a") == "p"
+
+
+def _traces():
+    return [AppTrace("chatbot", SLO(), [])]
+
+
+def test_in_tree_policies_return_partition_plans():
+    from repro.bench.policy import available_policies, get_policy
+    traces = _traces()
+    for name in available_policies():
+        plan = get_policy(name).partition(traces, 64)
+        assert isinstance(plan, PartitionPlan), name
+
+
+def test_legacy_tuple_partition_warns_once_and_still_works():
+    class LegacyPolicy(SchedulingPolicy):
+        name = "legacy_tuple"
+
+        def partition(self, traces, total_chips):
+            return ({t.name: "__shared__" for t in traces},
+                    {"__shared__": total_chips})
+
+    from repro.bench import policy as policy_mod
+    traces = _traces()
+    policy_mod._TUPLE_PARTITION_WARNED = False
+    with pytest.warns(DeprecationWarning, match="PartitionPlan"):
+        plan = resolve_partition(LegacyPolicy(), traces, 32)
+    assert isinstance(plan, PartitionPlan)
+    assert plan.chips == {"__shared__": 32}
+    # one-per-process: the second resolve stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        resolve_partition(LegacyPolicy(), traces, 32)
+
+
+def test_resolve_partition_applies_replica_override():
+    from repro.bench.policy import get_policy
+    plan = resolve_partition(get_policy("greedy"), _traces(), 64,
+                             replicas=4)
+    assert plan.replicas == 4
+
+
+# ------------------------------------------------------- router units
+def test_replica_labels_and_chip_split():
+    assert replica_labels("llm", 1) == ["llm"]      # bit-identical base
+    assert replica_labels("llm", 3) == ["llm#r0", "llm#r1", "llm#r2"]
+    assert split_chips(8, 1) == [8]
+    assert split_chips(10, 4) == [3, 3, 2, 2]
+    assert split_chips(2, 4) == [1, 1, 1, 1]        # every replica >= 1
+
+
+def _router(policy, replicas=4, chips=8):
+    plan = PartitionPlan(apps={"a": "p"}, chips={"p": chips},
+                         replicas=replicas)
+    return Router(plan, policy, rng=np.random.default_rng(0))
+
+
+def _req(rid, tokens=100, session="", prefix=""):
+    return RouteRequest(app="a", request_id=rid, tokens=tokens,
+                        session_key=session, prefix_key=prefix)
+
+
+def test_round_robin_cycles():
+    r = _router("round_robin")
+    labels = [r.route("p", _req(i)) for i in range(6)]
+    assert labels == ["p#r0", "p#r1", "p#r2", "p#r3", "p#r0", "p#r1"]
+
+
+def test_least_outstanding_prefers_lightest_replica():
+    r = _router("least_outstanding_tokens", replicas=2)
+    assert r.route("p", _req(0, tokens=500)) == "p#r0"
+    assert r.route("p", _req(1, tokens=10)) == "p#r1"
+    assert r.route("p", _req(2, tokens=10)) == "p#r1"   # 500 vs 10
+    r.note_done("p#r0", 500)
+    assert r.route("p", _req(3, tokens=10)) == "p#r0"   # 0 vs 20
+
+
+def test_session_affinity_pins_sessions():
+    r = _router("session_affinity")
+    first = r.route("p", _req(0, session="alice"))
+    r.route("p", _req(1, session="bob"))
+    assert r.route("p", _req(2, session="alice")) == first
+    assert r.route("p", _req(3, session="alice")) == first
+    assert r.policy.affinity_hits == 2
+
+
+def test_prefix_aware_routes_to_warmest_replica():
+    r = _router("prefix_aware")
+    warm = {"p#r2": 64}
+    for lbl in r.chips_of():
+        r.set_probe(lbl, lambda req, v=warm.get(lbl, 0): v)
+    assert r.route("p", _req(0)) == "p#r2"
+    assert r.policy.affinity_hits == 1
+    # cold request (all probes 0 after overriding): least outstanding wins
+    r2 = _router("prefix_aware", replicas=2)
+    for lbl in r2.chips_of():
+        r2.set_probe(lbl, lambda req: 0)
+    r2.route("p", _req(0, tokens=100))
+    assert r2.route("p", _req(1, tokens=10)) == "p#r1"
+
+
+def test_power_of_two_is_seed_deterministic():
+    ra, rb = _router("p2c"), _router("p2c")
+    picks_a = [ra.route("p", _req(i)) for i in range(8)]
+    picks_b = [rb.route("p", _req(i)) for i in range(8)]
+    assert picks_a == picks_b
+    assert len(set(picks_a)) > 1    # it does spread load
+
+
+def test_routing_block_shape_and_imbalance():
+    r = _router("round_robin", replicas=2)
+    r.route("p", _req(0, tokens=100))
+    r.route("p", _req(1, tokens=300))
+    blk = r.routing_block()
+    assert blk["enabled"] and blk["policy"] == "round_robin"
+    assert blk["routed"] == 2 and blk["replicas"] == 2
+    assert blk["per_replica_load"] == {"p#r0": 100, "p#r1": 300}
+    assert blk["imbalance"] == pytest.approx(0.5)   # CV of (100, 300)
+    assert set(empty_routing_block()) == set(blk)
+
+
+def test_prefix_cache_peek_has_no_side_effects():
+    alloc = BlockAllocator(32, 4, max_slots=4, max_blocks=8)
+    pc = PrefixCache(alloc)
+    toks = list(range(16))
+    alloc.alloc_slot(0, len(toks))
+    pc.insert(toks, alloc.slot_page_ids(0)[:alloc.pages_needed(len(toks))])
+    alloc.free_slot(0)
+    before = (pc.stats.lookups, pc.stats.hits, pc.stats.hit_tokens)
+    assert pc.peek(toks) == 16
+    assert pc.peek(list(range(8))) == 8
+    assert pc.peek([99, 98]) == 0
+    assert (pc.stats.lookups, pc.stats.hits, pc.stats.hit_tokens) == before
+
+
+# ----------------------------------------------- schema / result block
+def test_routing_block_always_present_and_zero_filled_without_router():
+    for substrate in ("simulator", "engine"):
+        sc = Scenario(name="plain", mode="concurrent", policy="greedy",
+                      total_chips=32, substrate=substrate,
+                      apps=[ScenarioApp("chatbot", num_requests=2)])
+        doc = sc.run().to_json()
+        blk = doc["results"]["concurrent"]["routing"]
+        assert blk == empty_routing_block(), substrate
+
+
+def test_routed_run_emits_live_block_on_both_substrates():
+    blocks = {}
+    for substrate in ("simulator", "engine"):
+        doc = _conv_scenario("prefix_aware",
+                             substrate=substrate).run().to_json()
+        blk = doc["results"]["concurrent"]["routing"]
+        assert blk["enabled"] and blk["policy"] == "prefix_aware"
+        assert blk["replicas"] == 4
+        assert blk["routed"] == 12           # 4 sessions x 3 turns
+        assert sum(blk["per_replica_load"].values()) > 0
+        blocks[substrate] = blk
+        # spec keys round-trip
+        assert doc["scenario"]["replicas"] == 4
+        assert doc["scenario"]["routing"] == "prefix_aware"
+    # the two substrates route identically at a fixed (policy, seed)
+    assert blocks["simulator"] == blocks["engine"]
+
+
+def test_run_substrate_override_does_not_mutate_the_spec():
+    sc = _conv_scenario("round_robin")
+    doc = sc.run(substrate="engine").to_json()
+    assert doc["substrate"] == "engine"
+    assert sc.substrate == "simulator"
+    with pytest.raises(ValueError, match="unknown substrate"):
+        sc.run(substrate="abacus")
+
+
+# ----------------------------------------------------------- parity
+@pytest.mark.parametrize("routing", ALL_ROUTING)
+def test_cross_substrate_routing_parity(routing):
+    """<=5% makespan gap between substrates, per routing policy."""
+    sim = _conv_scenario(routing).run().sim
+    eng = _conv_scenario(routing, substrate="engine").run().sim
+    assert eng.makespan_s == pytest.approx(sim.makespan_s, rel=0.05), routing
+    assert eng.routing["routed"] == sim.routing["routed"]
+
+
+# ------------------------------------------------------ ranking pins
+def _bursty_scenario(routing, substrate="simulator"):
+    return Scenario(
+        name=f"burst-{routing}", mode="concurrent", policy="greedy",
+        total_chips=16, substrate=substrate, seed=3,
+        replicas=4, routing=routing,
+        apps=[ScenarioApp("chatbot", num_requests=12,
+                          arrival=BurstyArrivals(burst_size=4,
+                                                 burst_gap_s=2.0)),
+              ScenarioApp("imagegen", num_requests=4,
+                          arrival=BurstyArrivals(burst_size=2,
+                                                 burst_gap_s=4.0))])
+
+
+def test_p2c_never_worse_than_round_robin_at_p99_under_bursts():
+    def worst_p99(routing):
+        doc = _bursty_scenario(routing).run().to_json()
+        return max(a["p99"]
+                   for a in doc["results"]["concurrent"]["apps"].values())
+    assert worst_p99("power_of_two_choices") <= worst_p99("round_robin")
+
+
+def test_prefix_aware_strictly_beats_round_robin_hit_rate():
+    for substrate in ("simulator", "engine"):
+        def hit_rate(routing):
+            doc = _conv_scenario(routing,
+                                 substrate=substrate).run().to_json()
+            return doc["results"]["concurrent"]["prefix"]["hit_rate"]
+        assert hit_rate("prefix_aware") > hit_rate("round_robin"), substrate
+
+
+# ------------------------------------------------------------- sweeps
+def test_sweep_grid_names_and_replica_axis():
+    sc = _conv_scenario("round_robin", replicas=1)
+    pts = sc.sweep(rates_per_s=[2.0], replicas=[1, 2])
+    assert [p.to_json()["scenario"]["name"] for p in pts] == \
+        ["rt-round_robin-simulator@2.0x1", "rt-round_robin-simulator@2.0x2"]
+    rep_only = sc.sweep(replicas=[2])
+    assert rep_only[0].to_json()["scenario"]["name"] == \
+        "rt-round_robin-simulator@r2"
+    assert rep_only[0].to_json()["scenario"]["replicas"] == 2
+    with pytest.raises(ValueError, match="no sweep axes"):
+        sc.sweep()
+
+
+def test_sweep_repeats_byte_identically():
+    """Each point deep-copies the spec: no state leaks between points,
+    so repeating the sweep serializes byte-identical documents."""
+    sc = _conv_scenario("prefix_aware", replicas=1)
+    first = json.dumps([r.to_json() for r in
+                        sc.sweep(rates_per_s=[1.0, 4.0], replicas=[1, 2])])
+    again = json.dumps([r.to_json() for r in
+                        sc.sweep(rates_per_s=[1.0, 4.0], replicas=[1, 2])])
+    assert first == again
+    # and the original spec is untouched
+    assert sc.replicas == 1 and sc.name == "rt-prefix_aware-simulator"
