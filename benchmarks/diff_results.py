@@ -3,12 +3,15 @@
 Accepts either document family this repo emits:
 
 * **Scenario documents** — ``ScenarioResult.to_json()`` (``schema_version``
-  1.0–1.6): per-app SLO attainment, latency percentiles (p50/p99/mean),
+  1.0–1.7): per-app SLO attainment, latency percentiles (p50/p99/mean,
+  plus the 1.7 ttft/tpot/itl token-latency percentiles),
   makespan/utilization, workflow ``e2e_s``, the 1.2 ``memory`` block, the
   1.3 ``telemetry`` scalars (mean SMACT/SMOCC/bandwidth/power, KV peak),
-  and the 1.6 ``routing`` scalars (routed/affinity_hits/imbalance, when a
-  router is enabled). A file may also hold a JSON list of such documents
-  (e.g. one per policy).
+  the 1.6 ``routing`` scalars (routed/affinity_hits/imbalance, when a
+  router is enabled), and the 1.7 ``batching`` scalars (mixed_steps and
+  decode_stall_fraction, when a step-budget policy ran — stall fraction
+  diffs lower-is-better). A file may also hold a JSON list of such
+  documents (e.g. one per policy).
 * **BENCH documents** — ``benchmarks/run.py --json`` (``version`` 1):
   ``us_per_call`` per suite/row, which covers both timings and dispatch
   counters (``engine_dispatch_*`` rows).
@@ -31,9 +34,11 @@ import json
 import os
 import sys
 
-#: metric-name suffixes where HIGHER is better (everything else: lower)
+#: metric-name suffixes where HIGHER is better (everything else: lower —
+#: notably decode_stall_fraction, which regresses when it RISES)
 HIGHER_IS_BETTER = ("slo_attainment", "utilization", "attainment",
-                    "smact_mean", "smocc_mean", "affinity_hits")
+                    "smact_mean", "smocc_mean", "affinity_hits",
+                    "mixed_steps")
 #: ignore absolute deltas below this (in metric units) — keeps near-zero
 #: virtual-clock metrics from tripping the relative threshold
 DEFAULT_MIN_ABS = 1e-9
@@ -73,13 +78,18 @@ def _scenario_metrics(doc: dict) -> dict[str, float]:
         if rt.get("enabled"):
             for key in ("routed", "affinity_hits", "imbalance"):
                 out[f"{base}/{label}/routing/{key}"] = float(rt.get(key, 0))
+        bt = summary.get("batching", {})           # schema 1.7 batching
+        if bt.get("enabled"):
+            for key in ("mixed_steps", "decode_stall_fraction"):
+                out[f"{base}/{label}/batching/{key}"] = float(bt.get(key, 0))
         tel = summary.get("telemetry", {})         # schema 1.3 telemetry
         for key in ("smact_mean", "smocc_mean", "bandwidth_gbs_mean",
                     "power_w_mean", "kv_pages_peak"):
             if key in tel:
                 out[f"{base}/{label}/telemetry/{key}"] = float(tel[key])
         for app, stats in summary["apps"].items():
-            for key in ("slo_attainment", "mean", "p50", "p99"):
+            for key in ("slo_attainment", "mean", "p50", "p99",
+                        "ttft_p99", "tpot_p99", "itl_p99"):
                 if key in stats:
                     out[f"{base}/{label}/{app}/{key}"] = float(stats[key])
     return out

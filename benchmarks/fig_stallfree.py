@@ -1,0 +1,129 @@
+"""Stall-free mixed batching: decode TPOT p99 and decode-stall fraction
+versus the per-step prefill budget share, mixed vs exclusive prefill.
+
+The workload pairs a decode-heavy app (``chatbot``: short prompts, long
+token streams, tight TPOT SLO) with a prefill-heavy one
+(``deep_research``: 100s-scale prefill chains) on one partition — the
+head-of-line-blocking shape the step-budget hook exists for. Three policy
+families run the SAME (workload, seed):
+
+* **fcfs** — exclusive prefill: a whole prompt monopolizes every step it
+  runs in; decodes stall behind it (the paper's starvation mechanism);
+* **chunked** — bounded prefill chunks, but still one prefill-only phase
+  per step;
+* **mixed @ share s** — ``MixedBatchPolicy``: every step spends
+  ``s`` of its token budget on (multi-slot batched) prefill and the rest
+  on decode, so decode rows advance EVERY step.
+
+Per sweep point the row carries the chatbot's TPOT p99 (schema-1.7
+per-app percentile), the run's ``decode_stall_fraction`` (schema-1.7
+batching block), and the prefill app's makespan proxy (max e2e). The
+50/50 row also carries the acceptance deltas vs fcfs: ``tpot_gain``
+(TPOT p99 improvement, higher is better) and ``prefill_regress`` (the
+prefill-makespan regression the budget is allowed to cost, <= 10%).
+Engine rows rerun the sweep on the real InferenceEngine and carry the
+cross-substrate ``stall_gap`` (absolute decode-stall-fraction gap,
+required <= 0.05). All rows are virtual-clock deterministic and diff in
+CI (``BENCH_stallfree.json``; stall fraction diffs lower-is-better).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, smoke_enabled
+from repro.bench import Scenario, ScenarioApp
+from repro.bench.policy import MixedBatchPolicy
+
+SHARES = (0.25, 0.5, 0.75)
+SHARES_SMOKE = (0.5,)
+CHAT_REQUESTS = 8
+RESEARCH_REQUESTS = 2
+CHAT_REQUESTS_SMOKE = 4
+RESEARCH_REQUESTS_SMOKE = 1
+SEED = 7
+
+
+def scenario(policy, *, substrate: str = "simulator",
+             tag: str = "") -> Scenario:
+    smoke = smoke_enabled()
+    return Scenario(
+        name=f"stallfree-{tag}-{substrate}",
+        mode="concurrent", policy=policy, total_chips=16,
+        substrate=substrate, seed=SEED,
+        apps=[ScenarioApp("chatbot", num_requests=(
+                  CHAT_REQUESTS_SMOKE if smoke else CHAT_REQUESTS)),
+              ScenarioApp("deep_research", num_requests=(
+                  RESEARCH_REQUESTS_SMOKE if smoke else RESEARCH_REQUESTS))])
+
+
+def _point_metrics(summary: dict) -> dict:
+    """Derived metrics for one sweep point from the schema-1.7 blocks."""
+    bat = summary.get("batching") or {}
+    apps = summary.get("apps") or {}
+    chat = apps.get("chatbot", {})
+    research = apps.get("deep_research", {})
+    return {
+        "tpot_p99": chat.get("tpot_p99", 0.0),
+        "ttft_p99": chat.get("ttft_p99", 0.0),
+        "itl_p99": chat.get("itl_p99", 0.0),
+        "stall_fraction": bat.get("decode_stall_fraction", 0.0),
+        "mixed_steps": bat.get("mixed_steps", 0),
+        "prefill_makespan": research.get("max", 0.0),
+        "makespan": summary.get("makespan_s", 0.0),
+    }
+
+
+def _derived(m: dict, extra: str = "") -> str:
+    s = (f"tpot_p99={m['tpot_p99']:.4f};"
+         f"ttft_p99={m['ttft_p99']:.4f};"
+         f"itl_p99={m['itl_p99']:.4f};"
+         f"stall_fraction={m['stall_fraction']:.4f};"
+         f"mixed_steps={m['mixed_steps']};"
+         f"prefill_makespan={m['prefill_makespan']:.3f}")
+    return s + (";" + extra if extra else "")
+
+
+def run() -> list[str]:
+    shares = SHARES_SMOKE if smoke_enabled() else SHARES
+    rows = []
+    sim_stall = {}
+
+    base = _point_metrics(
+        scenario("fcfs", tag="fcfs").run().sim.summary())
+    sim_stall["fcfs"] = base["stall_fraction"]
+    rows.append(row("stallfree_sim_fcfs", base["makespan"] * 1e6,
+                    _derived(base)))
+    m = _point_metrics(
+        scenario("chunked", tag="chunked").run().sim.summary())
+    sim_stall["chunked"] = m["stall_fraction"]
+    rows.append(row("stallfree_sim_chunked", m["makespan"] * 1e6,
+                    _derived(m)))
+    for s in shares:
+        pol = MixedBatchPolicy(prefill_share=s)
+        m = _point_metrics(
+            scenario(pol, tag=f"mixed{int(s * 100)}").run().sim.summary())
+        sim_stall[s] = m["stall_fraction"]
+        extra = ""
+        if s == 0.5:
+            # acceptance deltas vs exclusive prefill: decode TPOT p99 must
+            # improve while the prefill makespan regresses <= 10%
+            gain = ((base["tpot_p99"] - m["tpot_p99"]) / base["tpot_p99"]
+                    if base["tpot_p99"] else 0.0)
+            regress = ((m["prefill_makespan"] - base["prefill_makespan"])
+                       / base["prefill_makespan"]
+                       if base["prefill_makespan"] else 0.0)
+            extra = f"tpot_gain={gain:.4f};prefill_regress={regress:.4f}"
+        rows.append(row(f"stallfree_sim_mixed{int(s * 100)}",
+                        m["makespan"] * 1e6, _derived(m, extra)))
+
+    for tag, pol in (("fcfs", "fcfs"), ("chunked", "chunked"),
+                     ("mixed50", MixedBatchPolicy(prefill_share=0.5))):
+        key = 0.5 if tag == "mixed50" else tag
+        m = _point_metrics(
+            scenario(pol, substrate="engine", tag=tag).run().sim.summary())
+        gap = abs(m["stall_fraction"] - sim_stall[key])
+        rows.append(row(f"stallfree_engine_{tag}", m["makespan"] * 1e6,
+                        _derived(m, f"stall_gap={gap:.4f}")))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

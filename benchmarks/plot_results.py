@@ -4,11 +4,12 @@ dashboard (``diff_results.py`` is the regression-diff half).
 
 Input: any mix of files, each holding one document or a JSON array of
 documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
-1.0–1.6; the 1.2 ``memory`` block (page utilization, evictions, recompute),
+1.0–1.7; the 1.2 ``memory`` block (page utilization, evictions, recompute),
 the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
 spans), the 1.4 ``prefix`` block (radix-cache hit rate, shared pages,
-CoW forks) and the 1.6 ``routing`` block (per-replica load, imbalance,
-affinity hits) are surfaced when present — a telemetry-enabled document
+CoW forks), the 1.6 ``routing`` block (per-replica load, imbalance,
+affinity hits) and the 1.7 ``batching`` block (mixed steps, decode-stall
+fraction, plus per-app TPOT p99) are surfaced when present — a telemetry-enabled document
 renders a per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines,
 prefix-enabled documents add a hit-rate-vs-shared-fraction curve (shared
 fraction read off each document's conversation spec), and router-enabled
@@ -83,12 +84,15 @@ def flatten(doc: dict) -> list[dict]:
         pfx = summary.get("prefix", {})
         rt = summary.get("routing", {})
         routed = rt if rt.get("enabled") else {}
+        bt = summary.get("batching", {})
+        batched = bt if bt.get("enabled") else {}
         for app, stats in summary["apps"].items():
             rows.append({
                 "scenario": name, "substrate": substrate, "label": label,
                 "app": app, "rate_per_s": rate,
                 "attainment": stats.get("slo_attainment"),
                 "p99_s": stats.get("p99"),
+                "tpot_p99_s": stats.get("tpot_p99"),
                 "makespan_s": summary.get("makespan_s"),
                 "page_utilization": mem.get("page_utilization"),
                 "evictions": mem.get("evictions"),
@@ -103,6 +107,8 @@ def flatten(doc: dict) -> list[dict]:
                 "replicas": routed.get("replicas"),
                 "imbalance": routed.get("imbalance"),
                 "affinity_hits": routed.get("affinity_hits"),
+                "mixed_steps": batched.get("mixed_steps"),
+                "stall_fraction": batched.get("decode_stall_fraction"),
             })
     return rows
 
@@ -192,10 +198,12 @@ def _fmt(v: Any) -> str:
 
 def to_markdown(rows: list[dict]) -> str:
     cols = ["scenario", "substrate", "app", "rate_per_s", "attainment",
-            "p99_s", "page_utilization", "evictions", "recompute_tokens",
+            "p99_s", "tpot_p99_s", "page_utilization", "evictions",
+            "recompute_tokens",
             "smact_mean", "smocc_mean", "bandwidth_gbs_mean",
             "prefix_hit_rate", "shared_pages", "cow_forks",
-            "routing_policy", "replicas", "imbalance", "affinity_hits"]
+            "routing_policy", "replicas", "imbalance", "affinity_hits",
+            "mixed_steps", "stall_fraction"]
     # drop all-empty optional columns (memory block absent on <1.2 docs)
     cols = [c for c in cols
             if c in ("scenario", "substrate", "app")

@@ -105,8 +105,8 @@ def main(argv=None) -> None:
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
                             fig7_workflow, fig_memory, fig_prefix,
-                            fig_resilience, fig_routing, kernel_bench,
-                            roofline_table, telemetry_bench)
+                            fig_resilience, fig_routing, fig_stallfree,
+                            kernel_bench, roofline_table, telemetry_bench)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
@@ -117,6 +117,7 @@ def main(argv=None) -> None:
         ("fig_prefix", fig_prefix.run),
         ("fig_resilience", fig_resilience.run),
         ("fig_routing", fig_routing.run),
+        ("fig_stallfree", fig_stallfree.run),
         ("appendix_platforms", appendix_platforms.run),
         ("engine_bench", engine_bench.run),
         ("telemetry_bench", telemetry_bench.run),

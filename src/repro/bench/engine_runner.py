@@ -630,6 +630,10 @@ def _record_for(r, trace: AppTrace,
         if r.decode_tokens_full > 1 and len(r.t_tokens) > 1:
             rec.tpot_s = ((r.t_tokens[-1] - r.t_tokens[0])
                           / (r.decode_tokens_full - 1))
+            # raw inter-token gaps from the engine's real per-token
+            # timestamps — the itl_p99 samples (schema 1.7)
+            rec.itl_samples_s = [float(b - a) for a, b in
+                                 zip(r.t_tokens, r.t_tokens[1:])]
         else:
             rec.tpot_s = 0.0
     if trace.slo.step is not None:
@@ -830,12 +834,29 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
             peak_kv_tokens=round(pool_util * budget) * page,
             evictions=sum(e.stats.evictions for e in paged),
             recompute_tokens=sum(e.stats.recompute_tokens for e in paged))
+    engines = [r.engine for r in runs]
+    # schema 1.7 "batching" block from the REAL engine's step accounting —
+    # same keys the simulator's analytic mirror emits
+    es = [e.stats for e in engines]
+    bat_on = any(s.budget_enabled for s in es)
+    ready = sum(s.decode_ready_time_s for s in es)
+    bat = {
+        "enabled": bat_on,
+        "mixed_steps": sum(s.mixed_steps for s in es),
+        "steps": sum(s.steps for s in es),
+        "prefill_tokens": sum(s.prefill_tokens for s in es),
+        "decode_tokens": sum(s.decode_tokens for s in es),
+        "prefill_share": (float(getattr(policy, "prefill_share", 0.0))
+                          if bat_on else 0.0),
+        "decode_stall_fraction": (
+            sum(s.decode_stall_time_s for s in es) / ready
+            if ready > 0 else 0.0),
+    }
     pfx = {}
     if sc.prefix_cache:
         # schema 1.4 "prefix" block, from the REAL trie's counters. The
         # denominator mirrors the simulator's "prompt tokens seen": what
         # was actually prefilled plus what the trie served instead.
-        engines = [r.engine for r in runs]
         hit = sum(e.stats.prefix_hit_tokens for e in engines)
         pfx = dict(
             prefix_enabled=True,
@@ -854,6 +875,7 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                                  if faults is not None else None),
                     routing=(router.routing_block()
                              if router is not None else None),
+                    batching=bat,
                     **mem, **pfx)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed

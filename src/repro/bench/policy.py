@@ -30,6 +30,11 @@ Shipped policies:
                split at ``chunk_target_s`` boundaries so short work can
                interleave (the engine's former 'chunked' policy, now also
                available at pod scale).
+  mixed      — BEYOND-PAPER: stall-free mixed batching (Sarathi-style).
+               Every engine step carries a token budget split between
+               prefill and decode (``step_budget``), so decode rows advance
+               EVERY step; mid-prefill slots share one multi-slot batched
+               prefill dispatch. Chunk behaviour inherited from chunked.
   static     — chips split equally among apps at start (≙ MPS 33%); idle
                partitions stay idle → underutilization (paper Fig. 5a).
   slo_aware  — work-conserving EDF by per-item SLO slack + chunking;
@@ -227,6 +232,21 @@ class SchedulingPolicy:
         :class:`ChunkedPolicy` and descendants opt into chunking)."""
         return None
 
+    def step_budget(self, default_chunk: int, prefilling: int,
+                    decoding: int) -> Optional[tuple[int, int]]:
+        """Per-step token budget split for STALL-FREE MIXED BATCHING
+        (Sarathi-style): return ``(prefill_tokens, decode_tokens)`` and the
+        engine makes EVERY step a mixed batch — up to ``prefill_tokens`` of
+        prefill spread over the mid-prefill slots (one multi-slot batched
+        dispatch where the family allows), then one decode step for all
+        ready rows. ``prefilling`` / ``decoding`` are the current counts of
+        mid-prefill and decode-ready slots. ``None`` (the default) keeps
+        the legacy step path — prefill phase first, decode only when the
+        policy is not ``exclusive_prefill`` — byte-for-byte. The simulator
+        mirrors the same split analytically (``batching`` summary block);
+        only :class:`MixedBatchPolicy` opts in out of the box."""
+        return None
+
     def on_admit(self, req: "Request") -> None:
         """Observe a request actually claiming a decode slot — the
         engine-side state hook (mirror of the simulator's
@@ -274,6 +294,42 @@ class ChunkedPolicy(SchedulingPolicy):
 
     def prefill_chunk_tokens(self, default_chunk: int) -> Optional[int]:
         return default_chunk
+
+
+@register_policy("mixed")
+class MixedBatchPolicy(ChunkedPolicy):
+    """Stall-free mixed batching (Sarathi-style): every engine step carries
+    a fixed TOKEN budget split between prefill and decode, so decode rows
+    advance every step — no decode stall while a long prompt prefills —
+    while prefill throughput is bounded, not starved.
+
+    ``step_tokens``: total token budget per step (default ``2 *
+    prefill_chunk``: the legacy chunk of prefill plus a decode token per
+    slot at typical slot counts). ``prefill_share``: fraction of the budget
+    given to prefill (0..1); the decode side always covers every
+    decode-ready row (decode is one batched token per row — starving it
+    saves almost nothing and costs TPOT, the whole point of the policy).
+    Chunk-level behaviour (admission order, simulator ``chunk_fraction``)
+    is inherited from :class:`ChunkedPolicy`, so the analytic substrate
+    chunks work at the same boundaries the engine steps at.
+    """
+
+    def __init__(self, step_tokens: Optional[int] = None,
+                 prefill_share: float = 0.5):
+        if not 0.0 <= prefill_share <= 1.0:
+            raise ValueError(f"prefill_share must be in [0, 1], "
+                             f"got {prefill_share}")
+        self.step_tokens = step_tokens
+        self.prefill_share = prefill_share
+
+    def step_budget(self, default_chunk: int, prefilling: int,
+                    decoding: int) -> Optional[tuple[int, int]]:
+        total = self.step_tokens or 2 * default_chunk
+        prefill_tokens = int(round(total * self.prefill_share))
+        # at least one prefill token whenever prefill work exists —
+        # prefill_share=0 throttles prefill, it must not deadlock it
+        prefill_tokens = max(prefill_tokens, 1) if prefilling else 0
+        return prefill_tokens, decoding
 
 
 @register_policy("static")

@@ -73,7 +73,7 @@ from repro.resilience import (FaultSchedule, MemorySpike, ShedConfig,
 from repro.roofline.hw import ChipSpec, get_chip
 from repro.serving.router import available_routing_policies
 
-SCHEMA_VERSION = "1.6"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.7"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
@@ -97,6 +97,13 @@ SCHEMA_VERSION = "1.6"   # 1.1: + top-level "substrate", scenario.substrate
                          #      without a router); + "replicas", "routing"
                          #      and "sweep_replicas" scenario keys
                          #      (the router tier, repro.serving.router)
+                         # 1.7: + per-sim ALWAYS-present "batching" block
+                         #      (enabled/mixed_steps/steps/prefill_tokens/
+                         #      decode_tokens/prefill_share/
+                         #      decode_stall_fraction — zero-filled without
+                         #      a step-budget policy); + per-app token-
+                         #      latency percentiles (ttft_p50/p99,
+                         #      tpot_p50/p99, itl_p99) in "apps"
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")

@@ -253,6 +253,28 @@ class PodSimulator:
         pf = {"lookups": 0, "hits": 0, "hit_tokens": 0, "shared_pages": 0,
               "prompt_tokens": 0}
 
+        # ---- analytic batching model (schema 1.7's "batching" block) ----
+        # The engine interleaves prefill and decode inside ONE step when
+        # the policy's step_budget() hook splits the step's tokens; the
+        # serial event loop mirrors that analytically: a prefill dispatch
+        # issued while decode work sits queued-ready counts as a MIXED
+        # step under a budget (decode advances within the same step) and
+        # as a decode STALL without one (head-of-line blocking). Decode
+        # spans always accrue ready time.
+        bat = {"enabled": policy.step_budget(1, 1, 1) is not None,
+               "steps": 0, "mixed": 0, "prefill_tokens": 0.0,
+               "decode_tokens": 0.0, "ready": 0.0, "stalled": 0.0}
+
+        def decode_ready(partition: str) -> bool:
+            """Any live queued entry whose next item is a decode."""
+            for e in queues[partition]:
+                req_q, idx_q, ep_q = e[3], e[4], e[6]
+                if (ep_q == epoch.get((req_q.app, req_q.request_id), 0)
+                        and idx_q < len(req_q.items)
+                        and req_q.items[idx_q].kind == "decode"):
+                    return True
+            return False
+
         if router is not None:
             # prefix-aware routing probe: what the analytic trie of one
             # replica would serve for this request — same key fallback and
@@ -444,6 +466,22 @@ class PodSimulator:
                            hbm_bytes=item.hbm_bytes * run_frac * scale,
                            tokens=item.tokens * run_frac * scale)
                 policy.on_dispatch(apps[req.app], req, item, now, end, chips)
+                bat["steps"] += 1
+                if item.kind == "prefill":
+                    bat["prefill_tokens"] += item.tokens * run_frac * scale
+                elif item.kind == "decode":
+                    bat["decode_tokens"] += item.tokens * run_frac
+                dt = end - now
+                if dt > 0:
+                    if item.kind == "decode":
+                        bat["ready"] += dt
+                    elif decode_ready(partition):
+                        bat["ready"] += dt
+                        if bat["enabled"]:
+                            if item.kind == "prefill":
+                                bat["mixed"] += 1
+                        else:
+                            bat["stalled"] += dt
                 executing.add(k)
                 last_use[k] = now
                 rem = frac - run_frac
@@ -581,6 +619,7 @@ class PodSimulator:
                                 if rec.ttft_s is None:  # evicted: keep first
                                     rec.ttft_s = now - rec.arrival_s
                             st["decode_done"] += item.tokens
+                            st.setdefault("decode_ts", []).append(now)
                         if item.kind in ("denoise", "encode", "train"):
                             rec.step_times_s.append(
                                 now - max(started, rec.arrival_s))
@@ -645,6 +684,10 @@ class PodSimulator:
                                               max(st["decode_done"] - 1, 1))
                             elif st["decode_done"] == 1:
                                 rec.tpot_s = 0.0
+                            dts = st.get("decode_ts", [])
+                            if len(dts) > 1:
+                                rec.itl_samples_s = [
+                                    b - a for a, b in zip(dts, dts[1:])]
                             records[req.app].append(rec)
                             if tracker is not None:
                                 tracker.note(req.app, rec.meets_slo(
@@ -760,6 +803,21 @@ class PodSimulator:
                          fault_stats=fstats,
                          total_chips=self.total_chips, chip=self.chip,
                          strategy=policy.name,
+                         batching={
+                             "enabled": bat["enabled"],
+                             "mixed_steps": bat["mixed"],
+                             "steps": bat["steps"],
+                             "prefill_tokens": int(round(
+                                 bat["prefill_tokens"])),
+                             "decode_tokens": int(round(
+                                 bat["decode_tokens"])),
+                             "prefill_share": (
+                                 float(getattr(policy, "prefill_share", 0.0))
+                                 if bat["enabled"] else 0.0),
+                             "decode_stall_fraction": (
+                                 bat["stalled"] / bat["ready"]
+                                 if bat["ready"] > 0 else 0.0),
+                         },
                          kv_token_budget=budget, page_size=self.page_size,
                          peak_kv_tokens=mem["peak"],
                          evictions=mem["evictions"],
@@ -773,6 +831,16 @@ class PodSimulator:
                          routing=(router.routing_block()
                                   if router is not None else None),
                          trace=telem)
+
+
+def empty_batching_block() -> dict:
+    """Schema 1.7 "batching" block, zero-filled — what a run without a
+    step-budget policy (or a legacy result) reports. The block is ALWAYS
+    present, like "faults" and "routing", so downstream diffing never
+    branches on its existence."""
+    return {"enabled": False, "mixed_steps": 0, "steps": 0,
+            "prefill_tokens": 0, "decode_tokens": 0,
+            "prefill_share": 0.0, "decode_stall_fraction": 0.0}
 
 
 @dataclass
@@ -799,6 +867,9 @@ class SimResult:
     # ---- router tier (schema 1.6's ALWAYS-present "routing" block; a
     # router-less run carries the zero-filled block)
     routing: Union[dict, None] = None
+    # ---- mixed batching (schema 1.7's ALWAYS-present "batching" block;
+    # a run without a step-budget policy carries the zero-filled block)
+    batching: Union[dict, None] = None
     #: recorded event trace (repro.telemetry) — always present for
     #: simulator runs; engine runs carry one when telemetry is enabled.
     #: NOT part of summary()/to_json() unless the scenario opts in.
@@ -869,6 +940,15 @@ class SimResult:
         no router fronted the run), identical keys on both substrates."""
         return dict(self.routing) if self.routing else empty_routing_block()
 
+    def batching_summary(self) -> dict:
+        """Schema 1.7 "batching" block — ALWAYS present (zero-filled when
+        the policy has no step budget), identical keys on both substrates.
+        ``steps`` is substrate-native (engine steps vs simulator
+        dispatches); cross-substrate parity is pinned on ``enabled``,
+        ``mixed_steps`` and ``decode_stall_fraction``."""
+        return dict(self.batching) if self.batching \
+            else empty_batching_block()
+
     def faults_summary(self) -> dict:
         """Schema 1.5 "faults" block — ALWAYS present (zero-filled when no
         faults were injected), identical keys on both substrates. Goodput
@@ -892,11 +972,13 @@ class SimResult:
             **({"prefix": pfx} if pfx is not None else {}),
             "faults": self.faults_summary(),
             "routing": self.routing_summary(),
+            "batching": self.batching_summary(),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,
                     "normalized_latency": rep.normalized_latency(),
                     **rep.latency_stats(),
+                    **rep.token_latency_stats(),
                 }
                 for name, rep in self.reports.items()
             },

@@ -62,6 +62,11 @@ class RequestRecord:
     tpot_s: Optional[float] = None        # mean inter-token time
     step_times_s: list = field(default_factory=list)
     e2e_s: Optional[float] = None
+    #: individual inter-token gaps (s) — the raw samples behind the
+    #: schema-1.7 ``itl_p99`` per-app stat. Engine runs take diffs of the
+    #: real per-token timestamps; simulator runs take diffs of decode-item
+    #: completion times. Empty = fall back to per-request tpot means.
+    itl_samples_s: list = field(default_factory=list)
 
     def violations(self, slo: SLO) -> dict[str, bool]:
         """kind -> violated?  (only kinds present in the SLO)."""
@@ -105,6 +110,28 @@ class SLOReport:
                 "p95": float(np.percentile(a, 95)),
                 "p99": float(np.percentile(a, 99)), "max": float(a.max()),
                 "n": len(a)}
+
+    def token_latency_stats(self) -> dict:
+        """Schema 1.7 per-app token-latency percentiles (TTFT / TPOT /
+        inter-token latency), computed from the SAME RequestRecords the
+        SLO accounting reads — no second metrics path. Keys appear only
+        when samples exist, so non-token apps (imagegen) stay unchanged."""
+        import numpy as np
+        out = {}
+        ttft = [r.ttft_s for r in self.records if r.ttft_s is not None]
+        tpot = [r.tpot_s for r in self.records if r.tpot_s is not None]
+        if ttft:
+            a = np.asarray(ttft)
+            out["ttft_p50"] = float(np.percentile(a, 50))
+            out["ttft_p99"] = float(np.percentile(a, 99))
+        if tpot:
+            a = np.asarray(tpot)
+            out["tpot_p50"] = float(np.percentile(a, 50))
+            out["tpot_p99"] = float(np.percentile(a, 99))
+        itl = [s for r in self.records for s in r.itl_samples_s] or tpot
+        if itl:
+            out["itl_p99"] = float(np.percentile(np.asarray(itl), 99))
+        return out
 
     def normalized_latency(self) -> float:
         """Mean latency normalized to the SLO bound (paper Fig. 3/5 y-axis)."""

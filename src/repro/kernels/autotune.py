@@ -222,6 +222,96 @@ def _paged_decode_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
     return t + b * kv * nb * GRID_STEP_OVERHEAD_S
 
 
+# Prefill-chunk flash attention: C*G query rows per (batch row, KV head)
+# against the full cache, streamed in s_block tiles (kernels/
+# prefill_attention.py). Same shape family as flash-decode with the extra
+# chunk axis multiplying compute and the q/acc VMEM footprint.
+
+def _prefill_attn_bucket(shape: dict) -> dict:
+    return {"b": pow2_bucket(shape["b"]), "kv": shape["kv"], "g": shape["g"],
+            "c": pow2_bucket(shape["c"]), "s": pow2_bucket(shape["s"]),
+            "d": shape["d"]}
+
+
+def _prefill_attn_candidates(bk: dict) -> list[dict]:
+    s = bk["s"]
+    cands = [{"s_block": c} for c in _POW2_BLOCKS if c <= s]
+    return cands or [{"s_block": s}]
+
+
+def _prefill_attn_vmem(bk: dict, blocks: dict) -> int:
+    sb, d = blocks["s_block"], bk["d"]
+    r = bk["c"] * bk["g"]                         # query rows per grid cell
+    return 4 * (2 * sb * d + 3 * r * d + 2 * r)   # k,v tiles + q/acc + m,l
+
+
+def _prefill_attn_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
+    b, kv, g, c, s, d = (bk["b"], bk["kv"], bk["g"], bk["c"], bk["s"],
+                         bk["d"])
+    sb = blocks["s_block"]
+    ns = math.ceil(s / sb)
+    s_eff = ns * sb                      # pad path reads the padded cache
+    flops = 4.0 * b * kv * g * c * s_eff * d
+    byts = 2.0 * (2 * b * kv * s_eff * d) + 2.0 * 2 * b * kv * g * c * d
+    t = max(flops / chip.peak_flops_bf16, byts / chip.hbm_bandwidth)
+    return t + b * kv * ns * GRID_STEP_OVERHEAD_S
+
+
+# Engine-level prefill CHUNK size: how many prompt tokens one chunked-prefill
+# dispatch should advance. Each dispatch re-reads the weights (W bytes)
+# regardless of chunk size, while compute scales with the chunk — so small
+# chunks waste bandwidth re-reading weights and large chunks only add
+# decode-stall latency (a decode-ready row waits out the whole dispatch).
+# The roofline winner is the BALANCE point t_comp ≈ t_mem: the smallest
+# chunk that saturates compute, scored by imbalance with ties broken toward
+# the smaller (lower-stall) candidate. Param counts are bucketed in
+# megaparams so one cache entry covers a model family size class.
+
+_ENGINE_CHUNKS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def _engine_chunk_bucket(shape: dict) -> dict:
+    return {"mtotal": pow2_bucket(shape["mtotal"]),
+            "mactive": pow2_bucket(shape["mactive"]),
+            "seq": pow2_bucket(shape["seq"])}
+
+
+def _engine_chunk_candidates(bk: dict) -> list[dict]:
+    cands = [{"prefill_chunk": c} for c in _ENGINE_CHUNKS if c <= bk["seq"]]
+    return cands or [{"prefill_chunk": max(1, bk["seq"])}]
+
+
+def _engine_chunk_vmem(bk: dict, blocks: dict) -> int:
+    return 0                             # activations, dwarfed by the pools
+
+
+def _engine_chunk_roofline(bk: dict, blocks: dict, chip: ChipSpec) -> float:
+    c = blocks["prefill_chunk"]
+    w_bytes = 2.0e6 * bk["mtotal"]                 # bf16 weights, re-read
+    flops_tok = 2.0e6 * bk["mactive"]
+    t_comp = c * flops_tok / chip.peak_flops_bf16
+    t_mem = w_bytes / chip.hbm_bandwidth
+    imbalance = max(t_comp, t_mem) / max(min(t_comp, t_mem), 1e-12)
+    return imbalance + 1e-6 * c          # tie-break toward lower stall
+
+
+def engine_prefill_chunk(cfg, *, chip: ChipSpec = DEFAULT_CHIP,
+                         max_seq: int = 4096) -> int:
+    """Autotuned prefill-chunk size for serving ``cfg`` on ``chip``.
+
+    Consulted by ``InferenceEngine`` when constructed with
+    ``prefill_chunk=None`` — the per-app replacement for the static ctor
+    default (the paper's "static server config" pitfall). Cached under the
+    versioned autotune key like every kernel entry.
+    """
+    total, active = cfg.param_counts()
+    shape = {"mtotal": max(1, int(total / 1e6)),
+             "mactive": max(1, int(active / 1e6)),
+             "seq": max(1, int(max_seq))}
+    return best_config("engine_prefill_chunk", shape,
+                       chip=chip)["prefill_chunk"]
+
+
 def _flash_bucket(shape: dict) -> dict:
     return {"b": pow2_bucket(shape["b"]), "h": shape["h"], "kv": shape["kv"],
             "sq": pow2_bucket(shape["sq"]), "skv": pow2_bucket(shape["skv"]),
@@ -288,6 +378,10 @@ _KERNELS = {
                          _decode_roofline),
     "paged_decode_attention": (_paged_decode_bucket, _paged_decode_candidates,
                                _paged_decode_vmem, _paged_decode_roofline),
+    "prefill_attention": (_prefill_attn_bucket, _prefill_attn_candidates,
+                          _prefill_attn_vmem, _prefill_attn_roofline),
+    "engine_prefill_chunk": (_engine_chunk_bucket, _engine_chunk_candidates,
+                             _engine_chunk_vmem, _engine_chunk_roofline),
     "flash_attention": (_flash_bucket, _flash_candidates, _flash_vmem,
                         _flash_roofline),
     "ssd_chunk_scan": (_ssd_bucket, _ssd_candidates, _ssd_vmem,

@@ -22,6 +22,10 @@ from repro.kernels.decode_attention import decode_attention as _pallas_decode
 from repro.kernels.flash_attention import flash_attention as _pallas_flash
 from repro.kernels.paged_decode_attention import \
     paged_decode_attention as _pallas_paged_decode
+from repro.kernels.paged_prefill_attention import \
+    paged_prefill_attention as _pallas_paged_prefill
+from repro.kernels.prefill_attention import \
+    prefill_attention as _pallas_prefill_chunk
 from repro.kernels.rmsnorm import rmsnorm as _pallas_rmsnorm
 from repro.kernels.ssd_scan import ssd_chunk_scan as _pallas_ssd
 
@@ -91,6 +95,61 @@ def attention_decode_paged(q, k_pages, v_pages, block_tables, lengths,
                              rope_theta=rope_theta,
                              interpret=(be == "interpret"))
     return o[:, None]
+
+
+def attention_prefill_chunk(q, k_cache, v_cache, start_len, rope_theta=None):
+    """q: (B, C, H, d) UN-rotated; caches: (B, S, KV, d) with the chunk's
+    keys/values already scattered at ``start_len .. start_len+C-1``;
+    start_len: (B,) -> (B, C, H, d).
+
+    Chunk-vs-cache causal attention for chunked prefill. ``rope_theta``:
+    fuse the per-token query rotation (chunk token j at absolute position
+    ``start_len + j``) into the attention — no separate RoPE launch, and
+    multi-slot batched prefill rows each get their own positions."""
+    be = backend()
+    if be == "jnp":
+        from repro.models.attention import prefill_chunk_attention_jnp
+        positions = jnp.asarray(start_len)[:, None] + \
+            jnp.arange(q.shape[1])[None, :]
+        return prefill_chunk_attention_jnp(q, k_cache, v_cache, positions,
+                                           rope_theta=rope_theta)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k_cache.transpose(0, 2, 1, 3)
+    vT = v_cache.transpose(0, 2, 1, 3)
+    o = _pallas_prefill_chunk(qT, kT, vT, jnp.asarray(start_len, jnp.int32),
+                              rope_theta=rope_theta,
+                              interpret=(be == "interpret"))
+    return o.transpose(0, 2, 1, 3)
+
+
+def attention_prefill_chunk_paged(q, k_pages, v_pages, block_tables,
+                                  start_len, rope_theta=None):
+    """q: (B, C, H, d) UN-rotated; pools: (P, page, KV, d); block_tables:
+    (B, nb); start_len: (B,) -> (B, C, H, d).
+
+    Paged counterpart of :func:`attention_prefill_chunk`: K/V are gathered
+    through the per-row block table (Pallas scalar-prefetch gather on TPU,
+    materialized gather on jnp). Same fused-RoPE contract."""
+    be = backend()
+    if be == "jnp":
+        from repro.models.attention import prefill_chunk_attention_jnp
+        k = k_pages[block_tables]              # (B, nb, page, KV, d)
+        v = v_pages[block_tables]
+        b, nb, page, kv, d = k.shape
+        k = k.reshape(b, nb * page, kv, d)
+        v = v.reshape(b, nb * page, kv, d)
+        positions = jnp.asarray(start_len)[:, None] + \
+            jnp.arange(q.shape[1])[None, :]
+        return prefill_chunk_attention_jnp(q, k, v, positions,
+                                           rope_theta=rope_theta)
+    # the paged kernel consumes the model-layout pool directly — relayouting
+    # the whole pool per prefill chunk would dwarf the attention itself
+    o = _pallas_paged_prefill(q.transpose(0, 2, 1, 3), k_pages, v_pages,
+                              jnp.asarray(block_tables, jnp.int32),
+                              jnp.asarray(start_len, jnp.int32),
+                              rope_theta=rope_theta,
+                              interpret=(be == "interpret"))
+    return o.transpose(0, 2, 1, 3)
 
 
 def ssd_intra_chunk(x, dt, cum, b_, c_):

@@ -81,6 +81,50 @@ def paged_decode_attention_ref(q: Array, k_pages: Array, v_pages: Array,
     return decode_attention_ref(q, k, v, lengths, rope_theta=rope_theta)
 
 
+def prefill_attention_ref(q: Array, k: Array, v: Array, start_len: Array,
+                          rope_theta: float | None = None) -> Array:
+    """Prefill-chunk flash attention oracle: a C-token chunk against the
+    full cache. q: (B, H, C, d); k/v: (B, KV, S, d) — the cache ALREADY
+    holds the chunk's keys/values at ``start_len .. start_len + C - 1``;
+    start_len: (B,). Chunk token j attends every cache position
+    ``<= start_len + j`` (causal within the chunk, full history before it).
+    -> (B, H, C, d).
+
+    ``rope_theta``: rotate chunk query j at absolute position
+    ``start_len + j`` before attending (the fused-RoPE prefill contract —
+    cached keys are already rotated at write time)."""
+    b, h, c, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    positions = start_len[:, None] + jnp.arange(c)            # (B, C)
+    if rope_theta is not None:
+        q = rope_ref(q, positions[:, None, :], rope_theta).astype(q.dtype)
+    qg = q.reshape(b, kv, g, c, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bkgcd,bksd->bkgcs", qg,
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgcs,bksd->bkgcd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, c, d).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: Array, k_pages: Array, v_pages: Array,
+                                block_tables: Array, start_len: Array,
+                                rope_theta: float | None = None) -> Array:
+    """Paged prefill-chunk oracle: gather pages, defer to the dense oracle.
+
+    q: (B, H, C, d); k/v pools: (P, page, KV, d); block_tables: (B, nb)
+    int32 page ids; start_len: (B,). -> (B, H, C, d)."""
+    k = k_pages[block_tables]                       # (B, nb, page, KV, d)
+    v = v_pages[block_tables]
+    b, nb, page, kv, d = k.shape
+    k = k.reshape(b, nb * page, kv, d).transpose(0, 2, 1, 3)
+    v = v.reshape(b, nb * page, kv, d).transpose(0, 2, 1, 3)
+    return prefill_attention_ref(q, k, v, start_len, rope_theta=rope_theta)
+
+
 def ssd_chunk_ref(x: Array, dt: Array, cum: Array, b_: Array, c_: Array) -> tuple[Array, Array]:
     """Intra-chunk SSD + end-of-chunk state, one chunk.
 

@@ -128,6 +128,40 @@ def flash_attention_jnp(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.reshape(b, sq, h, d)
 
 
+def prefill_chunk_attention_jnp(q: Array, k_full: Array, v_full: Array,
+                                positions: Array,
+                                rope_theta: float | None = None) -> Array:
+    """Chunk-vs-cache causal attention (jnp lowering): C chunk tokens
+    against the full cache (history + the chunk itself, already written).
+
+    q: (B, C, H, d) UN-rotated; k_full/v_full: (B, S, KV, d); positions:
+    (B, C) absolute position per chunk token. Materializes the
+    (B, KV, G, C, S) logits tensor — the CPU/test path; the Pallas kernel
+    in ``repro.kernels.prefill_attention`` is the TPU runtime counterpart
+    streaming the cache with an online softmax.
+
+    ``rope_theta``: rotate chunk query j at ``positions[:, j]`` in here
+    (fused-RoPE prefill contract; cached keys are rotated at write time).
+    Returns float32 (B, C, H, d) — callers cast.
+    """
+    b, c, h, d = q.shape
+    s = k_full.shape[1]
+    kvh = k_full.shape[2]
+    g = h // kvh
+    if rope_theta is not None:
+        from repro.models import layers
+        q = layers.apply_rope(q, positions, rope_theta)
+    qg = q.reshape(b, c, kvh, g, d).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bckgd,bskd->bkgcs", qg,
+                        k_full.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgcs,bskd->bckgd", pr, v_full.astype(jnp.float32))
+    return o.reshape(b, c, h, d)
+
+
 def paged_decode_attention_jnp(q: Array, k_pages: Array, v_pages: Array,
                                block_tables: Array, length: Array,
                                rope_theta: float | None = None) -> Array:

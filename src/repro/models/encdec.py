@@ -241,38 +241,74 @@ def decode_step_paged(params: dict, cache: dict, tokens: Array,
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
-                  cfg: ModelConfig, active: Array | None = None):
+                  cfg: ModelConfig, active: Array | None = None,
+                  valid: Array | None = None):
     """Chunked prefill for the enc-dec decoder: a ``lax.scan`` over the C
     chunk tokens re-using :func:`decode_step` — exact token-stepped
     semantics, but ONE jitted dispatch per chunk (the scan is a single XLA
     while-loop) instead of C separate decode launches.
-    """
-    def step(carry, tok):
-        cur_cache, ln = carry
-        logits, cur_cache = decode_step(params, cur_cache, tok[:, None], ln,
-                                        cfg, active=active)
-        inc = 1 if active is None else active.astype(ln.dtype)
-        return (cur_cache, ln + inc), logits
 
-    (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
-                                          tokens.T)
+    ``valid``: optional (B,) real-token count per row (pads at the tail,
+    multi-slot batched prefill) — scan step j simply deactivates rows with
+    ``j >= valid``, so pads neither write KV nor advance lengths.
+    """
+    if valid is None:
+        def step(carry, tok):
+            cur_cache, ln = carry
+            logits, cur_cache = decode_step(params, cur_cache, tok[:, None],
+                                            ln, cfg, active=active)
+            inc = 1 if active is None else active.astype(ln.dtype)
+            return (cur_cache, ln + inc), logits
+
+        (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
+                                              tokens.T)
+        return logits.swapaxes(0, 1), new_cache
+
+    def step_v(carry, inp):
+        tok, j = inp
+        cur_cache, ln = carry
+        act = j < valid if active is None else active & (j < valid)
+        logits, cur_cache = decode_step(params, cur_cache, tok[:, None], ln,
+                                        cfg, active=act)
+        return (cur_cache, ln + act.astype(ln.dtype)), logits
+
+    (new_cache, _), logits = jax.lax.scan(
+        step_v, (cache, start_len),
+        (tokens.T, jnp.arange(tokens.shape[1], dtype=jnp.int32)))
     return logits.swapaxes(0, 1), new_cache
 
 
 def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
                         start_len: Array, block_tables: Array,
-                        cfg: ModelConfig, active: Array | None = None):
+                        cfg: ModelConfig, active: Array | None = None,
+                        valid: Array | None = None):
     """Paged chunked prefill: token-stepped ``lax.scan`` over the chunk
     re-using :func:`decode_step_paged` (same construction as the
-    contiguous :func:`prefill_chunk`)."""
-    def step(carry, tok):
+    contiguous :func:`prefill_chunk`, including the ``valid`` contract)."""
+    if valid is None:
+        def step(carry, tok):
+            cur_cache, ln = carry
+            logits, cur_cache = decode_step_paged(params, cur_cache,
+                                                  tok[:, None], ln,
+                                                  block_tables, cfg,
+                                                  active=active)
+            inc = 1 if active is None else active.astype(ln.dtype)
+            return (cur_cache, ln + inc), logits
+
+        (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
+                                              tokens.T)
+        return logits.swapaxes(0, 1), new_cache
+
+    def step_v(carry, inp):
+        tok, j = inp
         cur_cache, ln = carry
+        act = j < valid if active is None else active & (j < valid)
         logits, cur_cache = decode_step_paged(params, cur_cache, tok[:, None],
                                               ln, block_tables, cfg,
-                                              active=active)
-        inc = 1 if active is None else active.astype(ln.dtype)
-        return (cur_cache, ln + inc), logits
+                                              active=act)
+        return (cur_cache, ln + act.astype(ln.dtype)), logits
 
-    (new_cache, _), logits = jax.lax.scan(step, (cache, start_len),
-                                          tokens.T)
+    (new_cache, _), logits = jax.lax.scan(
+        step_v, (cache, start_len),
+        (tokens.T, jnp.arange(tokens.shape[1], dtype=jnp.int32)))
     return logits.swapaxes(0, 1), new_cache

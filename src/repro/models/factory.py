@@ -163,24 +163,26 @@ class ModelBundle:
     def prefill_chunk_paged(self, params: Params, cache: Cache,
                             tokens: Array, start_len: Array,
                             block_tables: Array,
-                            active: Array | None = None):
+                            active: Array | None = None,
+                            valid: Array | None = None):
         """Paged :meth:`prefill_chunk`: chunk K/V scattered into the rows'
-        pages; same one-dispatch-per-chunk hot path."""
+        pages; same one-dispatch-per-chunk hot path and ``valid``
+        multi-slot contract."""
         f = self.cfg.family
         if f == "hybrid":
             logits, new = hybrid.prefill_chunk_paged(
                 params, cache, tokens, start_len, block_tables, self.cfg,
-                active)
+                active, valid)
         elif f == "encdec":
             logits, new = encdec.prefill_chunk_paged(
                 params, cache, tokens, start_len, block_tables, self.cfg,
-                active)
+                active, valid)
         elif f == "ssm":
             raise ValueError("family 'ssm' has no paged prefill path")
         else:
             logits, new = transformer.prefill_chunk_paged(
                 params, cache, tokens, start_len, block_tables, self.cfg,
-                active)
+                active, valid)
         new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
         return logits, new
 
@@ -224,30 +226,57 @@ class ModelBundle:
         return logits, new
 
     def prefill_chunk(self, params: Params, cache: Cache, tokens: Array,
-                      start_len: Array, active: Array | None = None):
+                      start_len: Array, active: Array | None = None,
+                      valid: Array | None = None):
         """Advance every row's prefill by C tokens in ONE jitted dispatch.
 
         tokens: (B,C) int32; start_len: (B,) int32 tokens already cached per
         row; ``active``: optional (B,) bool — inactive rows are untouched.
         Returns (logits (B,C,V), new_cache). Parity with the token-stepped
         decode path is pinned per family in tests/test_serving.py.
+
+        ``valid``: optional (B,) int32 per-row count of REAL chunk tokens
+        (multi-slot batched prefill: one dispatch advances several
+        mid-prefill slots by different amounts, pads at the tail). Pad
+        tokens never touch the cache/state; their logits are garbage the
+        engine discards. Only meaningful when
+        :meth:`multi_slot_batchable` — MoE routing is batch-coupled, so
+        batching rows there would change valid rows' outputs.
         """
         f = self.cfg.family
         if f == "ssm":
             logits, new = mamba_lm.prefill_chunk(params, cache, tokens,
-                                                 start_len, self.cfg, active)
+                                                 start_len, self.cfg, active,
+                                                 valid)
         elif f == "hybrid":
             logits, new = hybrid.prefill_chunk(params, cache, tokens,
-                                               start_len, self.cfg, active)
+                                               start_len, self.cfg, active,
+                                               valid)
         elif f == "encdec":
             logits, new = encdec.prefill_chunk(params, cache, tokens,
-                                               start_len, self.cfg, active)
+                                               start_len, self.cfg, active,
+                                               valid)
         else:
             logits, new = transformer.prefill_chunk(params, cache, tokens,
                                                     start_len, self.cfg,
-                                                    active)
+                                                    active, valid)
         new = jax.tree.map(lambda n, o: n.astype(o.dtype), new, cache)
         return logits, new
+
+    def multi_slot_batchable(self) -> bool:
+        """Can ``prefill_chunk(valid=...)`` batch SEVERAL mid-prefill slots
+        into one dispatch without changing any row's tokens? True for every
+        family whose per-token compute is row-independent. False when MoE
+        routing is present (dense MoE, or hybrid with ``moe_every > 0``):
+        expert capacity is assigned by a cumulative sum over ALL tokens in
+        the flattened batch, so co-batched rows change which of a row's
+        tokens get dropped — the engine falls back to per-slot dispatches
+        to keep token streams bit-identical."""
+        if self.cfg.is_moe:
+            return False
+        if self.cfg.family == "hybrid" and self.cfg.moe_every > 0:
+            return False
+        return True
 
     # ---------------------------------------------------------- dry-run IO
     def input_specs(self, shape: ShapeConfig) -> dict:

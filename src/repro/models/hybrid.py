@@ -243,7 +243,8 @@ def decode_step_paged(params: dict, cache: dict, tokens: Array,
 
 def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
                         start_len: Array, block_tables: Array,
-                        cfg: ModelConfig, active: Array | None = None):
+                        cfg: ModelConfig, active: Array | None = None,
+                        valid: Array | None = None):
     """Paged batched chunked prefill; see :func:`prefill_chunk`."""
     x = layers.embed(params["embedding"], tokens)
     pcount = _period(cfg)
@@ -259,11 +260,12 @@ def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
                 out, (kp, vp) = \
                     transformer.attention_prefill_chunk_block_paged(
                         sub["attn"], h, cfg, kp, vp, block_tables, start_len,
-                        active=active)
+                        active=active, valid=valid)
             else:
                 st_i = jax.tree.map(lambda a: a[si], states)
                 out, new_st = ssm.ssd_forward(sub["ssm"], h, cfg,
-                                              init_state=st_i)
+                                              init_state=st_i,
+                                              token_valid=valid)
                 if active is not None:
                     new_st = ssm.mask_state(new_st, st_i, active)
                 new_states.append(new_st)
@@ -284,13 +286,17 @@ def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
-                  cfg: ModelConfig, active: Array | None = None):
+                  cfg: ModelConfig, active: Array | None = None,
+                  valid: Array | None = None):
     """Batched chunked prefill across the SSD/attention interleave.
 
     tokens: (B,C); start_len: (B,). Attention sublayers write the chunk's
     k/v at per-row offsets (length-masked scatter) and attend over the
     padded cache; SSD sublayers run one chunked-SSD pass from the cached
     recurrent state. One jitted dispatch per chunk for the whole stack.
+    ``valid``: optional (B,) real-token count per row (pads at the tail,
+    multi-slot batched prefill) — pad tokens write no KV and get dt=0 in
+    the SSD sublayers; their logits are garbage the engine discards.
     """
     x = layers.embed(params["embedding"], tokens)
     pcount = _period(cfg)
@@ -304,11 +310,13 @@ def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
             h = layers.rmsnorm(x, sub["ln1"], cfg.norm_eps)
             if _is_attn(cfg, i):
                 out, (kc, vc) = transformer.attention_prefill_chunk_block(
-                    sub["attn"], h, cfg, kc, vc, start_len, active=active)
+                    sub["attn"], h, cfg, kc, vc, start_len, active=active,
+                    valid=valid)
             else:
                 st_i = jax.tree.map(lambda a: a[si], states)
                 out, new_st = ssm.ssd_forward(sub["ssm"], h, cfg,
-                                              init_state=st_i)
+                                              init_state=st_i,
+                                              token_valid=valid)
                 if active is not None:
                     new_st = ssm.mask_state(new_st, st_i, active)
                 new_states.append(new_st)

@@ -96,13 +96,17 @@ def decode_step(params: dict, cache: dict, tokens: Array, lengths: Array,
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
-                  cfg: ModelConfig, active: Array | None = None):
+                  cfg: ModelConfig, active: Array | None = None,
+                  valid: Array | None = None):
     """Batched chunked prefill: one SSD pass over C tokens per layer,
     continuing from the cached recurrent state (``start_len`` is implicit in
     the state — the SSD recurrence needs no positions).
 
     tokens: (B,C) -> (logits (B,C,V), new_states). Inactive rows keep their
-    state bit-identical.
+    state bit-identical. ``valid``: optional (B,) real-token count per row
+    (pads at the tail, multi-slot batched prefill) — pad tokens get dt=0 so
+    the recurrent state only ever sees real tokens; pad logits are garbage
+    the engine discards.
     """
     del start_len  # state-carrying family: the prefix lives in the state
     x = layers.embed(params["embedding"], tokens)
@@ -110,7 +114,8 @@ def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
     def body(x, inp):
         lp, st = inp
         h = layers.rmsnorm(x, lp["ln"], cfg.norm_eps)
-        out, new_st = ssm.ssd_forward(lp["ssm"], h, cfg, init_state=st)
+        out, new_st = ssm.ssd_forward(lp["ssm"], h, cfg, init_state=st,
+                                      token_valid=valid)
         if active is not None:
             new_st = ssm.mask_state(new_st, st, active)
         return x + out, new_st

@@ -46,9 +46,16 @@ def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     }
 
 
-def _causal_conv(x: Array, w: Array, state: Array | None = None):
+def _causal_conv(x: Array, w: Array, state: Array | None = None,
+                 valid: Array | None = None):
     """Depthwise causal conv. x: (B,S,C), w: (W,C). Returns (y, new_state)
-    where state is the trailing (B, W-1, C) inputs for streaming decode."""
+    where state is the trailing (B, W-1, C) inputs for streaming decode.
+
+    ``valid``: optional (B,) count of real tokens per row (pads sit at the
+    tail, multi-slot batched prefill). The streaming state is then gathered
+    at each row's LAST VALID input instead of the trailing slice, so pad
+    tokens never leak into the state. ``valid=None`` keeps the trailing
+    slice bit-identical."""
     width = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
@@ -56,7 +63,16 @@ def _causal_conv(x: Array, w: Array, state: Array | None = None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
     y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
-    new_state = xp[:, -(width - 1):] if width > 1 else jnp.zeros_like(pad)
+    if width == 1:
+        new_state = jnp.zeros_like(pad)
+    elif valid is None:
+        new_state = xp[:, -(width - 1):]
+    else:
+        # row i's last W-1 inputs ending at its final valid token: xp
+        # positions valid_i .. valid_i + W-2 (the W-1 leading pad states
+        # shift the window so valid_i == S reproduces the trailing slice)
+        idx = valid[:, None] + jnp.arange(width - 1)[None, :]  # (B, W-1)
+        new_state = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return y, new_state
 
 
@@ -70,10 +86,20 @@ def _project(params: dict, x: Array, cfg: ModelConfig):
 
 
 def ssd_forward(params: dict, x: Array, cfg: ModelConfig,
-                init_state: dict | None = None):
+                init_state: dict | None = None,
+                token_valid: Array | None = None):
     """Full-sequence SSD. x: (B, S, D) -> (y, final_state).
 
     ``init_state``: {"ssm": (B,H,P,N), "conv_x": (B,W-1,d_in), ...} or None.
+
+    ``token_valid``: optional (B,) count of real tokens per row — rows
+    shorter than S are padded at the TAIL (multi-slot batched prefill).
+    Pad positions get dt=0, so they neither decay the recurrent state
+    (exp(0)=1) nor contribute to it (dt-weighted), and the conv streaming
+    state is gathered at the last valid input. Outputs at pad positions are
+    garbage and must be ignored by the caller; valid positions and the
+    final state are unaffected (pads sit after every valid token, outside
+    the causal triangle). ``token_valid=None`` is bit-identical to before.
     """
     b, s, d = x.shape
     # largest chunk <= cfg.ssm_chunk that divides S: arbitrary chunk lengths
@@ -87,15 +113,21 @@ def ssd_forward(params: dict, x: Array, cfg: ModelConfig,
 
     z, xc, b_, c_, dt = _project(params, x, cfg)
     st = init_state or {}
-    xc, conv_x = _causal_conv(xc, params["conv_x"], st.get("conv_x"))
-    b_, conv_b = _causal_conv(b_, params["conv_B"], st.get("conv_B"))
-    c_, conv_c = _causal_conv(c_, params["conv_C"], st.get("conv_C"))
+    xc, conv_x = _causal_conv(xc, params["conv_x"], st.get("conv_x"),
+                              valid=token_valid)
+    b_, conv_b = _causal_conv(b_, params["conv_B"], st.get("conv_B"),
+                              valid=token_valid)
+    c_, conv_c = _causal_conv(c_, params["conv_C"], st.get("conv_C"),
+                              valid=token_valid)
     xc = jax.nn.silu(xc)
     b_ = jax.nn.silu(b_)
     c_ = jax.nn.silu(c_)
 
     a = -jnp.exp(params["A_log"])                                   # (H,)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if token_valid is not None:
+        tok_ok = jnp.arange(s)[None, :] < token_valid[:, None]      # (B,S)
+        dt = jnp.where(tok_ok[:, :, None], dt, 0.0)
 
     # chunk
     xh = xc.reshape(b, nc, q, h, p).astype(jnp.float32)

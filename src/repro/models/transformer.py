@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers, moe
 from repro.models.attention import (decode_attention_jnp, flash_attention_jnp,
-                                    naive_attention)
+                                    naive_attention,
+                                    prefill_chunk_attention_jnp)
 
 Array = jax.Array
 FLASH_MIN_SEQ = 2048
@@ -234,47 +235,57 @@ def attention_decode_block_paged(p: dict, x: Array, cfg: ModelConfig,
 def _chunk_attend(p: dict, q: Array, k_full: Array, v_full: Array,
                   positions: Array, cfg: ModelConfig, x_dtype) -> Array:
     """Chunk-vs-cache causal attention shared by the contiguous and paged
-    prefill paths. q: (B,C,H,hd); k_full/v_full: (B,S,KV,hd); positions:
-    (B,C) absolute position per chunk token."""
-    b, c = q.shape[0], q.shape[1]
-    s = k_full.shape[1]
-    kvh = k_full.shape[2]
-    g = cfg.num_heads // kvh
-    qg = q.reshape(b, c, kvh, g, -1).astype(jnp.float32)
-    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
-    logits = jnp.einsum("bckgd,bskd->bkgcs", qg,
-                        k_full.astype(jnp.float32)) * scale
-    valid = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B,C,S)
-    logits = jnp.where(valid[:, None, None], logits, -1e30)
-    pr = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("bkgcs,bskd->bckgd", pr, v_full.astype(jnp.float32))
-    o = o.reshape(b, c, cfg.num_heads, -1).astype(x_dtype)
+    prefill paths. q: (B,C,H,hd) UN-rotated (RoPE is fused into the
+    attention — in-kernel on the Pallas path, ``apply_rope`` first thing on
+    the jnp path); k_full/v_full: (B,S,KV,hd); positions: (B,C) absolute
+    position per chunk token."""
+    from repro.kernels import ops
+    if ops.backend() != "jnp":
+        o = ops.attention_prefill_chunk(q, k_full, v_full, positions[:, 0],
+                                        rope_theta=cfg.rope_theta)
+    else:
+        o = prefill_chunk_attention_jnp(q, k_full, v_full, positions,
+                                        rope_theta=cfg.rope_theta)
+    o = o.astype(x_dtype)
     return jnp.einsum("bshe,hed->bsd", o, p["wo"])
 
 
 def attention_prefill_chunk_block_paged(p: dict, x: Array, cfg: ModelConfig,
                                         k_pages: Array, v_pages: Array,
                                         block_tables: Array, start_len: Array,
-                                        active: Array | None = None):
+                                        active: Array | None = None,
+                                        valid: Array | None = None):
     """Chunked-prefill attention against a PAGED cache: C new tokens are
     scattered into their rows' pages (positions ``start_len ..
     start_len+C-1`` resolved through the block table) and attended causally
     over the gathered padded view. Same semantics as
-    :func:`attention_prefill_chunk_block` with the cache paged."""
+    :func:`attention_prefill_chunk_block` with the cache paged (pad-token
+    page ids pushed past the pool end under ``valid``)."""
     b, c, _ = x.shape
     num_pages, page = k_pages.shape[0], k_pages.shape[1]
     nb = block_tables.shape[1]
     positions = start_len[:, None] + jnp.arange(c)[None, :]       # (B,C)
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, rope_q=False)
 
     block = jnp.minimum(positions // page, nb - 1)                # (B,C)
     pidx = jnp.take_along_axis(block_tables, block, axis=1)       # (B,C)
     off = positions % page
     if active is not None:
         pidx = jnp.where(active[:, None], pidx, jnp.int32(num_pages))
+    if valid is not None:
+        tok_ok = jnp.arange(c)[None, :] < valid[:, None]          # (B,C)
+        pidx = jnp.where(tok_ok, pidx, jnp.int32(num_pages))
     k_pages = k_pages.at[pidx, off].set(k.astype(k_pages.dtype), mode="drop")
     v_pages = v_pages.at[pidx, off].set(v.astype(v_pages.dtype), mode="drop")
 
+    from repro.kernels import ops
+    if ops.backend() != "jnp":
+        # stream pages through the block table in-kernel — never gather
+        o = ops.attention_prefill_chunk_paged(q, k_pages, v_pages,
+                                              block_tables, start_len,
+                                              rope_theta=cfg.rope_theta)
+        out = jnp.einsum("bshe,hed->bsd", o.astype(x.dtype), p["wo"])
+        return out, (k_pages, v_pages)
     k_full = k_pages[block_tables].reshape(b, nb * page, *k_pages.shape[2:])
     v_full = v_pages[block_tables].reshape(b, nb * page, *v_pages.shape[2:])
     out = _chunk_attend(p, q, k_full, v_full, positions, cfg, x.dtype)
@@ -286,7 +297,8 @@ def attention_prefill_chunk_block(p: dict, x: Array, cfg: ModelConfig,
                                   start_len: Array,
                                   k_scale: Array | None = None,
                                   v_scale: Array | None = None,
-                                  active: Array | None = None):
+                                  active: Array | None = None,
+                                  valid: Array | None = None):
     """Chunked-prefill attention: C new tokens against cache + themselves.
 
     x: (B,C,D); caches: (B,S,KV,hd); start_len: (B,) tokens already in the
@@ -294,15 +306,26 @@ def attention_prefill_chunk_block(p: dict, x: Array, cfg: ModelConfig,
     (length-masked scatter; inactive rows dropped, same contract as
     :func:`attention_decode_block`) and attends causally over the whole
     padded cache — ONE dispatch for the whole chunk instead of C.
+
+    ``valid``: optional (B,) per-row count of real chunk tokens — rows
+    shorter than C are padded at the tail (multi-slot batched prefill
+    advancing several mid-prefill slots by different amounts in one
+    dispatch). Pad tokens' writes are pushed past the cache end (dropped),
+    and their attention outputs are garbage the caller must ignore; valid
+    tokens only ever attend to positions ``<= start_len + j``, all real.
+    ``valid=None`` keeps the full-width path bit-identical.
     """
     b, c, _ = x.shape
     s = k_cache.shape[1]
     positions = start_len[:, None] + jnp.arange(c)[None, :]       # (B,C)
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, rope_q=False)
 
     w_start = start_len if active is None else \
         jnp.where(active, start_len, jnp.int32(s))
     w_pos = w_start[:, None] + jnp.arange(c)[None, :]             # (B,C)
+    if valid is not None:
+        tok_ok = jnp.arange(c)[None, :] < valid[:, None]          # (B,C)
+        w_pos = jnp.where(tok_ok, w_pos, jnp.int32(s))
     bidx = jnp.arange(b)[:, None]
     int8_kv = k_scale is not None
     if int8_kv:
@@ -520,7 +543,8 @@ def decode_step_paged(params: dict, cache: dict, tokens: Array,
 
 def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
                         start_len: Array, block_tables: Array,
-                        cfg: ModelConfig, active: Array | None = None):
+                        cfg: ModelConfig, active: Array | None = None,
+                        valid: Array | None = None):
     """Batched chunked prefill against the paged cache; see
     :func:`prefill_chunk` for the contract."""
     x = layers.embed(params["embedding"], tokens)
@@ -530,7 +554,7 @@ def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
         h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         attn_out, caches = attention_prefill_chunk_block_paged(
             lp["attn"], h, cfg, kp, vp, block_tables, start_len,
-            active=active)
+            active=active, valid=valid)
         x = x + attn_out
         h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
         ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)
@@ -548,7 +572,8 @@ def prefill_chunk_paged(params: dict, cache: dict, tokens: Array,
 
 
 def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
-                  cfg: ModelConfig, active: Array | None = None):
+                  cfg: ModelConfig, active: Array | None = None,
+                  valid: Array | None = None):
     """Batched chunked prefill: advance every row by C tokens in ONE pass.
 
     tokens: (B,C); start_len: (B,) tokens already cached per row. Returns
@@ -556,6 +581,11 @@ def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
     token-at-a-time prefill loop (C jitted dispatches) with one dispatch;
     parity with the token-stepped path is pinned in tests/test_serving.py.
     Rows with ``active=False`` keep their cache bit-identical.
+
+    ``valid``: optional (B,) real-token count per row (pads at the tail) —
+    multi-slot batched prefill, where one dispatch advances several
+    mid-prefill slots by different amounts. Pad tokens write nothing; their
+    logits are garbage the engine discards.
     """
     x = layers.embed(params["embedding"], tokens)
     int8_kv = "k_scale" in cache
@@ -568,7 +598,8 @@ def prefill_chunk(params: dict, cache: dict, tokens: Array, start_len: Array,
             ks = vs = None
         h = layers.rmsnorm(x, lp["ln1"], cfg.norm_eps)
         attn_out, caches = attention_prefill_chunk_block(
-            lp["attn"], h, cfg, kc, vc, start_len, ks, vs, active=active)
+            lp["attn"], h, cfg, kc, vc, start_len, ks, vs, active=active,
+            valid=valid)
         x = x + attn_out
         h2 = layers.rmsnorm(x, lp["ln2"], cfg.norm_eps)
         ffn_out, _ = _ffn(lp["ffn"], h2, cfg, token_mask=active)

@@ -14,7 +14,21 @@ interleaving). With the shipped policies:
   chunked    — chunked prefill: prompts advance ``prefill_chunk`` tokens per
                engine step, interleaved with decode → bounded decode stall
                (the fix the paper's §5.2 calls for; BEYOND-PAPER here).
+  mixed      — stall-free mixed batching: the policy's ``step_budget`` hook
+               returns a per-step (prefill_tokens, decode_tokens) split, so
+               EVERY step advances decode; the prefill share is spread over
+               ALL mid-prefill slots and, where the family allows
+               (``ModelBundle.multi_slot_batchable``), dispatched as ONE
+               multi-slot ``prefill_chunk`` call with per-row ``valid``
+               counts — ``prefill_dispatches`` drops by ~the mean number of
+               concurrent prefills.
   slo_aware  — chunked + earliest-deadline-first admission.
+
+Every step also accrues time-based decode-stall accounting: whenever
+decode-ready rows exist at the start of the prefill/decode phase, the
+phase's duration counts as decode-ready time, and as decode-STALL time if
+the step ends without decoding (the greedy exclusive-prefill case). The
+``stats`` fields feed the schema-1.7 ``batching`` summary block.
 
 Hot-path structure (the dispatch-bound seed loop is gone):
 
@@ -110,13 +124,18 @@ class EngineStats:
     shared_pages: int = 0         # cached pages mapped into admitted slots
     cow_forks: int = 0            # shared pages forked on first write
     replays: int = 0              # in-flight requests replayed after a crash
+    # ---- mixed batching (policy.step_budget; schema-1.7 batching block)
+    budget_enabled: bool = False  # a step_budget split was ever applied
+    mixed_steps: int = 0          # steps advancing BOTH prefill and decode
+    decode_ready_time_s: float = 0.0  # phase time with decode rows ready
+    decode_stall_time_s: float = 0.0  # ...of which no decode happened
 
 
 class InferenceEngine:
     def __init__(self, model: ModelBundle, *, max_slots: int = 4,
                  max_seq: int = 256,
                  policy: "str | SchedulingPolicy" = "fcfs",
-                 prefill_chunk: int = 16,
+                 prefill_chunk: Optional[int] = None,
                  step_cost_s: Optional[Callable[[str, int], float]] = None,
                  request_cost_s: Optional[
                      Callable[[Request, str, int], float]] = None,
@@ -151,6 +170,14 @@ class InferenceEngine:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.policy = get_policy(policy)
+        if prefill_chunk is None:
+            # roofline-autotuned per model: the chunk where a prefill
+            # dispatch's compute time balances its weight-streaming time
+            # (kernels/autotune.py ``engine_prefill_chunk``), cached under
+            # a versioned key like every other autotune entry
+            from repro.kernels import autotune
+            prefill_chunk = autotune.engine_prefill_chunk(model.cfg,
+                                                          max_seq=max_seq)
         self.prefill_chunk = prefill_chunk
         self._step_cost = step_cost_s
         self._req_cost = request_cost_s
@@ -258,14 +285,15 @@ class InferenceEngine:
                     lambda p, c, t, ln, act: model.decode_step(p, c, t, ln,
                                                                act)),
                 "prefill": jax.jit(
-                    lambda p, c, t, st, act: model.prefill_chunk(p, c, t, st,
-                                                                 act)),
+                    lambda p, c, t, st, act, val: model.prefill_chunk(
+                        p, c, t, st, act, val)),
                 "decode_paged": jax.jit(
                     lambda p, c, t, ln, bt, act: model.decode_step_paged(
                         p, c, t, ln, bt, act)),
                 "prefill_paged": jax.jit(
-                    lambda p, c, t, st, bt, act: model.prefill_chunk_paged(
-                        p, c, t, st, bt, act)),
+                    lambda p, c, t, st, bt, act, val:
+                        model.prefill_chunk_paged(p, c, t, st, bt, act,
+                                                  val)),
                 "set_slice": jax.jit(model.set_cache_slice,
                                      static_argnums=(1,)),
                 # CoW fork: page ids stay traced — ONE executable serves
@@ -562,6 +590,16 @@ class InferenceEngine:
         if self.prefix is None or tokens is None:
             return 0
         matched = self.prefix.peek([int(t) for t in tokens])
+        return self._floor_to_chunk(matched)
+
+    def _floor_to_chunk(self, matched: int) -> int:
+        """Floor a prefix-cache hit to the prefill-chunk grid: a resumed
+        prefill must re-dispatch on exactly the chunk boundaries a cold
+        prefill would use, or the stream is no longer bit-identical. The
+        ONE flooring rule shared by :meth:`prefix_peek` (router probes)
+        and :meth:`_prefix_lookup` (real admissions) — they must never
+        disagree, or the router would pick a replica whose admission then
+        computes a different hit."""
         return (matched // self.prefill_chunk) * self.prefill_chunk
 
     def _prefix_lookup(self, eff: np.ndarray) -> tuple[int, list[int]]:
@@ -572,7 +610,7 @@ class InferenceEngine:
         if self.prefix is None:
             return 0, []
         matched, pages = self.prefix.lookup([int(t) for t in eff])
-        hit = (matched // self.prefill_chunk) * self.prefill_chunk
+        hit = self._floor_to_chunk(matched)
         if hit <= 0:
             return 0, []
         return hit, pages[:self.allocator.pages_needed(hit)]
@@ -609,11 +647,12 @@ class InferenceEngine:
                 _, self.cache = self._jit_prefill_paged(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(self.lengths),
-                    jnp.asarray(self.allocator.tables), jnp.asarray(mask))
+                    jnp.asarray(self.allocator.tables), jnp.asarray(mask),
+                    None)
             else:
                 _, self.cache = self._jit_prefill(
                     self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(self.lengths), jnp.asarray(mask))
+                    jnp.asarray(self.lengths), jnp.asarray(mask), None)
             new_lengths = self.lengths.copy()
             new_lengths[slot] += c
             self.lengths = new_lengths
@@ -629,6 +668,106 @@ class InferenceEngine:
             self._emit_span("prefill", req, c, t0, self.now())
         self._partial[slot] = upto
         return upto >= len(prompt)
+
+    def _prefill_budget_plan(self, prefilling: list[int],
+                             budget: int) -> list[tuple[int, int]]:
+        """Split a prefill token budget across the mid-prefill slots.
+
+        Even split first (every slot gets ``max(budget // n, 1)`` tokens,
+        capped by its remaining prompt and by ``prefill_chunk`` so resumed
+        streams stay on the chunk grid), then a second pass spends any
+        leftover on the already-planned slots. Returns ``[(slot, c)]`` with
+        every ``c > 0``."""
+        plan: list[tuple[int, int]] = []
+        if budget <= 0 or not prefilling:
+            return plan
+        base = max(budget // len(prefilling), 1)
+        rem = budget
+        for slot in prefilling:
+            if rem <= 0:
+                break
+            left = len(self._eff[slot]) - self._partial.get(slot, 0)
+            c = min(rem, base, left, self.prefill_chunk)
+            if c > 0:
+                plan.append((slot, c))
+                rem -= c
+        if rem > 0:
+            for k, (slot, c) in enumerate(plan):
+                if rem <= 0:
+                    break
+                left = (len(self._eff[slot]) - self._partial.get(slot, 0)
+                        - c)
+                extra = min(rem, left, self.prefill_chunk - c)
+                if extra > 0:
+                    plan[k] = (slot, c + extra)
+                    rem -= extra
+        return plan
+
+    def _prefill_batch(self, prefilling: list[int], budget: int) -> bool:
+        """Budgeted prefill phase: advance EVERY mid-prefill slot under a
+        shared token budget, in ONE ``prefill_chunk`` dispatch when the
+        model allows it (``multi_slot_batchable``). Rows with shorter
+        pieces than the dispatch width are tail-padded and length-masked
+        via the per-row ``valid`` count, so each row's cache writes are
+        bit-identical to a solo prefill of the same piece.
+
+        Cost stays per-row serialized (shared hardware serializes service
+        demand), but ``prefill_dispatches`` counts actual dispatches — the
+        tentpole win this stat is meant to show. Returns True when any
+        prefill work was dispatched."""
+        plan = self._prefill_budget_plan(prefilling, budget)
+        if not plan:
+            return False
+        if len(plan) == 1 or not self.model.multi_slot_batchable():
+            # MoE routing couples rows through batch-level capacity: fall
+            # back to per-slot dispatches (same budget, same token grid)
+            for slot, c in plan:
+                self._prefill_slot(slot, self.active[slot], c)
+            return True
+        width = max(c for _, c in plan)
+        tokens = np.zeros((self.max_slots, width), np.int32)
+        mask = np.zeros((self.max_slots,), bool)
+        valid = np.zeros((self.max_slots,), np.int32)
+        for slot, c in plan:
+            done_tok = self._partial.get(slot, 0)
+            piece = self._eff[slot][done_tok:done_tok + c]
+            tokens[slot, :c] = np.asarray(piece, np.int32)
+            mask[slot] = True
+            valid[slot] = c
+            if self.paged:
+                self.allocator.touch(slot)
+                self._cow_guard(slot, int(self.lengths[slot]), c)
+        # uniform widths skip the valid mask entirely — same jit trace as
+        # the legacy single-slot path, one executable per (width, paged)
+        val = (None if all(c == width for _, c in plan)
+               else jnp.asarray(valid))
+        if self.paged:
+            _, self.cache = self._jit_prefill_paged(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths),
+                jnp.asarray(self.allocator.tables), jnp.asarray(mask), val)
+        else:
+            _, self.cache = self._jit_prefill(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths), jnp.asarray(mask), val)
+        self.stats.prefill_dispatches += 1
+        new_lengths = self.lengths.copy()
+        for slot, c in plan:
+            new_lengths[slot] += c
+            self._partial[slot] = self._partial.get(slot, 0) + c
+            self.stats.prefill_tokens += c
+        self.lengths = new_lengths
+        for slot, c in plan:
+            req = self.active[slot]
+            t0 = self.now()
+            self._advance("prefill", c, req)
+            req.t_prefill.append(self.now())
+            self._emit_span("prefill", req, c, t0, self.now())
+            if (self._partial[slot] < len(self._eff[slot])
+                    and self._recorder is not None):
+                self._recorder.instant("preempt", req.app, req.request_id,
+                                       self.now())
+        return True
 
     # ------------------------------------------------------------- steps
     def step(self) -> list[tuple[int, int]]:
@@ -707,25 +846,63 @@ class InferenceEngine:
                         "prefix_hit", req.app, req.request_id, t0,
                         tokens=hit, meta={"pages": len(hit_pages)})
 
-        # 2) prefill work
+        # 2) prefill work — legacy one-slot-per-step, or budgeted multi-slot
+        #    when the policy's step_budget() hook splits the step's tokens
         prefilling = [i for i, r in enumerate(self.active)
                       if r is not None and
                       self._partial.get(i, 0) < len(self._eff[i])]
-        if prefilling:
-            slot = prefilling[0]
-            chunk = self.policy.prefill_chunk_tokens(self.prefill_chunk)
-            done = self._prefill_slot(slot, self.active[slot], chunk)
-            if not done and chunk is not None and self._recorder is not None:
-                # chunk-boundary preemption: the prompt yields the engine
-                # mid-prefill (the simulator's chunk-remainder requeue)
-                req = self.active[slot]
-                self._recorder.instant("preempt", req.app, req.request_id,
-                                       self.now())
-            if self.policy.exclusive_prefill:
-                return emitted  # greedy: prefill consumed the whole step
+        ready0 = [i for i, r in enumerate(self.active)
+                  if r is not None and
+                  self._partial.get(i, 0) >= len(self._eff[i])]
+        t_phase0 = self.now()
+        budget = self.policy.step_budget(self.prefill_chunk,
+                                         len(prefilling), len(ready0))
+        did_prefill = False
+        skip_decode = False
+        if budget is None:
+            if prefilling:
+                slot = prefilling[0]
+                chunk = self.policy.prefill_chunk_tokens(self.prefill_chunk)
+                done = self._prefill_slot(slot, self.active[slot], chunk)
+                did_prefill = True
+                if (not done and chunk is not None
+                        and self._recorder is not None):
+                    # chunk-boundary preemption: the prompt yields the
+                    # engine mid-prefill (the simulator's chunk-remainder
+                    # requeue)
+                    req = self.active[slot]
+                    self._recorder.instant("preempt", req.app,
+                                           req.request_id, self.now())
+                if self.policy.exclusive_prefill:
+                    skip_decode = True  # greedy: prefill ate the whole step
+        else:
+            self.stats.budget_enabled = True
+            pf_budget, _ = budget
+            if prefilling and pf_budget > 0:
+                did_prefill = self._prefill_batch(prefilling, pf_budget)
 
-        # 3) decode step for all fully-prefilled slots — one full-batch
-        #    dispatch; the active mask isolates mid-prefill/idle rows
+        # 3) decode step for all fully-prefilled slots
+        decoded_n = 0
+        if not skip_decode:
+            emitted, decoded_n = self._decode_phase()
+
+        # stall accounting: a step during which some row sat decode-ready
+        # (before prefill ran) but no decode token landed is a decode
+        # stall — the head-of-line-blocking the budget hook exists to kill
+        dt = self.now() - t_phase0
+        if ready0:
+            self.stats.decode_ready_time_s += dt
+            if decoded_n == 0:
+                self.stats.decode_stall_time_s += dt
+        if self.stats.budget_enabled and did_prefill and decoded_n > 0:
+            self.stats.mixed_steps += 1
+        return emitted
+
+    def _decode_phase(self) -> tuple[list[tuple[int, int]], int]:
+        """One batched decode dispatch over every fully-prefilled slot —
+        the active mask isolates mid-prefill/idle rows. Returns the
+        ``(request_id, token)`` pairs emitted and how many rows decoded."""
+        emitted: list[tuple[int, int]] = []
         decoding = [i for i, r in enumerate(self.active)
                     if r is not None and
                     self._partial.get(i, 0) >= len(self._eff[i])]
@@ -822,7 +999,7 @@ class InferenceEngine:
                     self._partial.pop(i, None)
                     self._eff.pop(i, None)
             self.stats.decode_tokens += len(decoding)
-        return emitted
+        return emitted, len(decoding)
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
         for _ in range(max_steps):

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_prefill_attention import paged_prefill_attention
+from repro.kernels.prefill_attention import prefill_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_chunk_scan
 
@@ -212,6 +214,141 @@ def test_autotuned_blocks_match_oracle(rng_key, tmp_path, monkeypatch):
         assert (tmp_path / "autotune.json").exists()  # persisted
     finally:
         autotune.reset()
+
+
+@pytest.mark.parametrize("b,h,kv,c,s,d", [
+    (1, 4, 4, 8, 128, 64),     # MHA
+    (2, 8, 4, 4, 256, 64),     # GQA 2:1
+    (1, 8, 2, 16, 128, 32),    # GQA 4:1
+    (2, 4, 1, 8, 128, 32),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_attention(b, h, kv, c, s, d, dtype, rng_key):
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, c, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+    start = jax.random.randint(ks[3], (b,), 0, s - c + 1).astype(jnp.int32)
+    out = prefill_attention(q, k, v, start, s_block=64, interpret=True)
+    want = ref.prefill_attention_ref(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_prefill_attention_respects_horizon(rng_key):
+    """Cache positions beyond each row's causal horizon must not affect
+    the chunk's output (that is what makes pad-to-widest multi-slot
+    batching sound)."""
+    b, h, kv, c, s, d = 2, 4, 2, 8, 128, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, c, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    start = jnp.array([16, 40], jnp.int32)
+    out1 = prefill_attention(q, k, v, start, s_block=32, interpret=True)
+    # poison everything past the last chunk token's horizon, per row
+    horizon = np.asarray(start) + c
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for i in range(b):
+        k2[i, :, horizon[i]:] = 999.0
+        v2[i, :, horizon[i]:] = -999.0
+    out2 = prefill_attention(q, jnp.asarray(k2), jnp.asarray(v2), start,
+                             s_block=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_prefill_attention_non_divisible_seq(rng_key):
+    """S not divisible by s_block: pad+mask fallback instead of assert."""
+    b, h, kv, c, s, d = 2, 8, 4, 4, 130, 64
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, c, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    start = jax.random.randint(ks[3], (b,), 0, s - c + 1).astype(jnp.int32)
+    out = prefill_attention(q, k, v, start, s_block=64, interpret=True)
+    want = ref.prefill_attention_ref(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_attention_fused_rope(rng_key):
+    """Fused-RoPE prefill == rope(q at start+j) then plain attention, for
+    kernel (interpret), jnp lowering, and ref oracle alike."""
+    from repro.models.attention import prefill_chunk_attention_jnp
+    b, h, kv, c, s, d = 2, 8, 4, 8, 128, 64
+    theta = 10_000.0
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, c, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    start = jax.random.randint(ks[3], (b,), 0, s - c + 1).astype(jnp.int32)
+    positions = start[:, None] + jnp.arange(c)                  # (B, C)
+    q_rot = ref.rope_ref(q, positions[:, None, :], theta).astype(q.dtype)
+    want = ref.prefill_attention_ref(q_rot, k, v, start)
+    got_kernel = prefill_attention(q, k, v, start, s_block=64,
+                                   rope_theta=theta, interpret=True)
+    got_ref = ref.prefill_attention_ref(q, k, v, start, rope_theta=theta)
+    np.testing.assert_allclose(np.asarray(got_kernel), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # model-facing jnp lowering: (B,C,H,d) against (B,S,KV,d) caches
+    got_jnp = prefill_chunk_attention_jnp(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), positions,
+        rope_theta=theta).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got_jnp), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,c,d,page,nb,pool", [
+    (2, 8, 4, 4, 64, 16, 8, 24),
+    (1, 4, 1, 8, 32, 8, 16, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_attention(b, h, kv, c, d, page, nb, pool, dtype,
+                                 rng_key):
+    ks = jax.random.split(rng_key, 5)
+    q = jax.random.normal(ks[0], (b, h, c, d), dtype)
+    k_pages = jax.random.normal(ks[1], (pool, page, kv, d), dtype)
+    v_pages = jax.random.normal(ks[2], (pool, page, kv, d), dtype)
+    tables = jax.random.randint(ks[3], (b, nb), 0, pool).astype(jnp.int32)
+    s = nb * page
+    start = jax.random.randint(ks[4], (b,), 0, s - c + 1).astype(jnp.int32)
+    out = paged_prefill_attention(q, k_pages, v_pages, tables, start,
+                                  interpret=True)
+    want = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                           start)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_paged_prefill_attention_fused_rope(rng_key):
+    """Fused-RoPE paged prefill: kernel == paged oracle == dense oracle on
+    the gathered view."""
+    b, h, kv, c, d, page, nb, pool = 2, 8, 4, 8, 64, 16, 8, 24
+    theta = 10_000.0
+    ks = jax.random.split(rng_key, 5)
+    q = jax.random.normal(ks[0], (b, h, c, d))
+    k_pages = jax.random.normal(ks[1], (pool, page, kv, d))
+    v_pages = jax.random.normal(ks[2], (pool, page, kv, d))
+    tables = jax.random.randint(ks[3], (b, nb), 0, pool).astype(jnp.int32)
+    s = nb * page
+    start = jax.random.randint(ks[4], (b,), 0, s - c + 1).astype(jnp.int32)
+    got = paged_prefill_attention(q, k_pages, v_pages, tables, start,
+                                  rope_theta=theta, interpret=True)
+    want = ref.paged_prefill_attention_ref(q, k_pages, v_pages, tables,
+                                           start, rope_theta=theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # dense-oracle cross-check on the gathered view
+    kd = (k_pages[tables].reshape(b, s, kv, d).transpose(0, 2, 1, 3))
+    vd = (v_pages[tables].reshape(b, s, kv, d).transpose(0, 2, 1, 3))
+    dense = ref.prefill_attention_ref(q, kd, vd, start, rope_theta=theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_ops_interpret_backend_end_to_end(rng_key):

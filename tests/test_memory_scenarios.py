@@ -18,8 +18,8 @@ def _mem_scenario(budget, *, policy="slo_aware", substrate="simulator"):
               ScenarioApp("deep_research", num_requests=1)])
 
 
-def test_schema_version_is_1_6():
-    assert SCHEMA_VERSION == "1.6"
+def test_schema_version_is_1_7():
+    assert SCHEMA_VERSION == "1.7"
 
 
 def test_memory_block_only_with_budget():

@@ -330,3 +330,45 @@ def test_sweep_repeats_byte_identically():
     assert first == again
     # and the original spec is untouched
     assert sc.replicas == 1 and sc.name == "rt-prefix_aware-simulator"
+
+
+# ---------------------------------------------- mixed-batching determinism
+def _mixed_conv_scenario(replicas, *, substrate="simulator", seed=7):
+    from repro.bench.policy import MixedBatchPolicy
+    return Scenario(
+        name=f"rt-mixed-{substrate}", mode="concurrent",
+        policy=MixedBatchPolicy(prefill_share=0.5), total_chips=16,
+        substrate=substrate, seed=seed, prefix_cache=True, page_size=16,
+        replicas=replicas, routing="prefix_aware",
+        apps=[ScenarioApp("conversation", name="chat", num_requests=4,
+                          conversation=ConversationSpec(
+                              turns=3, system_tokens=128, user_tokens=32,
+                              assistant_tokens=32, think_time_s=1.0))])
+
+
+@pytest.mark.parametrize("replicas", [1, 4])
+def test_mixed_policy_deterministic_across_replicas(replicas):
+    """The step-budget hook must not break run-to-run determinism: the
+    SAME (scenario, seed) serializes byte-identically on both substrates
+    and at every replica count, with the schema-1.7 batching block live."""
+    for substrate in ("simulator", "engine"):
+        docs = []
+        for _ in range(2):
+            doc = _mixed_conv_scenario(replicas,
+                                       substrate=substrate).run().to_json()
+            blk = doc["results"]["concurrent"]["batching"]
+            # think-time-gapped conversations may never overlap prefill
+            # with a ready decode, so mixed_steps can legitimately be 0
+            # here; the overlap pin lives in test_mixed_batching.py
+            assert blk["enabled"], substrate
+            docs.append(json.dumps(doc, sort_keys=True))
+        assert docs[0] == docs[1], (substrate, replicas)
+
+
+def test_mixed_policy_routing_block_matches_chunked():
+    """Swapping chunked -> mixed changes step batching, not routing: the
+    routing decisions (and so the whole routing block) are identical."""
+    chunked = _conv_scenario("prefix_aware").run().to_json()
+    mixed = _mixed_conv_scenario(4).run().to_json()
+    assert mixed["results"]["concurrent"]["routing"] == \
+        chunked["results"]["concurrent"]["routing"]
