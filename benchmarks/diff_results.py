@@ -3,15 +3,17 @@
 Accepts either document family this repo emits:
 
 * **Scenario documents** — ``ScenarioResult.to_json()`` (``schema_version``
-  1.0–1.7): per-app SLO attainment, latency percentiles (p50/p99/mean,
+  1.0–1.8): per-app SLO attainment, latency percentiles (p50/p99/mean,
   plus the 1.7 ttft/tpot/itl token-latency percentiles),
   makespan/utilization, workflow ``e2e_s``, the 1.2 ``memory`` block, the
   1.3 ``telemetry`` scalars (mean SMACT/SMOCC/bandwidth/power, KV peak),
   the 1.6 ``routing`` scalars (routed/affinity_hits/imbalance, when a
-  router is enabled), and the 1.7 ``batching`` scalars (mixed_steps and
+  router is enabled), the 1.7 ``batching`` scalars (mixed_steps and
   decode_stall_fraction, when a step-budget policy ran — stall fraction
-  diffs lower-is-better). A file may also hold a JSON list of such
-  documents (e.g. one per policy).
+  diffs lower-is-better), and the 1.8 ``attribution`` scalars
+  (goodput_rps higher-is-better; the stall/fault blame shares regress
+  when they RISE, like every lower-is-better metric). A file may also
+  hold a JSON list of such documents (e.g. one per policy).
 * **BENCH documents** — ``benchmarks/run.py --json`` (``version`` 1):
   ``us_per_call`` per suite/row, which covers both timings and dispatch
   counters (``engine_dispatch_*`` rows).
@@ -38,7 +40,7 @@ import sys
 #: notably decode_stall_fraction, which regresses when it RISES)
 HIGHER_IS_BETTER = ("slo_attainment", "utilization", "attainment",
                     "smact_mean", "smocc_mean", "affinity_hits",
-                    "mixed_steps")
+                    "mixed_steps", "goodput_rps", "slo_ok")
 #: ignore absolute deltas below this (in metric units) — keeps near-zero
 #: virtual-clock metrics from tripping the relative threshold
 DEFAULT_MIN_ABS = 1e-9
@@ -87,6 +89,16 @@ def _scenario_metrics(doc: dict) -> dict[str, float]:
                     "power_w_mean", "kv_pages_peak"):
             if key in tel:
                 out[f"{base}/{label}/telemetry/{key}"] = float(tel[key])
+        at = summary.get("attribution", {})        # schema 1.8 attribution
+        if at.get("enabled"):
+            out[f"{base}/{label}/attribution/goodput_rps"] = \
+                float(at.get("goodput_rps", 0.0))
+            out[f"{base}/{label}/attribution/slo_ok"] = \
+                float(at.get("slo_ok", 0))
+            for app, tbl in at.get("per_app", {}).items():
+                for b in ("queue", "stall", "fault"):
+                    out[f"{base}/{label}/attribution/{app}/{b}_share"] = \
+                        float(tbl.get("shares", {}).get(b, 0.0))
         for app, stats in summary["apps"].items():
             for key in ("slo_attainment", "mean", "p50", "p99",
                         "ttft_p99", "tpot_p99", "itl_p99"):

@@ -4,17 +4,22 @@ dashboard (``diff_results.py`` is the regression-diff half).
 
 Input: any mix of files, each holding one document or a JSON array of
 documents (e.g. a ``Scenario.sweep()`` saved as a list). Works on schema
-1.0–1.7; the 1.2 ``memory`` block (page utilization, evictions, recompute),
+1.0–1.8; the 1.2 ``memory`` block (page utilization, evictions, recompute),
 the 1.3 ``telemetry`` block (utilization/bandwidth timelines, Gantt
 spans), the 1.4 ``prefix`` block (radix-cache hit rate, shared pages,
 CoW forks), the 1.6 ``routing`` block (per-replica load, imbalance,
-affinity hits) and the 1.7 ``batching`` block (mixed steps, decode-stall
-fraction, plus per-app TPOT p99) are surfaced when present — a telemetry-enabled document
+affinity hits), the 1.7 ``batching`` block (mixed steps, decode-stall
+fraction, plus per-app TPOT p99) and the 1.8 ``attribution`` block
+(goodput under SLO, per-app critical-path blame shares) are surfaced when
+present — a telemetry-enabled document
 renders a per-app Gantt chart plus SMACT/SMOCC and bandwidth timelines,
 prefix-enabled documents add a hit-rate-vs-shared-fraction curve (shared
-fraction read off each document's conversation spec), and router-enabled
+fraction read off each document's conversation spec), router-enabled
 documents add per-replica routed-token bars plus, across documents that
-sweep ``replicas``, an attainment-vs-replicas curve.
+sweep ``replicas``, an attainment-vs-replicas curve, and
+attribution-enabled documents add a stacked per-app blame-table bar chart
+(where each app's latency went: queue/sched/prefill/decode/recompute/
+stall/fault).
 
     python benchmarks/plot_results.py results/*.json            # markdown
     python benchmarks/plot_results.py sweep.json --png out.png  # + charts
@@ -86,7 +91,10 @@ def flatten(doc: dict) -> list[dict]:
         routed = rt if rt.get("enabled") else {}
         bt = summary.get("batching", {})
         batched = bt if bt.get("enabled") else {}
+        at = summary.get("attribution", {})
+        attrib = at if at.get("enabled") else {}
         for app, stats in summary["apps"].items():
+            shares = attrib.get("per_app", {}).get(app, {}).get("shares", {})
             rows.append({
                 "scenario": name, "substrate": substrate, "label": label,
                 "app": app, "rate_per_s": rate,
@@ -109,6 +117,10 @@ def flatten(doc: dict) -> list[dict]:
                 "affinity_hits": routed.get("affinity_hits"),
                 "mixed_steps": batched.get("mixed_steps"),
                 "stall_fraction": batched.get("decode_stall_fraction"),
+                "goodput_rps": attrib.get("goodput_rps"),
+                "queue_share": shares.get("queue"),
+                "stall_share": shares.get("stall"),
+                "fault_share": shares.get("fault"),
             })
     return rows
 
@@ -134,6 +146,25 @@ def routing_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
                   if isinstance(summary, dict) else None)
             if rt and rt.get("enabled"):
                 out.append((name, label, rt))
+    return out
+
+
+#: schema-1.8 critical-path buckets, canonical order (matches
+#: repro.telemetry.requests.BUCKETS; kept literal — this tool is stdlib-only)
+BLAME_BUCKETS = ("queue", "sched", "prefill", "decode", "recompute",
+                 "stall", "fault")
+
+
+def attribution_blocks(docs: list[dict]) -> list[tuple[str, str, dict]]:
+    """Every (scenario, label, attribution block) with a live pipeline."""
+    out = []
+    for doc in docs:
+        name = doc.get("scenario", {}).get("name", "scenario")
+        for label, summary in doc.get("results", {}).items():
+            at = (summary.get("attribution")
+                  if isinstance(summary, dict) else None)
+            if at and at.get("enabled") and at.get("per_app"):
+                out.append((name, label, at))
     return out
 
 
@@ -203,7 +234,8 @@ def to_markdown(rows: list[dict]) -> str:
             "smact_mean", "smocc_mean", "bandwidth_gbs_mean",
             "prefix_hit_rate", "shared_pages", "cow_forks",
             "routing_policy", "replicas", "imbalance", "affinity_hits",
-            "mixed_steps", "stall_fraction"]
+            "mixed_steps", "stall_fraction",
+            "goodput_rps", "queue_share", "stall_share", "fault_share"]
     # drop all-empty optional columns (memory block absent on <1.2 docs)
     cols = [c for c in cols
             if c in ("scenario", "substrate", "app")
@@ -246,9 +278,13 @@ def render_png(rows: list[dict], path: str,
     # the scaling curve needs at least two distinct replica counts
     if len({p[0] for p in rep_pts}) < 2:
         rep_pts = []
+    at_blocks = attribution_blocks(docs or [])
+    if len(at_blocks) > 1:
+        print(f"# rendering first of {len(at_blocks)} attribution blocks "
+              f"({at_blocks[0][0]}/{at_blocks[0][1]})", file=sys.stderr)
     panels = ((1 if sweep else 0) + (2 if mem else 0) + (3 if tel else 0)
               + (1 if pfx_pts else 0) + (1 if rt_blocks else 0)
-              + (1 if rep_pts else 0))
+              + (1 if rep_pts else 0) + (1 if at_blocks else 0))
     if not panels:
         print("# nothing to plot: no sweep points, memory blocks or "
               "telemetry blocks", file=sys.stderr)
@@ -390,6 +426,32 @@ def render_png(rows: list[dict], path: str,
                       fontsize=9)
         ax.set_title("attainment vs replicas", color=TEXT_PRIMARY,
                      fontsize=10)
+
+    if at_blocks:
+        # blame-table bars: one stacked bar per app, segments ordered by
+        # the canonical bucket order; zero-share buckets vanish naturally
+        ax = axes.pop(0)
+        name, label, blk = at_blocks[0]
+        apps = list(blk["per_app"])
+        bottoms = [0.0] * len(apps)
+        for slot, bucket in enumerate(BLAME_BUCKETS):
+            vals = [blk["per_app"][a].get("shares", {}).get(bucket, 0.0)
+                    for a in apps]
+            if not any(vals):
+                continue
+            ax.bar(range(len(apps)), vals, bottom=bottoms,
+                   color=SERIES[slot % MAX_SERIES], width=0.62,
+                   label=bucket)
+            bottoms = [b + v for b, v in zip(bottoms, vals)]
+        ax.set_xticks(range(len(apps)))
+        ax.set_xticklabels(apps, fontsize=8, color=TEXT_SECONDARY)
+        ax.set_ylim(0, 1.05)
+        ax.set_ylabel("share of e2e latency", color=TEXT_SECONDARY,
+                      fontsize=9)
+        ax.legend(fontsize=8, frameon=False, labelcolor=TEXT_PRIMARY)
+        ax.set_title(f"critical-path blame — {name}/{label} "
+                     f"(goodput {_fmt(blk.get('goodput_rps'))}/s)",
+                     color=TEXT_PRIMARY, fontsize=10)
 
     if mem:
         labels = [f"{s}\n{l}" if l != "concurrent" else s

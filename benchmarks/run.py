@@ -104,15 +104,17 @@ def main(argv=None) -> None:
 
     from benchmarks import (appendix_platforms, engine_bench, fig3_exclusive,
                             fig4_utilization, fig5_concurrent, fig6_sharing,
-                            fig7_workflow, fig_memory, fig_prefix,
-                            fig_resilience, fig_routing, fig_stallfree,
-                            kernel_bench, roofline_table, telemetry_bench)
+                            fig7_workflow, fig_attribution, fig_memory,
+                            fig_prefix, fig_resilience, fig_routing,
+                            fig_stallfree, kernel_bench, roofline_table,
+                            telemetry_bench)
     suites = [
         ("fig3_exclusive", fig3_exclusive.run),
         ("fig4_utilization", fig4_utilization.run),
         ("fig5_concurrent", fig5_concurrent.run),
         ("fig6_sharing", fig6_sharing.run),
         ("fig7_workflow", fig7_workflow.run),
+        ("fig_attribution", fig_attribution.run),
         ("fig_memory", fig_memory.run),
         ("fig_prefix", fig_prefix.run),
         ("fig_resilience", fig_resilience.run),

@@ -396,7 +396,9 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
            router: Optional[Router] = None,
            run_idx_of: Optional[dict] = None,
            group_runs: Optional[dict] = None,
-           chip=None) -> tuple[dict, list[UtilSample]]:
+           chip=None,
+           finish_meta: Optional[Callable] = None
+           ) -> tuple[dict, list[UtilSample]]:
     """Event loop over one or more engines (one per chip partition — or one
     per replica under the router tier) sharing a single virtual timeline.
     Always steps the laggard engine among those with runnable work so
@@ -417,6 +419,11 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
 
     def _release(p: _Pending, arr: float) -> bool:
         """Shed gate + submit; shared by both release paths."""
+        if recorder is not None:
+            # lifecycle anchor (BEFORE the shed gate, so shed terminals
+            # close a zero-length lifecycle): one "arrive" per issue
+            recorder.instant("arrive", p.request.app, p.request.request_id,
+                             arr)
         if faults is not None and not faults.on_release(p, completed):
             return False   # shed: dropped without ever being submitted
         if not p.background:
@@ -443,6 +450,11 @@ def _drive(runs: list[_EngineRun], pending: list[_Pending],
                     router.note_done(r.route_label, r.route_tokens, r.t_done)
                 if faults is not None:
                     faults.note_done(r)
+                if recorder is not None and finish_meta is not None:
+                    # terminal event carries the request's own metrics so
+                    # streaming consumers reproduce the post-hoc report
+                    recorder.instant("finish", r.app, r.request_id,
+                                     r.t_done, meta=finish_meta(r))
         if len(completed) >= n_total:
             return completed, util
         still, ready = [], []
@@ -753,9 +765,15 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
     # virtual clocks are windows onto the same scenario timeline (exactly
     # how the UtilSamples merge), so events interleave by timestamp
     recorder = None
+    pipeline = None
     if getattr(sc, "telemetry", False):
         from repro.telemetry import TraceRecorder
-        recorder = TraceRecorder()
+        recorder = TraceRecorder(ring=getattr(sc, "trace_ring", None))
+        pipeline = sc.streaming_pipeline()
+        if pipeline is not None:
+            # subscribe BEFORE any emission so the online pipeline sees
+            # the full stream (fault windows included) in causal order
+            recorder.subscribe(pipeline)
     if fsched is not None and recorder is not None:
         fsched.emit(recorder)
 
@@ -809,9 +827,29 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
         faults = _FaultController(fsched, shed_cfg, policy,
                                   {t.name: t for t in traces}, recorder)
         faults.build_actions([base_of[p] for p in parts])
+    if pipeline is not None and faults is not None \
+            and faults.tracker is not None:
+        # one rolling-SLO truth: the pipeline's burn-rate monitor reads
+        # the SAME window the shed_on_slo controller consults
+        pipeline.bind_tracker(faults.tracker)
+    finish_meta = None
+    if recorder is not None:
+        traces_by_name = {t.name: t for t in traces}
+
+        def finish_meta(r):
+            """The finish instant's meta: the SAME record the post-hoc
+            report scores, so streaming reproduces it exactly."""
+            tr = traces_by_name[r.app]
+            first = (faults.first_issue.get((r.app, r.trace_idx))
+                     if faults is not None else None)
+            rec = _record_for(r, tr, first)
+            return {"ok": rec.meets_slo(tr.slo), "ttft_s": rec.ttft_s,
+                    "tpot_s": rec.tpot_s, "e2e_s": rec.e2e_s,
+                    "itl": list(rec.itl_samples_s or ())}
     completed, util = _drive(runs, pending, total_chips, recorder, faults,
                              router=router, run_idx_of=run_idx_of,
-                             group_runs=group_runs, chip=chip)
+                             group_runs=group_runs, chip=chip,
+                             finish_meta=finish_meta)
     recs = _records(runs, {t.name: t for t in traces},
                     first_issue=faults.first_issue if faults else None)
     reports = {t.name: SLOReport(t.name, t.slo, recs[t.name]) for t in traces}
@@ -876,6 +914,8 @@ def _run_traces(sc: Scenario, traces: list[AppTrace],
                     routing=(router.routing_block()
                              if router is not None else None),
                     batching=bat,
+                    attribution=(pipeline.attribution_block()
+                                 if pipeline is not None else None),
                     **mem, **pfx)
     stats = {part: runs[i].engine.stats for part, i in run_idx_of.items()}
     return sim, stats, completed

@@ -73,7 +73,7 @@ from repro.resilience import (FaultSchedule, MemorySpike, ShedConfig,
 from repro.roofline.hw import ChipSpec, get_chip
 from repro.serving.router import available_routing_policies
 
-SCHEMA_VERSION = "1.7"   # 1.1: + top-level "substrate", scenario.substrate
+SCHEMA_VERSION = "1.8"   # 1.1: + top-level "substrate", scenario.substrate
                          # 1.2: + per-sim "memory" block (page utilization,
                          #      evictions, recompute) + memory knobs in the
                          #      embedded scenario spec
@@ -104,6 +104,15 @@ SCHEMA_VERSION = "1.7"   # 1.1: + top-level "substrate", scenario.substrate
                          #      a step-budget policy); + per-app token-
                          #      latency percentiles (ttft_p50/p99,
                          #      tpot_p50/p99, itl_p99) in "apps"
+                         # 1.8: + per-sim ALWAYS-present "attribution" block
+                         #      (per-request critical-path seconds bucketed
+                         #      queue/sched/prefill/decode/recompute/stall/
+                         #      fault, per-app blame shares, goodput-under-
+                         #      SLO — zero-filled when telemetry is off);
+                         #      + always-present host_cpu_pct/host_rss_mb
+                         #      series in the "telemetry" block; + the
+                         #      "trace_ring" scenario key (bounded-memory
+                         #      ring recorder for open-loop runs)
 SETUP_S = 2.0      # model load/launch time per app (engine warmup)
 
 MODES = ("exclusive", "concurrent", "workflow")
@@ -231,8 +240,16 @@ class Scenario:
     prefix_cache: bool = False
     #: attach the versioned ``telemetry`` block (schema 1.3) to every sim
     #: in ``to_json()``: utilization/bandwidth timelines, event counts,
-    #: Gantt spans — schema-identical across substrates (repro.telemetry)
+    #: Gantt spans — schema-identical across substrates (repro.telemetry).
+    #: Telemetry also subscribes a streaming pipeline to the trace bus, so
+    #: every sim fills the schema-1.8 ``attribution`` block online.
     telemetry: bool = False
+    #: ring-buffer recorder bound (schema 1.8): retain only the last N
+    #: trace events / counter points per series, so million-request
+    #: open-loop runs hold O(window) memory. Streaming aggregates
+    #: (event counts, token totals, attribution, makespan) stay EXACT —
+    #: only the raw event list is bounded. None = unbounded (default).
+    trace_ring: Optional[int] = None
     #: fault injection (schema 1.5, repro.resilience): list of fault spec
     #: dicts (``{"kind": "thermal_throttle", ...}``) or FaultSpec objects.
     #: Both substrates resolve the SAME seeded schedule from this list.
@@ -421,6 +438,8 @@ class Scenario:
             d["page_size"] = self.page_size
         if self.telemetry:
             d["telemetry"] = True
+        if self.trace_ring is not None:
+            d["trace_ring"] = self.trace_ring
         if self.prefix_cache:
             d["prefix_cache"] = True
         if self.faults:
@@ -448,6 +467,15 @@ class Scenario:
         return yaml.safe_dump(self.to_dict(), sort_keys=False)
 
     # --------------------------------------------------------------- run
+    def streaming_pipeline(self):
+        """A fresh :class:`~repro.telemetry.streaming.StreamingPipeline`
+        when the scenario enables telemetry (it fills the schema-1.8
+        ``attribution`` block online on BOTH substrates), else None."""
+        if not self.telemetry:
+            return None
+        from repro.telemetry.streaming import StreamingPipeline
+        return StreamingPipeline()
+
     def _simulator(self, total_chips: Optional[int] = None,
                    policy: Union[None, str, SchedulingPolicy] = None
                    ) -> PodSimulator:
@@ -462,7 +490,9 @@ class Scenario:
                             shed=self.shed_config(),
                             replicas=self.replicas,
                             routing=self.routing,
-                            routing_rng=child_rng(self.seed, "routing"))
+                            routing_rng=child_rng(self.seed, "routing"),
+                            pipeline=self.streaming_pipeline(),
+                            trace_ring=self.trace_ring)
 
     def _trace(self, idx: int, sa: ScenarioApp, app: AppDef,
                start_s: float = 0.0) -> AppTrace:
@@ -578,6 +608,12 @@ class Scenario:
             faults=self.fault_schedule(), shed=self.shed_config(),
             replicas=self.replicas, routing=self.routing,
             routing_seed=self.seed)
+        if self.telemetry and sim.trace is not None:
+            # the fixed-point runner re-runs the sim per round, so the
+            # attribution comes from a post-hoc replay of the FINAL
+            # round's trace rather than a live pipeline
+            from repro.telemetry.requests import attribution_from_trace
+            sim.attribution = attribution_from_trace(sim.trace)
         return ScenarioResult(scenario=self, sims={"workflow": sim},
                               node_finish_s=finish, e2e_s=e2e)
 

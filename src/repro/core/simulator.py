@@ -23,7 +23,7 @@ import itertools
 import math
 import warnings
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import TYPE_CHECKING, Optional, Union
 
 from repro.bench.policy import (SchedulingPolicy, get_policy,
                                 resolve_partition)
@@ -34,6 +34,10 @@ from repro.resilience import (FaultSchedule, FaultStats, ShedConfig,
 from repro.roofline.hw import ChipSpec, TPU_V5E
 from repro.serving.router import RouteRequest, Router, empty_routing_block
 from repro.telemetry.recorder import TraceRecorder
+from repro.telemetry.requests import empty_attribution_block
+
+if TYPE_CHECKING:  # pragma: no cover - typing only (avoids an import cycle)
+    from repro.telemetry.streaming import StreamingPipeline
 
 
 @dataclass
@@ -102,6 +106,8 @@ class PodSimulator:
                  replicas: int = 1,
                  routing: Union[str, None] = None,
                  routing_rng=None,
+                 pipeline: Union["StreamingPipeline", None] = None,
+                 trace_ring: Union[int, None] = None,
                  strategy: Union[str, None] = None):
         if strategy is not None:
             warnings.warn("PodSimulator(strategy=...) is deprecated; use "
@@ -127,6 +133,12 @@ class PodSimulator:
         #: bit-identical to the pre-resilience simulator
         self.faults = faults
         self.shed = shed
+        #: streaming observability (repro.telemetry.streaming): an online
+        #: metrics pipeline subscribed to the trace bus, and an optional
+        #: ring bound on retained events — None keeps the unbounded
+        #: append-only recorder bit-identical to the pre-streaming runs
+        self.pipeline = pipeline
+        self.trace_ring = trace_ring
         self._seq = itertools.count()
 
     @property
@@ -141,7 +153,11 @@ class PodSimulator:
         # telemetry: the simulator ALWAYS records its event trace (one
         # span per dispatch — same cost class as the UtilSample it already
         # appends); SimResult.trace feeds repro.telemetry's derived views
-        telem = TraceRecorder()
+        telem = TraceRecorder(ring=self.trace_ring)
+        if self.pipeline is not None:
+            # subscribe BEFORE any emission so the online pipeline sees
+            # the full stream (fault windows included) in causal order
+            telem.subscribe(self.pipeline)
         apps = {t.name: t for t in traces}
         plan = resolve_partition(policy, traces, self.total_chips,
                                  replicas=self.replicas)
@@ -176,6 +192,10 @@ class PodSimulator:
         fstats = FaultStats()
         shed_cfg = self.shed
         tracker = SloTracker(shed_cfg.window) if shed_cfg is not None else None
+        if tracker is not None and self.pipeline is not None:
+            # one rolling-SLO truth: the pipeline's burn-rate monitor reads
+            # the SAME window the shed_on_slo controller consults
+            self.pipeline.bind_tracker(tracker)
         client = fsched.client if fsched is not None else None
         if fsched is not None:
             fsched.bind_partitions(partition_of)
@@ -495,6 +515,11 @@ class PodSimulator:
             if kind == "arrival":
                 req = payload
                 fstats.issued += 1
+                # lifecycle anchor: every issued request opens with an
+                # "arrive" instant (sheds included — their terminal closes
+                # a zero-length lifecycle), so the assembler's completeness
+                # invariant holds: one terminal per arrive
+                telem.instant("arrive", req.app, req.request_id, now)
                 decision = "admit"
                 if (tracker is not None
                         and tracker.should_degrade(req.app, shed_cfg)):
@@ -689,9 +714,18 @@ class PodSimulator:
                                 rec.itl_samples_s = [
                                     b - a for a, b in zip(dts, dts[1:])]
                             records[req.app].append(rec)
+                            ok = rec.meets_slo(apps[req.app].slo)
                             if tracker is not None:
-                                tracker.note(req.app, rec.meets_slo(
-                                    apps[req.app].slo))
+                                tracker.note(req.app, ok)
+                            # terminal event carries the request's own
+                            # metrics so streaming consumers reproduce the
+                            # post-hoc report without a second metrics path
+                            telem.instant(
+                                "finish", req.app, req.request_id, now,
+                                meta={"ok": ok, "ttft_s": rec.ttft_s,
+                                      "tpot_s": rec.tpot_s,
+                                      "e2e_s": rec.e2e_s,
+                                      "itl": list(rec.itl_samples_s or ())})
                             release_next(req.app, now)
             elif kind == "crash":
                 w = payload
@@ -830,7 +864,10 @@ class PodSimulator:
                          prefix_lookups=pf["lookups"],
                          routing=(router.routing_block()
                                   if router is not None else None),
-                         trace=telem)
+                         trace=telem,
+                         attribution=(self.pipeline.attribution_block()
+                                      if self.pipeline is not None
+                                      else None))
 
 
 def empty_batching_block() -> dict:
@@ -874,6 +911,10 @@ class SimResult:
     #: simulator runs; engine runs carry one when telemetry is enabled.
     #: NOT part of summary()/to_json() unless the scenario opts in.
     trace: Union[TraceRecorder, None] = None
+    # ---- critical-path attribution (schema 1.8's ALWAYS-present
+    # "attribution" block; filled by the streaming pipeline when the
+    # scenario enables telemetry, zero-filled otherwise on BOTH substrates)
+    attribution: Union[dict, None] = None
     # ---- resilience (schema 1.5's ALWAYS-present "faults" block; a
     # fault-free run carries the zero-filled counters)
     fault_stats: Union[FaultStats, None] = None
@@ -949,6 +990,16 @@ class SimResult:
         return dict(self.batching) if self.batching \
             else empty_batching_block()
 
+    def attribution_summary(self) -> dict:
+        """Schema 1.8 "attribution" block — ALWAYS present (zero-filled
+        when the run had no streaming pipeline attached, i.e. telemetry
+        off), identical keys on both substrates. Per-request critical-path
+        seconds partitioned into queue / sched / prefill / decode /
+        recompute / stall / fault buckets, folded into a per-app blame
+        table, plus goodput-under-SLO."""
+        return (dict(self.attribution) if self.attribution
+                else empty_attribution_block())
+
     def faults_summary(self) -> dict:
         """Schema 1.5 "faults" block — ALWAYS present (zero-filled when no
         faults were injected), identical keys on both substrates. Goodput
@@ -973,6 +1024,7 @@ class SimResult:
             "faults": self.faults_summary(),
             "routing": self.routing_summary(),
             "batching": self.batching_summary(),
+            "attribution": self.attribution_summary(),
             "apps": {
                 name: {
                     "slo_attainment": rep.attainment,

@@ -86,3 +86,15 @@ class SloTracker:
     def should_degrade(self, app: str, cfg: ShedConfig) -> bool:
         return (self.completed(app) >= cfg.min_completed
                 and self.rolling(app) < cfg.attainment)
+
+    def burn_rate(self, app: str, target: float) -> float:
+        """SRE-style SLO burn rate over the rolling window: observed miss
+        rate over the error budget ``1 - target``. 1.0 = burning exactly
+        the budget; > 1 = on track to violate; 0 = no misses. A target of
+        1.0 has no budget — any miss reports an infinite burn, capped to
+        the window size so the monitor stays finite."""
+        miss = 1.0 - self.rolling(app)
+        budget = 1.0 - target
+        if budget <= 0.0:
+            return 0.0 if miss <= 0.0 else float(self.window)
+        return miss / budget

@@ -120,22 +120,29 @@ class RooflineResult:
 
 
 def achieved_fraction(flops: float, hbm_bytes: float, duration_s: float,
-                      chips: int, chip: ChipSpec = DEFAULT_CHIP) -> float:
+                      chips: int, chip: ChipSpec = DEFAULT_CHIP, *,
+                      ici_bytes: float = 0.0) -> float:
     """Roofline achievement of an executed event: the fraction of the
     BINDING roofline resource actually moved in ``duration_s`` on
-    ``chips`` — max of the compute fraction (FLOPs against peak MXU) and
-    the memory fraction (bytes against HBM bandwidth), clamped to 1.
+    ``chips`` — max of the compute fraction (FLOPs against peak MXU),
+    the memory fraction (bytes against HBM bandwidth) and, when the
+    event moved interconnect traffic, the ICI fraction (bytes against
+    per-chip link bandwidth) — clamped to 1.
 
     This is the per-event SMOCC term the telemetry timelines integrate
     (compute-bound work lands near the MXU efficiency; memory-bound
-    decode saturates the bandwidth roof instead), and is jax-free on
-    purpose: both substrates call it with analytic FLOPs/bytes."""
+    decode saturates the bandwidth roof; a sharded or disaggregated
+    span whose KV/activation transfer dominates saturates the ICI roof
+    instead), and is jax-free on purpose: both substrates call it with
+    analytic FLOPs/bytes."""
     if duration_s <= 0.0 or chips <= 0:
         return 0.0
     comp = flops / (duration_s * chips * chip.peak_flops_bf16)
     memb = (hbm_bytes / (duration_s * chips * chip.hbm_bandwidth)
             if chip.hbm_bandwidth else 0.0)
-    return min(max(comp, memb), 1.0)
+    ici = (ici_bytes / (duration_s * chips * chip.ici_link_bandwidth)
+           if ici_bytes and chip.ici_link_bandwidth else 0.0)
+    return min(max(comp, memb, ici), 1.0)
 
 
 def cost_analysis_terms(compiled) -> tuple[float, float]:

@@ -356,12 +356,17 @@ class InferenceEngine:
         r = self._recorder
         if r is None:
             return
-        fl = by = 0.0
+        fl = by = ici = 0.0
         if self._req_work is not None:
-            fl, by = self._req_work(req, kind, tokens)
+            # the hook returns (flops, hbm_bytes) or, for spans that move
+            # interconnect traffic, (flops, hbm_bytes, ici_bytes)
+            work = self._req_work(req, kind, tokens)
+            fl, by = work[0], work[1]
+            if len(work) > 2:
+                ici = work[2]
         r.span(kind, req.app, req.request_id, t0, t1,
                chips=self._recorder_chips, flops=fl, hbm_bytes=by,
-               tokens=tokens)
+               tokens=tokens, ici_bytes=ici)
 
     def _emit_kv(self) -> None:
         if self._recorder is not None and self.allocator is not None:

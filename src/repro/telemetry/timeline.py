@@ -5,8 +5,9 @@ TPU-honest metric translations:
 
   SMACT ≙ fraction of pod chips RESERVED by dispatched work per bin
   SMOCC ≙ reserved fraction × per-event roofline ACHIEVEMENT — the
-          fraction of the binding roofline resource (compute or HBM
-          bandwidth) each event actually moved, computed from the event's
+          fraction of the binding roofline resource (compute, HBM
+          bandwidth, or ICI for spans carrying interconnect traffic)
+          each event actually moved, computed from the event's
           real FLOPs/bytes via :func:`repro.roofline.analysis.achieved_fraction`
           (this replaces the old hard-coded ``occupancy=0.55``: compute-
           bound items land near the MXU efficiency, memory-bound decode
@@ -93,7 +94,8 @@ class UtilizationTimeline:
                 continue
             frac = e.chips / total_chips if total_chips else 0.0
             ach = achieved_fraction(e.flops, e.hbm_bytes, e.t1 - e.t0,
-                                    max(e.chips, 1), chip)
+                                    max(e.chips, 1), chip,
+                                    ici_bytes=e.ici_bytes)
             b0 = min(max(int(e.t0 / dt), 0), bins - 1)
             b1 = min(max(int(e.t1 / dt), 0), bins - 1)
             for b in range(b0, b1 + 1):

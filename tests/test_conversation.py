@@ -132,7 +132,7 @@ def test_scenario_yaml_round_trip_with_conversation():
     assert rt.prefix_cache is True
     assert rt.apps[0].conversation == sc.apps[0].conversation
     doc = rt.run().to_json()
-    assert doc["schema_version"] == "1.7"
+    assert doc["schema_version"] == "1.8"
     blk = doc["results"]["concurrent"]["prefix"]
     assert blk["enabled"] and blk["hit_rate"] > 0
 

@@ -19,7 +19,7 @@ def _mem_scenario(budget, *, policy="slo_aware", substrate="simulator"):
 
 
 def test_schema_version_is_1_7():
-    assert SCHEMA_VERSION == "1.7"
+    assert SCHEMA_VERSION == "1.8"
 
 
 def test_memory_block_only_with_budget():

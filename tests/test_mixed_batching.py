@@ -262,7 +262,7 @@ def test_batching_block_always_present_and_zero_when_no_steps():
 def test_batching_block_shape_on_both_substrates():
     for substrate in ("simulator", "engine"):
         doc = _bat_scenario("fcfs", substrate, "fcfs").run().to_json()
-        assert doc["schema_version"] == "1.7"
+        assert doc["schema_version"] == "1.8"
         blk = doc["results"]["concurrent"]["batching"]
         assert set(blk) == set(empty_batching_block())
         assert not blk["enabled"]

@@ -201,7 +201,7 @@ def test_fault_free_run_is_a_noop_with_zero_filled_block():
     assert fb["goodput"] == 1.0
     assert fb["issued"] == fb["completed_ok"] == 12
     assert fb["time_to_recover_s"] == 0.0
-    assert doc_a["schema_version"] == "1.7"
+    assert doc_a["schema_version"] == "1.8"
 
 
 STORM = [

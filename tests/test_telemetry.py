@@ -1,7 +1,8 @@
 """repro.telemetry: trace recording on both substrates, timeline binning
 edge cases, KV-occupancy/eviction accounting against EngineStats, Chrome
-trace export, the schema-1.3 telemetry block, per-request workflow release
-on the simulator, and the repro.monitor.metrics deprecation shim."""
+trace export, the schema-1.3 telemetry block, and per-request workflow
+release on the simulator. (Streaming aggregators and the attribution
+assembler are covered in tests/test_streaming.py.)"""
 import dataclasses
 import json
 
@@ -297,28 +298,6 @@ def test_simulator_request_release_parity_with_engine():
     sim = _wf_run("simulator", "request")
     eng = _wf_run("engine", "request")
     assert sim.e2e_s == pytest.approx(eng.e2e_s, rel=0.01)
-
-
-# ------------------------------------------------------ deprecation shim
-def test_monitor_metrics_shim_warns_once_per_process_and_reexports():
-    import importlib
-    import sys
-    import warnings
-    import repro.telemetry as tel
-    # simulate a fresh process: clear the module AND the process-wide flag
-    sys.modules.pop("repro.monitor.metrics", None)
-    tel._monitor_metrics_shim_warned = False
-    with pytest.warns(DeprecationWarning, match="repro.telemetry"):
-        mod = importlib.import_module("repro.monitor.metrics")
-    assert mod.UtilizationTimeline is tel.UtilizationTimeline
-    assert mod.HostMonitor is tel.HostMonitor
-    # any re-import in the SAME process stays silent (the flag survives
-    # sys.modules.pop because it lives on repro.telemetry, not the shim)
-    sys.modules.pop("repro.monitor.metrics", None)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        mod = importlib.import_module("repro.monitor.metrics")
-    assert mod.HostMonitor is tel.HostMonitor
 
 
 def test_from_sim_legacy_path_without_trace():
